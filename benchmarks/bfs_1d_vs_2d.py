@@ -1,0 +1,20 @@
+"""Fig. 7 analog: the paper's ORIGINAL 1D modulo-partition code vs the 2D
+code on the same graphs + devices.  Reports measured TEPS/time and (the
+paper's key claim) the communication-volume ratio."""
+from benchmarks.common import emit, run_worker
+
+SCALE, EF, ROOTS = 14, 16, 3
+
+
+def main():
+    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
+             "mean_s", "levels")]
+    for variant, (r, c) in [("1d", (1, 8)), ("2d", (2, 4)),
+                            ("1d", (1, 4)), ("2d", (2, 2))]:
+        out = run_worker("bfs_worker.py", variant, r, c, SCALE, EF, ROOTS)
+        rows.append(tuple(out.strip().split(",")))
+    emit(rows, "fig7_1d_vs_2d")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Fig. 5/6 analog: compute vs transfer split + four-phase breakdown of one
+representative BFS level (expand exchange, frontier expansion, fold
+exchange, frontier update) on 2x2 and 2x4 grids."""
+from benchmarks.common import emit, run_worker
+
+
+def main():
+    rows = [("scale", "R", "C", "expand_s", "scan_s", "fold_s", "update_s",
+             "compute_s", "transfer_s", "transfer_frac")]
+    for (r, c, scale) in [(2, 2, 14), (2, 4, 15)]:
+        out = run_worker("phases_worker.py", r, c, scale, 16).strip()
+        s, R, C, e, sc, f, u = out.split(",")
+        comp = float(sc) + float(u)
+        tr = float(e) + float(f)
+        rows.append((s, R, C, e, sc, f, u, f"{comp:.5f}", f"{tr:.5f}",
+                     f"{tr / (comp + tr):.3f}"))
+    emit(rows, "fig5_6_breakdown")
+
+
+if __name__ == "__main__":
+    main()

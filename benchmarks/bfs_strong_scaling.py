@@ -1,0 +1,19 @@
+"""Fig. 4 analog: strong scaling on a fixed graph (reduced: scale 15, the
+paper uses 25), devices 1..8."""
+from benchmarks.common import emit, run_worker
+
+GRIDS = [(1, 1), (1, 2), (2, 2), (2, 4)]
+SCALE, EF, ROOTS = 15, 16, 4
+
+
+def main():
+    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
+             "mean_s", "levels")]
+    for r, c in GRIDS:
+        out = run_worker("bfs_worker.py", "2d", r, c, SCALE, EF, ROOTS)
+        rows.append(tuple(out.strip().split(",")))
+    emit(rows, "fig4_strong_scaling")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 3 analog: weak scaling -- scale grows with device count (reduced:
+scale 13 + log2 P at edge factor 16, devices 1..8 forced host devices)."""
+from benchmarks.common import emit, run_worker
+
+GRIDS = [(1, 1), (1, 2), (2, 2), (2, 4)]
+BASE_SCALE = 13
+EF = 16
+ROOTS = 4
+
+
+def main():
+    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
+             "mean_s", "levels")]
+    for i, (r, c) in enumerate(GRIDS):
+        out = run_worker("bfs_worker.py", "2d", r, c, BASE_SCALE + i, EF,
+                         ROOTS)
+        rows.append(tuple(out.strip().split(",")))
+    emit(rows, "fig3_weak_scaling")
+
+
+if __name__ == "__main__":
+    main()

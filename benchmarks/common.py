@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: timing, CSV emission, subprocess workers."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "bench_out")
+
+
+def emit(rows, name):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        for r in rows:
+            line = ",".join(str(x) for x in r)
+            print(line)
+            f.write(line + "\n")
+    return path
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters
+
+
+def run_worker(script_rel: str, *args, timeout=900):
+    """Run benchmarks/workers/<script> in a subprocess (own device count)."""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(here, "..", "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "workers", script_rel),
+         *map(str, args)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"{script_rel} failed:\n{r.stderr[-2000:]}")
+    return r.stdout

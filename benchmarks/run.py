@@ -1,0 +1,46 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+Each prints CSV rows (also written to bench_out/<name>.csv).
+
+  fig3   weak scaling (TEPS vs devices, scale/device fixed)
+  fig4   strong scaling (fixed graph)
+  fig5/6 compute-vs-transfer + four-phase breakdown
+  fig7   1D (original code) vs 2D comparison
+  fig8/t2 atomic-style vs sort/compact expansion
+  table3 real-world graph analogs
+  kernels Pallas-kernel parity + oracle timings
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bfs_weak_scaling, bfs_strong_scaling,
+                            bfs_breakdown, bfs_1d_vs_2d,
+                            bfs_expansion_variants, bfs_realworld,
+                            kernel_bench)
+    suites = [
+        ("fig3_weak_scaling", bfs_weak_scaling.main),
+        ("fig4_strong_scaling", bfs_strong_scaling.main),
+        ("fig5_6_breakdown", bfs_breakdown.main),
+        ("fig7_1d_vs_2d", bfs_1d_vs_2d.main),
+        ("table2_fig8_expansion", bfs_expansion_variants.main),
+        ("table3_realworld", bfs_realworld.main),
+        ("kernel_bench", kernel_bench.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"--- {name} done in {time.time() - t0:.0f}s")
+        except Exception:
+            failures += 1
+            print(f"--- {name} FAILED:\n{traceback.format_exc()[-1500:]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

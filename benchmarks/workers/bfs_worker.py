@@ -1,0 +1,81 @@
+"""Worker: run distributed BFS (2D / 1D / direction-optimised) on forced host
+devices and print CSV: variant,R,C,scale,ef,roots,harmonic_TEPS,mean_s,
+levels, plus per-phase breakdown columns when --phases.
+
+Usage: bfs_worker.py VARIANT R C SCALE EF N_ROOTS [fold]
+  VARIANT in {2d, 1d, dir}
+"""
+import os
+import sys
+import time
+
+VARIANT, R, C = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+SCALE, EF, N_ROOTS = int(sys.argv[4]), int(sys.argv[5]), int(sys.argv[6])
+FOLD = sys.argv[7] if len(sys.argv) > 7 else "list"
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={R * C}")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.graphgen import rmat_edges
+from repro.core import Grid2D, partition_2d, partition_1d
+from repro.core.partition import partition_2d_csr
+from repro.core.bfs2d import BFS2D
+from repro.core.bfs1d import BFS1D
+from repro.core.direction import BFS2DDirection
+from repro.core.types import LocalGraph2D
+from repro.core.validate import count_component_edges, harmonic_mean
+
+n = 1 << SCALE
+edges = rmat_edges(jax.random.key(42), SCALE, EF)
+edges_np = np.asarray(edges)
+
+if VARIANT == "1d":
+    mesh = jax.make_mesh((R * C,), ("p",), axis_types=(AxisType.Auto,))
+    part = partition_1d(edges_np, n, R * C)
+    bfs = BFS1D(n, mesh, axes=("p",), edge_chunk=16384)
+    runner = lambda root: bfs.run(jnp.asarray(part["col_off"]),
+                                  jnp.asarray(part["row_idx"]), root)
+else:
+    mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    grid = Grid2D.for_vertices(n, R, C)
+    lg = partition_2d(edges_np, grid)
+    graph = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                         jnp.asarray(lg.nnz))
+    if VARIANT == "dir":
+        csr = {k: jnp.asarray(v) for k, v in
+               partition_2d_csr(edges_np, grid).items()}
+        bfs = BFS2DDirection(grid, mesh, edge_chunk=16384)
+        runner = lambda root: bfs.run(graph, csr, root)
+    else:
+        bfs = BFS2D(grid, mesh, edge_chunk=16384,
+                    fold_bitmap=(FOLD == "bitmap"))
+        runner = lambda root: bfs.run(graph, root)
+
+rng = np.random.default_rng(0)
+# pick roots from non-isolated vertices
+deg = np.bincount(edges_np[0], minlength=n)
+cand = np.flatnonzero(deg > 0)
+roots = rng.choice(cand, size=N_ROOTS, replace=False)
+
+out = runner(int(roots[0]))  # compile warmup
+jax.block_until_ready(out.level)
+
+teps, times, levels = [], [], []
+for root in roots:
+    t0 = time.perf_counter()
+    out = runner(int(root))
+    jax.block_until_ready(out.level)
+    dt = time.perf_counter() - t0
+    m = count_component_edges(edges_np, np.asarray(out.level)[:n])
+    teps.append(m / dt)
+    times.append(dt)
+    levels.append(int(out.n_levels))
+
+print(f"{VARIANT},{R},{C},{SCALE},{EF},{N_ROOTS},"
+      f"{harmonic_mean(teps):.3e},{np.mean(times):.4f},{max(levels)}")

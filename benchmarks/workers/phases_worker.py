@@ -1,0 +1,113 @@
+"""Worker: per-phase timing breakdown of the 2D BFS (paper Fig. 5/6).
+
+Runs the four phases (expand exchange, frontier expansion, fold exchange,
+frontier update) as separately-jitted stages on a host-driven level loop so
+each can be wall-clocked.  CSV: scale,R,C,expand_s,scan_s,fold_s,update_s.
+
+Usage: phases_worker.py R C SCALE EF
+"""
+import os
+import sys
+import time
+
+R, C, SCALE, EF = (int(a) for a in sys.argv[1:5])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R * C}"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.graphgen import rmat_edges
+from repro.core import Grid2D, partition_2d
+from repro.core import frontier as F
+
+n = 1 << SCALE
+edges = rmat_edges(jax.random.key(42), SCALE, EF)
+mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+grid = Grid2D.for_vertices(n, R, C)
+lg = partition_2d(np.asarray(edges), grid)
+S = grid.S
+
+dev = P(("r",), ("c",))
+
+
+def sm(f, in_specs, out_specs):
+    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+# phase 1: expand exchange (all_gather along rows)
+expand = sm(lambda fr, cnt: F.compact_blocks(
+    jax.lax.all_gather(fr[0, 0], "r").reshape(R, S),
+    jax.lax.all_gather(cnt[0, 0], "r").reshape(R))[0][None, None],
+    (dev, dev), dev)
+
+# phase 2: frontier expansion (local scan)
+def scan_fn(co, ri, vis, lvl_a, pr, af, tot):
+    i = jax.lax.axis_index("r").astype(jnp.int32)
+    j = jax.lax.axis_index("c").astype(jnp.int32)
+    ex = F.expand_frontier(co[0, 0], ri[0, 0], vis[0, 0], lvl_a[0, 0],
+                           pr[0, 0], af[0, 0], tot[0, 0], jnp.int32(1),
+                           grid=grid, i=i, j=j, edge_chunk=16384)
+    return (ex.visited[None, None], ex.dst[None, None],
+            ex.dst_cnt[None, None])
+
+
+scan = sm(scan_fn, (dev,) * 7, (dev, dev, dev))
+
+# phase 3: fold exchange (all_to_all along cols)
+fold = sm(lambda d, c: (
+    jax.lax.all_to_all(d[0, 0], "c", 0, 0)[None, None],
+    jax.lax.all_to_all(c[0, 0], "c", 0, 0)[None, None]),
+    (dev, dev), (dev, dev))
+
+# phase 4: frontier update
+def upd_fn(iv, ic, vis, lvl_a, pr):
+    i = jax.lax.axis_index("r").astype(jnp.int32)
+    j = jax.lax.axis_index("c").astype(jnp.int32)
+    up = F.update_frontier(iv[0, 0], ic[0, 0], vis[0, 0], lvl_a[0, 0],
+                           pr[0, 0], jnp.int32(1), grid=grid, i=i, j=j)
+    return up.new_front[None, None], up.new_cnt[None, None]
+
+
+update = sm(upd_fn, (dev,) * 5, (dev, dev))
+
+# drive a realistic mid-search level: frontier = a random 10% of each block
+rng = np.random.default_rng(0)
+front = np.full((R, C, S), -1, np.int32)
+cnt = np.full((R, C), S // 10, np.int32)
+for i in range(R):
+    for j in range(C):
+        front[i, j, :S // 10] = rng.choice(grid.n_cols_local, S // 10,
+                                           replace=False)
+vis = np.zeros((R, C, grid.n_rows_local), bool)
+lvl_a = np.full((R, C, grid.n_rows_local), -1, np.int32)
+pr = np.full((R, C, grid.n_rows_local), -1, np.int32)
+
+
+def t(fn, *args):
+    o = fn(*args)
+    jax.block_until_ready(o)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        o = fn(*args)
+        jax.block_until_ready(o)
+    return (time.perf_counter() - t0) / 3
+
+
+af = expand(jnp.asarray(front), jnp.asarray(cnt))
+tot = jnp.full((R, C), int((af[0, 0] >= 0).sum()), jnp.int32)
+t_expand = t(expand, jnp.asarray(front), jnp.asarray(cnt))
+vis_j, dst, dcnt = scan(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                        jnp.asarray(vis), jnp.asarray(lvl_a), jnp.asarray(pr),
+                        af, tot)
+t_scan = t(scan, jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+           jnp.asarray(vis), jnp.asarray(lvl_a), jnp.asarray(pr), af, tot)
+iv, ic = fold(dst, dcnt)
+t_fold = t(fold, dst, dcnt)
+t_update = t(update, iv, ic, vis_j, jnp.asarray(lvl_a), jnp.asarray(pr))
+
+print(f"{SCALE},{R},{C},{t_expand:.5f},{t_scan:.5f},{t_fold:.5f},"
+      f"{t_update:.5f}")

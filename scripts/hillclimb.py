@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimb driver (EXPERIMENTS.md sec. Perf).
+
+Each experiment = (cell, variant dict) -> lower + compile on the single-pod
+mesh -> loop-aware roofline terms.  Results append to hillclimb_results.json.
+
+    PYTHONPATH=src python scripts/hillclimb.py [exp_name ...]
+"""
+import json
+import sys
+import time
+
+
+def _lower(spec, mesh):
+    import jax
+    with mesh:
+        j = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                    out_shardings=spec.out_shardings,
+                    donate_argnums=spec.donate_argnums)
+        return j.lower(*spec.args).compile()
+
+
+def run(name, build, results):
+    import jax
+    from repro.launch import roofline
+    if name in results:
+        print(f"[skip] {name}")
+        return
+    t0 = time.time()
+    try:
+        compiled, mesh, extra = build()
+        mem = compiled.memory_analysis()
+        rl = roofline.analyze(compiled, n_chips=mesh.devices.size)
+        rec = dict(status="ok", compile_s=round(time.time() - t0, 1),
+                   compute_s=rl.compute_s, memory_s=rl.memory_s,
+                   collective_s=rl.collective_s, dominant=rl.dominant,
+                   flops=rl.flops, hbm_bytes=rl.hbm_bytes,
+                   wire_bytes=rl.wire_bytes,
+                   arg_gib=mem.argument_size_in_bytes / 2**30,
+                   temp_gib=mem.temp_size_in_bytes / 2**30,
+                   detail={k: v for k, v in rl.collective_detail.items()
+                           if not k.startswith("_")}, **(extra or {}))
+        print(f"[ok] {name}: dom={rl.dominant} c={rl.compute_s:.3e} "
+              f"m={rl.memory_s:.3e} w={rl.collective_s:.3e} "
+              f"arg={rec['arg_gib']:.1f}GiB tmp={rec['temp_gib']:.1f}GiB")
+    except Exception as e:
+        import traceback
+        rec = dict(status="error", error=f"{type(e).__name__}: {e}",
+                   tb=traceback.format_exc()[-1500:])
+        print(f"[FAIL] {name}: {rec['error'][:200]}")
+    results[name] = rec
+    with open("hillclimb_results.json", "w") as f:
+        json.dump(results, f, indent=1)
+
+
+def main():
+    from repro.launch.mesh import make_production_mesh, mesh_axes
+    from repro.configs import get_arch
+    from repro.configs.lm_common import build_lm_dryrun
+    import importlib
+
+    mesh = make_production_mesh(multi_pod=False)
+    axes = mesh_axes(mesh)
+    mesh2 = make_production_mesh(multi_pod=True)
+    axes2 = mesh_axes(mesh2)
+
+    def lm_cell(arch_mod, shape, variant=None, multi=False):
+        m, a = (mesh2, axes2) if multi else (mesh, axes)
+        cfg = importlib.import_module(f"repro.configs.{arch_mod}").CONFIG
+        spec = build_lm_dryrun(cfg, shape, m, a, variant=variant)
+        return _lower(spec, m), m, {"variant": variant}
+
+    def bfs_cell(**kw):
+        import jax, jax.numpy as jnp
+        from repro.core.bfs2d import BFS2D
+        from repro.core.types import Grid2D
+        from repro.configs.bfs_rmat import TABLE1, EDGE_FACTOR
+        _, scale = TABLE1[mesh.devices.size]
+        R = 16 if "pod" not in mesh.axis_names else 32
+        C = 16
+        grid = Grid2D.for_vertices(1 << scale, R, C)
+        e_max = int(2 * EDGE_FACTOR * (1 << scale) / (R * C) * 1.5)
+        bfs = BFS2D(grid, mesh, row_axes=axes.dp, col_axes=(axes.tp,),
+                    edge_chunk=kw.pop("edge_chunk", 1 << 20), **kw)
+        args = (jax.ShapeDtypeStruct((R, C, grid.n_cols_local + 1), jnp.int32),
+                jax.ShapeDtypeStruct((R, C, e_max), jnp.int32),
+                jax.ShapeDtypeStruct((R, C), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        import jax as _j
+        with mesh:
+            c = _j.jit(bfs._run).lower(*args).compile()
+        return c, mesh, {"variant": kw}
+
+    def sage_cell(dtype="f32"):
+        import jax
+        from repro.configs.gnn_common import build_sage_dryrun
+        import repro.configs.graphsage_reddit as gs
+        spec = build_sage_dryrun(gs.CONFIG, "ogb_products", mesh, axes)
+        if dtype == "bf16":
+            import jax.numpy as jnp
+
+            def cast(x):
+                if hasattr(x, "dtype") and x.dtype == jnp.float32:
+                    return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                return x
+            # features AND params in bf16 (otherwise layer outputs promote
+            # back to f32 and only the first gather shrinks)
+            spec.args = jax.tree.map(cast, spec.args)
+        return _lower(spec, mesh), mesh, {"variant": {"dtype": dtype}}
+
+    EXPS = {
+        # --- cell A: kimi-k2 x train_4k (memory-dominant, 1T MoE) ---------
+        "kimi_train/base": lambda: lm_cell("kimi_k2_1t_a32b", "train_4k"),
+        "kimi_train/fsdp": lambda: lm_cell(
+            "kimi_k2_1t_a32b", "train_4k", {"moe_fsdp_axis": "data"}),
+        "kimi_train/fsdp+cap1.0": lambda: lm_cell(
+            "kimi_k2_1t_a32b", "train_4k",
+            {"moe_fsdp_axis": "data", "capacity_factor": 1.0}),
+        "kimi_train/fsdp+cap1.0+quant": lambda: lm_cell(
+            "kimi_k2_1t_a32b", "train_4k",
+            {"moe_fsdp_axis": "data", "capacity_factor": 1.0,
+             "moe_quant": True}),
+        "kimi_train/fsdp+cap1.0+quant+mb4": lambda: lm_cell(
+            "kimi_k2_1t_a32b", "train_4k",
+            {"moe_fsdp_axis": "data", "capacity_factor": 1.0,
+             "moe_quant": True, "microbatches": 4}),
+        "kimi_train/fsdp+cap1.0+quant@2pods": lambda: lm_cell(
+            "kimi_k2_1t_a32b", "train_4k",
+            {"moe_fsdp_axis": "data", "capacity_factor": 1.0,
+             "moe_quant": True}, multi=True),
+        # --- cell B: gemma2-2b x decode_32k (collective-dominant) ---------
+        "gemma_decode/base": lambda: lm_cell("gemma2_2b", "decode_32k"),
+        "gemma_decode/seqshard": lambda: lm_cell(
+            "gemma2_2b", "decode_32k", {"cache_seq_shard": True}),
+        # --- cell C: graphsage x ogb_products (paper-technique SpMM) ------
+        "sage_products/base": lambda: sage_cell("f32"),
+        "sage_products/bf16": lambda: sage_cell("bf16"),
+        # --- the paper's own workload ---------------------------------------
+        "bfs/base": lambda: bfs_cell(),
+        "bfs/sort_dedup": lambda: bfs_cell(dedup="sort"),
+        "bfs/fold_bitmap": lambda: bfs_cell(fold_bitmap=True),
+        "bfs/sort+bitmap": lambda: bfs_cell(dedup="sort", fold_bitmap=True),
+        "bfs/chunk_256k": lambda: bfs_cell(edge_chunk=1 << 18),
+    }
+
+    results = {}
+    if os.path.exists("hillclimb_results.json"):
+        results = json.load(open("hillclimb_results.json"))
+    wanted = sys.argv[1:] or list(EXPS)
+    for name in wanted:
+        run(name, EXPS[name], results)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: distributed 2D-partitioned BFS (Bisson/Bernaschi/Mastrostefano 2014)
+as a production-grade JAX framework, plus the assigned architecture pool."""
+
+__version__ = "0.1.0"

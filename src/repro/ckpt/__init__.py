@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.elastic import reshard_state

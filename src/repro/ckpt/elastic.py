@@ -1,0 +1,53 @@
+"""Elastic re-sharding: restore a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints hold GLOBAL arrays, so elasticity = re-placing each leaf with the
+new mesh's NamedSharding.  For the BFS, the graph partition itself is a pure
+function of (edge list, R, C), so a shrink/grow re-partitions and resumes
+from the last completed root (BFS state between roots is just level/pred
+outputs).  For training, optimizer state re-shards like params.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def reshard_state(tree, spec_tree, mesh):
+    """Place a host pytree onto `mesh` with the given PartitionSpec pytree.
+    Axes that no longer exist in the new mesh are dropped from the specs."""
+    names = set(mesh.axis_names)
+
+    def fix(spec):
+        if not isinstance(spec, P):
+            return P()
+        parts = []
+        for e in spec:
+            if e is None:
+                parts.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a in names)
+                parts.append(kept if kept else None)
+            else:
+                parts.append(e if e in names else None)
+        return P(*parts)
+
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, fix(spec)))
+
+    return jax.tree.map(place, tree, spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def shrink_grid(R: int, C: int, failed: int):
+    """Pick the largest valid 2D grid after losing `failed` devices
+    (prefers keeping the aspect ratio; the BFS re-partitions from the edge
+    list)."""
+    total = R * C - failed
+    best = (1, 1)
+    for r in range(1, total + 1):
+        c = total // r
+        if r * c <= total and r * c > best[0] * best[1]:
+            best = (r, c)
+        elif r * c == best[0] * best[1] and abs(r - c) < abs(best[0] - best[1]):
+            best = (r, c)
+    return best

@@ -1,0 +1,69 @@
+"""The paper's own workload: distributed BFS on R-MAT graphs (Table 1).
+
+Dry-run lowers the WHOLE search program (BFS2D's while_loop over levels:
+expand all_gather -> column scan -> fold all_to_all -> update, + the final
+deferred-predecessor exchange) at the Table-1 scale for the mesh size:
+256 GPUs -> scale 29, 512 -> scale 30, edge factor 16.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import DryrunSpec, MeshAxes
+from repro.core.bfs2d import BFS2D
+from repro.core.types import Grid2D
+
+# paper Table 1: #GPUs -> (grid, scale)
+TABLE1 = {1: ((1, 1), 21), 2: ((1, 2), 22), 4: ((2, 2), 23), 8: ((2, 4), 24),
+          16: ((4, 4), 25), 32: ((4, 8), 26), 64: ((8, 8), 27),
+          128: ((8, 16), 28), 256: ((16, 16), 29), 512: ((16, 32), 30),
+          1024: ((32, 32), 31), 2048: ((32, 64), 32), 4096: ((64, 64), 33)}
+EDGE_FACTOR = 16
+
+SHAPES = {"rmat_weak": dict(kind="bfs")}
+SKIP_SHAPES = {}
+
+
+def build_bfs_dryrun(_cfg, shape, mesh, axes: MeshAxes):
+    n_dev = mesh.devices.size
+    _, scale = TABLE1[n_dev]
+    R = 1
+    for a in axes.dp:
+        R *= mesh.devices.shape[mesh.axis_names.index(a)]
+    C = mesh.devices.shape[mesh.axis_names.index(axes.tp)]
+    n = 1 << scale
+    grid = Grid2D.for_vertices(n, R, C)
+    # undirected doubling: 2 * ef * n directed edges; 1.5x padding for skew
+    e_max = int(2 * EDGE_FACTOR * n / (R * C) * 1.5)
+    bfs = BFS2D(grid, mesh, row_axes=axes.dp, col_axes=(axes.tp,),
+                edge_chunk=1 << 20)
+    col_off = jax.ShapeDtypeStruct((R, C, grid.n_cols_local + 1), jnp.int32)
+    row_idx = jax.ShapeDtypeStruct((R, C, e_max), jnp.int32)
+    nnz = jax.ShapeDtypeStruct((R, C), jnp.int32)
+    root = jax.ShapeDtypeStruct((), jnp.int32)
+    return DryrunSpec(fn=bfs._run, args=(col_off, row_idx, nnz, root),
+                      in_shardings=None, out_shardings=None,
+                      note=f"full BFS scale={scale} grid={R}x{C} "
+                           f"e_max/dev={e_max}")
+
+
+def smoke_bfs():
+    import numpy as np
+    from jax.sharding import AxisType
+    from repro.graphgen import rmat_edges, build_csc
+    from repro.core import bfs_reference_py, partition_2d
+    from repro.core.types import LocalGraph2D
+    n = 1 << 7
+    edges = rmat_edges(jax.random.key(0), 7, 6)
+    mesh = jax.make_mesh((1, 1), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    grid = Grid2D.for_vertices(n, 1, 1)
+    lg = partition_2d(np.asarray(edges), grid)
+    bfs = BFS2D(grid, mesh, edge_chunk=256)
+    out = bfs.run(LocalGraph2D(jnp.asarray(lg.col_off),
+                               jnp.asarray(lg.row_idx), jnp.asarray(lg.nnz)), 3)
+    co, ri = build_csc(edges, n)
+    ref, _ = bfs_reference_py(co, ri, 3, n)
+    assert (np.asarray(out.level)[:n] == ref).all()

@@ -1,0 +1,47 @@
+"""Shared config plumbing: mesh-axis descriptor + dry-run spec."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: tuple            # data-parallel axes, e.g. ("pod", "data")
+    tp: str = "model"    # tensor/expert-parallel axis
+
+    @property
+    def all(self):
+        return (*self.dp, self.tp)
+
+
+@dataclasses.dataclass
+class DryrunSpec:
+    """What dryrun.py lowers: jax.jit(fn, in_shardings, out_shardings)
+    .lower(*args).compile()."""
+    fn: Callable
+    args: tuple                  # ShapeDtypeStructs (pytrees allowed)
+    in_shardings: Any
+    out_shardings: Any
+    static_argnums: tuple = ()
+    donate_argnums: tuple = ()
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    family: str
+    shapes: tuple
+    build_dryrun: Callable        # (shape, mesh, axes: MeshAxes) -> DryrunSpec
+    smoke: Callable               # () -> None, raises on failure
+    skip_shapes: dict = dataclasses.field(default_factory=dict)
+    source: str = ""
+
+
+def abstract(tree):
+    """Pytree -> matching ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)

@@ -1,0 +1,315 @@
+"""Shared builders for the four GNN architectures.
+
+Shapes (assignment):
+  full_graph_sm   n=2,708  e=10,556  d_feat=1,433   (Cora-size full batch)
+  minibatch_lg    n=232,965 e=114.6M batch=1,024 fanout 15-10 (Reddit-size,
+                  REAL neighbour sampler feeds static blocks)
+  ogb_products    n=2,449,029 e=61.86M d_feat=100   (full-batch large)
+  molecule        n=30 e=64 batch=128               (batched small graphs)
+
+Distribution: full-graph aggregation for graphsage runs on the paper's 2D
+expand/fold SpMM (repro.core.spmm2d) -- the adjacency is partitioned exactly
+like the BFS.  Equivariant nets (positions + messages along edge vectors) use
+edge-sharded segment ops under GSPMD; citation-graph shapes synthesise
+positions/species for them (the shapes, not the semantics, are the assigned
+quantity -- see DESIGN.md sec. 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.common import DryrunSpec, MeshAxes
+from repro.core.types import Grid2D
+from repro.models.gnn import graphsage as GS
+from repro.models.gnn import egnn as EG
+from repro.models.gnn import equivariant as EQ
+
+SHAPES = {
+    "full_graph_sm": dict(kind="full", n=2708, e=10556, d_feat=1433,
+                          classes=7),
+    "minibatch_lg": dict(kind="block", n=232965, e=114_615_892,
+                         batch=1024, fanout=(15, 10), d_feat=602, classes=41),
+    "ogb_products": dict(kind="full", n=2_449_029, e=61_859_140, d_feat=100,
+                         classes=47),
+    "molecule": dict(kind="mol", n=30, e=64, batch=128),
+}
+
+
+def _ns(mesh, *parts):
+    return NamedSharding(mesh, P(*parts))
+
+
+def _edges_abs(e):
+    return (jax.ShapeDtypeStruct((e,), jnp.int32),
+            jax.ShapeDtypeStruct((e,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# graphsage
+# ---------------------------------------------------------------------------
+
+def build_sage_dryrun(cfg: GS.SAGEConfig, shape, mesh, axes: MeshAxes):
+    sh = SHAPES[shape]
+    dp = tuple(axes.dp)
+    allax = (*dp, axes.tp)
+
+    if sh["kind"] == "block":
+        # sampled minibatch: data-parallel over seeds
+        B, (f1, f2) = sh["batch"], sh["fanout"]
+        c2 = GS.SAGEConfig(cfg.name, cfg.n_layers, cfg.d_hidden,
+                           sh["d_feat"], sh["classes"], cfg.aggregator)
+        params = jax.eval_shape(lambda k: GS.init_params(c2, k),
+                                jax.random.key(0))
+        feats = [jax.ShapeDtypeStruct((B, sh["d_feat"]), jnp.float32),
+                 jax.ShapeDtypeStruct((B * f1, sh["d_feat"]), jnp.float32),
+                 jax.ShapeDtypeStruct((B * f1 * f2, sh["d_feat"]), jnp.float32)]
+        labels = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+        def loss_fn(p, bf, lab):
+            logits = GS.apply_block(c2, p, bf, [f1, f2])
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, lab[:, None], 1)[:, 0]
+            return (lse - ll).mean()
+
+        def step(p, bf, lab):
+            return jax.value_and_grad(loss_fn)(p, bf, lab)
+
+        psh = jax.tree.map(lambda _: _ns(mesh), params)
+        fsh = [_ns(mesh, dp, None)] * 3
+        return DryrunSpec(fn=step, args=(params, feats, labels),
+                          in_shardings=(psh, fsh, _ns(mesh, dp)),
+                          out_shardings=None,
+                          note=f"sampled block B={B} fanout={f1}x{f2}")
+
+    if sh["kind"] == "full":
+        # full-graph on the paper's 2D partition (spmm2d expand/fold)
+        from repro.core.spmm2d import spmm2d_device
+        R = 1
+        for a in dp:
+            R *= mesh.devices.shape[mesh.axis_names.index(a)]
+        C = mesh.devices.shape[mesh.axis_names.index(axes.tp)]
+        grid = Grid2D.for_vertices(sh["n"], R, C)
+        e_max = int(sh["e"] / (R * C) * 1.5) + 64
+        c2 = GS.SAGEConfig(cfg.name, cfg.n_layers, cfg.d_hidden,
+                           sh["d_feat"], sh["classes"], cfg.aggregator)
+        params = jax.eval_shape(lambda k: GS.init_params(c2, k),
+                                jax.random.key(0))
+        col_off = jax.ShapeDtypeStruct((R, C, grid.n_cols_local + 1), jnp.int32)
+        row_idx = jax.ShapeDtypeStruct((R, C, e_max), jnp.int32)
+        feats = jax.ShapeDtypeStruct((grid.n, sh["d_feat"]), jnp.float32)
+        labels = jax.ShapeDtypeStruct((grid.n,), jnp.int32)
+        dev = P(dp, axes.tp)
+        xspec = P((axes.tp, *dp))
+
+        def loss_fn(p, co, ri, x, lab):
+            def spmm_shard(h):
+                from repro.core.types import LocalGraph2D
+                g = LocalGraph2D(col_off=co[0, 0], row_idx=ri[0, 0],
+                                 nnz=jnp.int32(0))
+                return spmm2d_device(g, h, grid=grid, row_axes=dp,
+                                     col_axes=(axes.tp,))
+            # one shard_map over the whole model: x enters block-sharded
+            def body(co, ri, x, lab):
+                h = x
+                for lp in p["layers"]:
+                    def spmm(hh):
+                        from repro.core.types import LocalGraph2D
+                        g = LocalGraph2D(col_off=co[0, 0], row_idx=ri[0, 0],
+                                         nnz=jnp.int32(0))
+                        return spmm2d_device(g, hh, grid=grid, row_axes=dp,
+                                             col_axes=(axes.tp,))
+                    h = jax.nn.relu(h @ lp["w_self"] + spmm(h) @ lp["w_neigh"])
+                logits = h @ p["out"]
+                lse = jax.nn.logsumexp(logits, -1)
+                ll = jnp.take_along_axis(logits, lab[:, None], 1)[:, 0]
+                return jax.lax.pmean((lse - ll).mean(), (*dp, axes.tp))[None]
+
+            out = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(dev, dev, xspec, xspec),
+                out_specs=P((*dp, axes.tp)), check_vma=False)(co, ri, x, lab)
+            return out.sum() / (R * C)
+
+        def step(p, co, ri, x, lab):
+            return jax.value_and_grad(loss_fn)(p, co, ri, x, lab)
+
+        pshard = jax.tree.map(lambda _: _ns(mesh), params)
+        return DryrunSpec(
+            fn=step, args=(params, col_off, row_idx, feats, labels),
+            in_shardings=(pshard, _ns(mesh, dp, axes.tp, None),
+                          _ns(mesh, dp, axes.tp, None),
+                          _ns(mesh, (axes.tp, *dp), None),
+                          _ns(mesh, (axes.tp, *dp))),
+            out_shardings=None,
+            note=f"full-graph 2D expand/fold SpMM n={sh['n']} e={sh['e']}")
+
+    # molecule: SAGE over batched small dense graphs (vmap); positions are
+    # ignored by SAGE (feature-only model)
+    c3 = GS.SAGEConfig(cfg.name, cfg.n_layers, cfg.d_hidden, 16, 8)
+    return _molecule_dryrun_generic(
+        lambda key: GS.init_params(c3, key),
+        lambda p, f, pos, es, ed: GS.apply_fullgraph(c3, p, f, es, ed).sum(),
+        mesh, axes, feat_dim=16)
+
+
+def _molecule_dryrun_generic(init_fn, energy_fn, mesh, axes, *, feat_dim=None,
+                             with_species=False):
+    sh = SHAPES["molecule"]
+    B, n, e = sh["batch"], sh["n"], sh["e"]
+    dp = tuple(axes.dp)
+    params = jax.eval_shape(init_fn, jax.random.key(0))
+    pos = jax.ShapeDtypeStruct((B, n, 3), jnp.float32)
+    es = jax.ShapeDtypeStruct((B, e), jnp.int32)
+    ed = jax.ShapeDtypeStruct((B, e), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((B,), jnp.float32)
+
+    if with_species:
+        extra = jax.ShapeDtypeStruct((B, n), jnp.int32)
+    else:
+        extra = jax.ShapeDtypeStruct((B, n, feat_dim), jnp.float32)
+
+    def loss(p, x, pos, es, ed, tgt):
+        en = jax.vmap(lambda x_, po_, s_, d_:
+                      energy_fn(p, x_, po_, s_, d_))(x, pos, es, ed)
+        return jnp.mean((en - tgt) ** 2)
+
+    def step(p, x, pos, es, ed, tgt):
+        return jax.value_and_grad(loss)(p, x, pos, es, ed, tgt)
+
+    pshard = jax.tree.map(lambda _: _ns(mesh), params)
+    bsh = _ns(mesh, dp)
+    return DryrunSpec(
+        fn=step, args=(params, extra, pos, es, ed, tgt),
+        in_shardings=(pshard, _ns(mesh, dp, None) if with_species
+                      else _ns(mesh, dp, None, None),
+                      _ns(mesh, dp, None, None), _ns(mesh, dp, None),
+                      _ns(mesh, dp, None), bsh),
+        out_shardings=None, note=f"molecule batch={B}")
+
+
+# ---------------------------------------------------------------------------
+# equivariant (nequip / mace) + egnn
+# ---------------------------------------------------------------------------
+
+def build_equiv_dryrun(cfg: EQ.EquivConfig, shape, mesh, axes: MeshAxes):
+    sh = SHAPES[shape]
+    dp = tuple(axes.dp)
+    allax = (*dp, axes.tp)
+
+    if sh["kind"] == "mol":
+        return _molecule_dryrun_generic(
+            lambda key: EQ.init_params(cfg, key),
+            lambda p, sp, pos, es, ed: EQ.apply(cfg, p, sp, pos, es, ed)[0],
+            mesh, axes, with_species=True)
+
+    # full / block shapes: synthesized positions + species over the graph's
+    # node/edge counts; edge arrays sharded over ALL devices, nodes replicated
+    # for small graphs / dp-sharded scatter for large (GSPMD chooses comms).
+    n = sh["n"] if sh["kind"] == "full" else sh["batch"] * (
+        1 + sh["fanout"][0] + sh["fanout"][0] * sh["fanout"][1])
+    e = sh["e"] if sh["kind"] == "full" else n * 8
+    e = ((e + 511) // 512) * 512   # edge padding: shardable on 256/512 chips
+    params = jax.eval_shape(lambda k: EQ.init_params(cfg, k),
+                            jax.random.key(0))
+    spec_a = jax.ShapeDtypeStruct((n,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    es = jax.ShapeDtypeStruct((e,), jnp.int32)
+    ed = jax.ShapeDtypeStruct((e,), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def loss(p, sp, pos, es, ed, tgt):
+        _, node_e = EQ.apply(cfg, p, sp, pos, es, ed)
+        return jnp.mean((node_e - tgt) ** 2)
+
+    def step(p, sp, pos, es, ed, tgt):
+        return jax.value_and_grad(loss)(p, sp, pos, es, ed, tgt)
+
+    pshard = jax.tree.map(lambda _: _ns(mesh), params)
+    nsh = _ns(mesh, None)
+    esh = _ns(mesh, allax)
+    return DryrunSpec(
+        fn=step, args=(params, spec_a, pos, es, ed, tgt),
+        in_shardings=(pshard, nsh, _ns(mesh, None, None), esh, esh, nsh),
+        out_shardings=None,
+        note=f"{sh['kind']} n={n} e={e} edge-sharded")
+
+
+def build_egnn_dryrun(cfg: EG.EGNNConfig, shape, mesh, axes: MeshAxes):
+    sh = SHAPES[shape]
+    dp = tuple(axes.dp)
+    allax = (*dp, axes.tp)
+
+    if sh["kind"] == "mol":
+        return _molecule_dryrun_generic(
+            lambda key: EG.init_params(cfg, key),
+            lambda p, f, pos, es, ed: EG.apply(cfg, p, f, pos, es, ed)[0],
+            mesh, axes, feat_dim=cfg.d_in)
+
+    n = sh["n"] if sh["kind"] == "full" else sh["batch"] * (
+        1 + sh["fanout"][0] + sh["fanout"][0] * sh["fanout"][1])
+    e = sh["e"] if sh["kind"] == "full" else n * 8
+    e = ((e + 511) // 512) * 512   # edge padding: shardable on 256/512 chips
+    params = jax.eval_shape(lambda k: EG.init_params(cfg, k),
+                            jax.random.key(0))
+    feats = jax.ShapeDtypeStruct((n, cfg.d_in), jnp.float32)
+    pos = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    es = jax.ShapeDtypeStruct((e,), jnp.int32)
+    ed = jax.ShapeDtypeStruct((e,), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def loss(p, f, pos, es, ed, tgt):
+        _, h, _ = EG.apply(cfg, p, f, pos, es, ed)
+        return jnp.mean((h[:, 0] - tgt) ** 2)
+
+    def step(p, f, pos, es, ed, tgt):
+        return jax.value_and_grad(loss)(p, f, pos, es, ed, tgt)
+
+    pshard = jax.tree.map(lambda _: _ns(mesh), params)
+    esh = _ns(mesh, allax)
+    return DryrunSpec(
+        fn=step, args=(params, feats, pos, es, ed, tgt),
+        in_shardings=(pshard, _ns(mesh, None, None), _ns(mesh, None, None),
+                      esh, esh, _ns(mesh, None)),
+        out_shardings=None, note=f"{sh['kind']} n={n} e={e} edge-sharded")
+
+
+# ---------------------------------------------------------------------------
+# smokes
+# ---------------------------------------------------------------------------
+
+def smoke_sage():
+    import numpy as np
+    from repro.graphgen import rmat_edges
+    cfg = GS.SAGEConfig("sage-smoke", 2, 16, 8, 5)
+    p = GS.init_params(cfg, jax.random.key(0))
+    e = rmat_edges(jax.random.key(1), 7, 4)
+    x = jax.random.normal(jax.random.key(2), (128, 8))
+    lab = jax.random.randint(jax.random.key(3), (128,), 0, 5)
+    loss = GS.loss_fn(cfg, p, x, e[0], e[1], lab)
+    assert np.isfinite(float(loss))
+
+
+def smoke_equiv(corr):
+    import numpy as np
+    cfg = EQ.EquivConfig("eq-smoke", 2, 8, 4, 2.5, correlation_order=corr)
+    p = EQ.init_params(cfg, jax.random.key(0))
+    pos = jax.random.normal(jax.random.key(1), (10, 3))
+    sp = jax.random.randint(jax.random.key(2), (10,), 0, 8)
+    src = jnp.arange(10, dtype=jnp.int32)
+    dst = (src + 1) % 10
+    en, node_e = EQ.apply(cfg, p, sp, pos, src, dst)
+    assert np.isfinite(float(en)) and node_e.shape == (10,)
+
+
+def smoke_egnn():
+    import numpy as np
+    cfg = EG.EGNNConfig("egnn-smoke", 2, 16, 4)
+    p = EG.init_params(cfg, jax.random.key(0))
+    pos = jax.random.normal(jax.random.key(1), (10, 3))
+    f = jax.random.normal(jax.random.key(2), (10, 4))
+    src = jnp.arange(10, dtype=jnp.int32)
+    dst = (src + 1) % 10
+    en, h, x = EG.apply(cfg, p, f, pos, src, dst)
+    assert np.isfinite(float(en)) and x.shape == (10, 3)

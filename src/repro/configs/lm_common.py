@@ -1,0 +1,188 @@
+"""Shared builders for the five LM architectures.
+
+Shapes (assignment):
+  train_4k     seq 4096,  global_batch 256   -> train_step (loss+grad+adamw)
+  prefill_32k  seq 32768, global_batch 32    -> forward (logits)
+  decode_32k   seq 32768 KV cache, batch 128 -> serve_step (1 new token)
+  long_500k    seq 524288 KV cache, batch 1  -> serve_step; ONLY for archs
+               with a sub-quadratic (sliding-window) component.
+
+Sharding: batch over dp axes; TP/EP over `model`; decode caches shard batch
+over dp and heads over model when divisible, long-context caches shard the
+SEQUENCE over everything (GSPMD inserts the partial-softmax reductions --
+flash-decoding's split-KV as a sharding choice)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.common import DryrunSpec, MeshAxes, abstract
+from repro.models import lm as L
+from repro.models.moe import MoEShard
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import TrainConfig, make_train_step, init_state, \
+    state_shardings
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _moe_shard(cfg: L.LMConfig, mesh, axes: MeshAxes, variant=None):
+    if cfg.moe is None:
+        return None
+    v = variant or {}
+    return MoEShard(mesh=mesh,
+                    token_axes=tuple(v.get("token_axes", axes.all)),
+                    expert_axis=axes.tp,
+                    fsdp_axis=v.get("moe_fsdp_axis"),
+                    quant_dispatch=v.get("moe_quant", False))
+
+
+def _ns(mesh, *parts):
+    return NamedSharding(mesh, P(*parts))
+
+
+def _cache_shardings(cfg, mesh, axes: MeshAxes, batch, long: bool):
+    dp = tuple(axes.dp)
+    if long:
+        # batch=1: shard the cache SEQUENCE over every axis
+        kv = _ns(mesh, None, None, (*dp, axes.tp), None, None)
+        pos = _ns(mesh, None, None, (*dp, axes.tp))
+    else:
+        kv = _ns(mesh, None, dp, None, None, None)
+        pos = _ns(mesh, None, dp, None)
+    return {"k": kv, "v": kv, "pos": pos}
+
+
+def build_lm_dryrun(cfg: L.LMConfig, shape: str, mesh, axes: MeshAxes,
+                    train_cfg: TrainConfig | None = None,
+                    variant: dict | None = None) -> DryrunSpec:
+    """variant (hillclimb knobs): moe_fsdp_axis, moe_quant, token_axes,
+    capacity_factor, microbatches, remat, cache_seq_shard."""
+    v = variant or {}
+    import dataclasses as _dc
+    if v.get("capacity_factor") and cfg.moe:
+        cfg = _dc.replace(cfg, moe=_dc.replace(
+            cfg.moe, capacity_factor=v["capacity_factor"]))
+    if "remat" in v:
+        cfg = _dc.replace(cfg, remat=v["remat"])
+    sh = SHAPES[shape]
+    dp = tuple(axes.dp)
+    pspec = L.param_shardings(cfg, model_axis=axes.tp)
+    if v.get("moe_fsdp_axis") and cfg.moe:
+        fa = v["moe_fsdp_axis"]
+        pspec["mlp"]["w1"] = P(None, axes.tp, fa, None)
+        pspec["mlp"]["w3"] = P(None, axes.tp, fa, None)
+        pspec["mlp"]["w2"] = P(None, axes.tp, None, fa)
+    pshard = jax.tree.map(lambda s: _ns(mesh, *s), pspec,
+                          is_leaf=lambda s: isinstance(s, P))
+    params_abs = jax.eval_shape(lambda k: L.init_params(cfg, k),
+                                jax.random.key(0))
+    mshard = _moe_shard(cfg, mesh, axes, v)
+
+    if sh["kind"] == "train":
+        tc = train_cfg or TrainConfig(optimizer=AdamWConfig(),
+                                      microbatches=v.get("microbatches", 1))
+        loss = lambda p, b: L.loss_fn(cfg, p, b["tokens"], b["labels"],
+                                      mesh=mshard)
+        step = make_train_step(loss, tc)
+        state_abs = jax.eval_shape(
+            lambda p: init_state(tc, p).tree(), params_abs)
+        # ZeRO-1: optimizer moments additionally shard their largest
+        # divisible unsharded dim over the innermost dp axis
+        data_size = mesh.devices.shape[mesh.axis_names.index(dp[-1])]
+
+        def zero_spec(spec, leaf):
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            used = set()
+            for p_ in parts:
+                for a in (p_ if isinstance(p_, tuple) else (p_,)):
+                    used.add(a)
+            if dp[-1] in used:          # already FSDP-sharded on data
+                return _ns(mesh, *parts)
+            for i, (p_, s_) in enumerate(zip(parts, leaf.shape)):
+                if p_ is None and s_ % data_size == 0 and s_ >= data_size:
+                    parts[i] = dp[-1]
+                    break
+            return _ns(mesh, *parts)
+
+        mu_shard = jax.tree.map(zero_spec, pspec, params_abs,
+                                is_leaf=lambda s: isinstance(s, P))
+        opt_shard = {"mu": mu_shard, "nu": mu_shard, "step": _ns(mesh)}
+        st_shard = {"params": pshard, "opt": opt_shard, "err": None}
+        if tc.microbatches > 1:
+            mb = tc.microbatches
+            bs = (mb, sh["batch"] // mb, sh["seq"])
+            batch_abs = {"tokens": jax.ShapeDtypeStruct(bs, jnp.int32),
+                         "labels": jax.ShapeDtypeStruct(bs, jnp.int32)}
+            bshard = {"tokens": _ns(mesh, None, dp, None),
+                      "labels": _ns(mesh, None, dp, None)}
+        else:
+            batch_abs = {
+                "tokens": jax.ShapeDtypeStruct((sh["batch"], sh["seq"]), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((sh["batch"], sh["seq"]), jnp.int32)}
+            bshard = {"tokens": _ns(mesh, dp, None), "labels": _ns(mesh, dp, None)}
+        return DryrunSpec(fn=step, args=(state_abs, batch_abs),
+                          in_shardings=(st_shard, bshard),
+                          out_shardings=(st_shard, None),
+                          donate_argnums=(0,),
+                          note=f"train_step bs={sh['batch']} seq={sh['seq']}")
+
+    if sh["kind"] == "prefill":
+        fwd = lambda p, t: L.forward(cfg, p, t, mesh=mshard)[0]
+        toks = jax.ShapeDtypeStruct((sh["batch"], sh["seq"]), jnp.int32)
+        return DryrunSpec(fn=fwd, args=(params_abs, toks),
+                          in_shardings=(pshard, _ns(mesh, dp, None)),
+                          out_shardings=_ns(mesh, dp, None, axes.tp),
+                          note=f"prefill bs={sh['batch']} seq={sh['seq']}")
+
+    # decode
+    long = sh["seq"] > 100_000 or v.get("cache_seq_shard", False)
+    cache = jax.eval_shape(
+        lambda: L.init_cache(cfg, sh["batch"], sh["seq"]))
+    cshard = _cache_shardings(cfg, mesh, axes, sh["batch"], long)
+    step = lambda p, c, t, pos: L.decode_step(cfg, p, c, t, pos, mesh=mshard)
+    toks = jax.ShapeDtypeStruct((sh["batch"],), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tshard = _ns(mesh, dp) if sh["batch"] >= 8 else _ns(mesh)
+    return DryrunSpec(fn=step, args=(params_abs, cache, toks, pos),
+                      in_shardings=(pshard, cshard, tshard, _ns(mesh)),
+                      out_shardings=(tshard, cshard),
+                      donate_argnums=(1,),
+                      note=f"decode bs={sh['batch']} kv={sh['seq']}"
+                           f"{' seq-sharded-cache' if long else ''}")
+
+
+def smoke_lm(cfg: L.LMConfig):
+    """Reduced-config forward + train step on CPU: shapes + finiteness."""
+    import numpy as np
+    small = L.LMConfig(
+        name=cfg.name + "-smoke", n_layers=2, d_model=64,
+        n_heads=min(4, cfg.n_heads), n_kv_heads=min(2, cfg.n_kv_heads),
+        d_head=16, d_ff=128, vocab=256, rope_fraction=cfg.rope_fraction,
+        attn_softcap=cfg.attn_softcap, logit_softcap=cfg.logit_softcap,
+        window_pattern=tuple(min(w, 8) for w in cfg.window_pattern),
+        post_norms=cfg.post_norms, tie_embeddings=cfg.tie_embeddings,
+        moe=None if cfg.moe is None else L.MoESettings(
+            n_experts=8, top_k=min(2, cfg.moe.top_k), d_ff_expert=32,
+            n_shared=min(1, cfg.moe.n_shared)),
+        dtype=jnp.float32, remat=False)
+    p = L.init_params(small, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, small.vocab)
+    logits, _ = L.forward(small, p, toks)
+    assert logits.shape == (2, 16, small.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN in smoke forward"
+    loss, grads = jax.value_and_grad(
+        lambda p: L.loss_fn(small, p, toks, toks))(p)
+    assert np.isfinite(float(loss))
+    # one decode step
+    cache = L.init_cache(small, 2, 32)
+    nxt, cache = L.decode_step(small, p, cache, toks[:, 0], jnp.int32(0))
+    assert nxt.shape == (2,)

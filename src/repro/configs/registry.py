@@ -1,0 +1,74 @@
+"""Architecture registry: --arch <id> resolution for dryrun/train/serve."""
+from __future__ import annotations
+
+import functools
+
+from repro.configs.common import ArchDef, DryrunSpec, MeshAxes
+
+
+def _lm(arch_module_name: str):
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{arch_module_name}")
+    from repro.configs import lm_common as LC
+    cfg = mod.CONFIG
+    return ArchDef(
+        arch_id=cfg.name, family="lm",
+        shapes=tuple(LC.SHAPES),
+        skip_shapes=mod.SKIP_SHAPES,
+        build_dryrun=functools.partial(LC.build_lm_dryrun, cfg),
+        smoke=functools.partial(LC.smoke_lm, cfg),
+        source=mod.__doc__.split("\n")[0])
+
+
+def _make_archs():
+    from repro.configs import gnn_common as GC
+    from repro.configs import recsys_common as RC
+    from repro.configs import bfs_rmat as BF
+    import repro.configs.nequip as nq
+    import repro.configs.mace as mc
+    import repro.configs.graphsage_reddit as gs
+    import repro.configs.egnn as eg
+    import repro.configs.deepfm as df
+
+    archs = {}
+    for m in ("kimi_k2_1t_a32b", "qwen2_moe_a2_7b", "glm4_9b", "gemma2_2b",
+              "h2o_danube_1_8b"):
+        a = _lm(m)
+        archs[a.arch_id] = a
+
+    archs["nequip"] = ArchDef(
+        "nequip", "gnn", tuple(GC.SHAPES),
+        functools.partial(GC.build_equiv_dryrun, nq.CONFIG),
+        functools.partial(GC.smoke_equiv, 1), nq.SKIP_SHAPES,
+        nq.__doc__.split("\n")[0])
+    archs["mace"] = ArchDef(
+        "mace", "gnn", tuple(GC.SHAPES),
+        functools.partial(GC.build_equiv_dryrun, mc.CONFIG),
+        functools.partial(GC.smoke_equiv, 3), mc.SKIP_SHAPES,
+        mc.__doc__.split("\n")[0])
+    archs["graphsage-reddit"] = ArchDef(
+        "graphsage-reddit", "gnn", tuple(GC.SHAPES),
+        functools.partial(GC.build_sage_dryrun, gs.CONFIG),
+        GC.smoke_sage, gs.SKIP_SHAPES, gs.__doc__.split("\n")[0])
+    archs["egnn"] = ArchDef(
+        "egnn", "gnn", tuple(GC.SHAPES),
+        functools.partial(GC.build_egnn_dryrun, eg.CONFIG),
+        GC.smoke_egnn, eg.SKIP_SHAPES, eg.__doc__.split("\n")[0])
+    archs["deepfm"] = ArchDef(
+        "deepfm", "recsys", tuple(RC.SHAPES),
+        functools.partial(RC.build_deepfm_dryrun, df.CONFIG),
+        RC.smoke_deepfm, df.SKIP_SHAPES, df.__doc__.split("\n")[0])
+    archs["bfs-rmat"] = ArchDef(
+        "bfs-rmat", "bfs", tuple(BF.SHAPES),
+        functools.partial(BF.build_bfs_dryrun, None),
+        BF.smoke_bfs, BF.SKIP_SHAPES, BF.__doc__.split("\n")[0])
+    return archs
+
+
+ARCHS = _make_archs()
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]

@@ -1,0 +1,7 @@
+from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
+from repro.core.partition import (
+    partition_2d, partition_1d, local_row, local_col, row2col, owner_of,
+    global_from_row,
+)
+from repro.core.bfs_single import bfs_reference_py, bfs_single
+from repro.core.validate import validate_bfs, count_component_edges, teps

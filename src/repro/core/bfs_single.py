@@ -1,0 +1,74 @@
+"""Single-device BFS.
+
+`bfs_reference_py` is the absolute ground truth (python deque) used by tests.
+`bfs_single` is the paper's local algorithm on one device, in JAX: level-
+synchronous frontier expansion over a CSC with the scan + search thread->edge
+mapping (sec. 3.4), deterministic scatter-min in place of atomics.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bfs_reference_py(col_off, row_idx, root: int, n: int):
+    """Plain python BFS; returns (level, pred) int32 numpy arrays."""
+    col_off = np.asarray(col_off)
+    row_idx = np.asarray(row_idx)
+    level = np.full(n, -1, np.int32)
+    pred = np.full(n, -1, np.int32)
+    level[root] = 0
+    pred[root] = root
+    q = deque([root])
+    while q:
+        u = q.popleft()
+        for e in range(col_off[u], col_off[u + 1]):
+            v = row_idx[e]
+            if level[v] < 0:
+                level[v] = level[u] + 1
+                pred[v] = u
+                q.append(v)
+    return level, pred
+
+
+def _expand_level(col_off, row_idx, visited, front_mask):
+    """One level of dense (bitmap) expansion: returns newly-reached mask and a
+    parent suggestion per vertex (min edge origin, deterministic)."""
+    n = visited.shape[0]
+    src = jnp.repeat(jnp.arange(n, dtype=jnp.int32), jnp.diff(col_off),
+                     total_repeat_length=row_idx.shape[0])
+    active = front_mask[src] & (row_idx >= 0)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    cand = jnp.full((n,), big, jnp.int32)
+    cand = cand.at[jnp.where(active, row_idx, n)].min(
+        jnp.where(active, src, big), mode="drop")
+    new = (cand < big) & ~visited
+    return new, cand
+
+
+@jax.jit
+def bfs_single(col_off, row_idx, root):
+    """Level-synchronous BFS on one device.  Returns (level, pred)."""
+    n = col_off.shape[0] - 1
+    level = jnp.full((n,), -1, jnp.int32).at[root].set(0)
+    pred = jnp.full((n,), -1, jnp.int32).at[root].set(root)
+    visited = jnp.zeros((n,), bool).at[root].set(True)
+    front = jnp.zeros((n,), bool).at[root].set(True)
+
+    def cond(s):
+        return s[3].any()
+
+    def body(s):
+        level, pred, visited, front, lvl = s
+        new, cand = _expand_level(col_off, row_idx, visited, front)
+        level = jnp.where(new, lvl, level)
+        pred = jnp.where(new, cand, pred)
+        visited = visited | new
+        return level, pred, visited, new, lvl + 1
+
+    level, pred, *_ = jax.lax.while_loop(
+        cond, body, (level, pred, visited, front, jnp.int32(1)))
+    return level, pred

@@ -1,0 +1,231 @@
+"""Device-local frontier expansion / update (paper sec. 3.4, 3.5).
+
+Everything here is pure jnp with static shapes and is the REFERENCE path; the
+Pallas kernels in `repro.kernels` implement the same contracts for the hot
+tiles (see kernels/ops.py for the drop-in switch).
+
+Adaptation notes (DESIGN.md sec. 3):
+  * `atomicOr` visited dedup      -> scatter-min "winner" selection (the first
+    edge slot to reach v wins, deterministically);
+  * `atomicInc` bucket append     -> stable sort by destination column +
+    per-segment positions (the paper's own pre-Kepler compact variant);
+  * thread-per-edge scan+search   -> vectorised searchsorted over the
+    exclusive-scanned degree array, processed in fixed-size chunks inside a
+    `lax.while_loop` so per-level work stays O(frontier edges + chunk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Grid2D
+
+I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def exclusive_cumsum(x):
+    """Thrust exclusive_scan equivalent, returns len(x)+1 (with total)."""
+    c = jnp.cumsum(x, dtype=jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), c])
+
+
+def compact_blocks(vals, cnts, fill=-1):
+    """Concatenate R padded blocks (R, S) with per-block counts into one
+    padded (R*S,) array (valid entries first, order preserved)."""
+    R, S = vals.shape
+    mask = jnp.arange(S, dtype=jnp.int32)[None, :] < cnts[:, None]
+    flat_v = vals.reshape(-1)
+    flat_m = mask.reshape(-1)
+    order = jnp.argsort(~flat_m, stable=True)
+    out = jnp.where(flat_m[order], flat_v[order], fill)
+    return out, jnp.sum(cnts, dtype=jnp.int32)
+
+
+def winner_dedup(v, eligible, n_rows: int, method: str = "scatter"):
+    """First-occurrence selection among eligible entries with equal v.
+
+    Emulates the paper's `atomicOr` first-thread-wins semantics
+    deterministically.  Two implementations:
+      * "scatter" (default): scatter-min of slot ids into an (n_rows,) claim
+        array -- the smallest slot claiming v wins.  O(chunk) scatters but
+        touches an n_rows-sized temp every chunk.
+      * "sort": sort by v, keep the first of each equal run -- O(chunk log
+        chunk) with NO n_rows-sized temp (the memory-roofline win for large
+        local partitions; winner = lowest v-then-slot, still deterministic
+        and a valid first-claimant).
+    Returns a bool mask of winners (subset of `eligible`).
+    """
+    slots = jnp.arange(v.shape[0], dtype=jnp.int32)
+    if method == "sort":
+        key = jnp.where(eligible, v, I32_MAX)
+        order = jnp.argsort(key, stable=True)
+        ks = key[order]
+        first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+        first = first & (ks < I32_MAX)
+        win = jnp.zeros_like(eligible).at[order].set(first)
+        return win & eligible
+    claim = jnp.full((n_rows,), I32_MAX, jnp.int32)
+    claim = claim.at[jnp.where(eligible, v, n_rows)].min(
+        jnp.where(eligible, slots, I32_MAX), mode="drop")
+    return eligible & (claim[jnp.clip(v, 0, n_rows - 1)] == slots)
+
+
+def bucket_append(dst, dst_cnt, v, tgt, take, n_buckets: int):
+    """Append v[take] into per-target buckets (paper Alg. 3 lines 9-14).
+
+    dst: (n_buckets, cap) padded -1; dst_cnt: (n_buckets,).
+    Sort-based: stable sort by target, per-segment positions, scatter at
+    dst_cnt[tgt] + position.  Entries overflowing `cap` are dropped -- callers
+    size cap = S so overflow is impossible (<= S distinct owned vertices per
+    target per search).
+    """
+    cap = dst.shape[1]
+    key = jnp.where(take, tgt, n_buckets).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    ks, vs = key[order], v[order]
+    seg_start = jnp.searchsorted(ks, jnp.arange(n_buckets + 1, dtype=jnp.int32))
+    pos = jnp.arange(ks.shape[0], dtype=jnp.int32) - seg_start[jnp.clip(ks, 0, n_buckets)]
+    ok = ks < n_buckets
+    row = jnp.where(ok, ks, 0)
+    col = dst_cnt[row] + pos
+    ok = ok & (col < cap)
+    dst = dst.at[jnp.where(ok, row, n_buckets), jnp.clip(col, 0, cap - 1)].set(
+        jnp.where(ok, vs, -1), mode="drop")
+    add = jnp.diff(seg_start)[:n_buckets]
+    return dst, dst_cnt + jnp.minimum(add, cap - dst_cnt)
+
+
+def pack_bitmap(mask):
+    """(..., S) bool -> (..., ceil(S/32)) uint32 little-endian bit packing."""
+    S = mask.shape[-1]
+    W = (S + 31) // 32
+    pad = W * 32 - S
+    if pad:
+        mask = jnp.concatenate(
+            [mask, jnp.zeros(mask.shape[:-1] + (pad,), bool)], axis=-1)
+    m = mask.reshape(mask.shape[:-1] + (W, 32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(m * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bitmap(words, S: int):
+    """(..., W) uint32 -> (..., S) bool."""
+    bits = (words[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :S].astype(bool)
+
+
+class ExpandResult(NamedTuple):
+    visited: jax.Array
+    level: jax.Array
+    pred: jax.Array
+    dst: jax.Array        # (C, S) local-row ids grouped by owner column
+    dst_cnt: jax.Array    # (C,)
+    edges_scanned: jax.Array
+
+
+def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
+                    front_total, lvl, *, grid: Grid2D, i, j,
+                    edge_chunk: int = 8192, expand_fn=None,
+                    dedup: str = "scatter") -> ExpandResult:
+    """Scan the CSC columns of the gathered frontier (paper Alg. 3).
+
+    all_front: (n_cols_local,) local col indices (valid first `front_total`).
+    i, j: this device's grid coordinates (traced or static).
+    expand_fn: optional kernel override mapping
+        (gids, cumul, all_front, front_total, col_off, row_idx, visited)
+        -> (v, unvisited_mask, u) for one chunk (the Pallas path).
+    """
+    n_rows = visited.shape[0]
+    S, C = grid.S, grid.C
+    ncl = grid.n_cols_local
+    nnz_cap = row_idx.shape[0]
+
+    u_safe = jnp.clip(all_front, 0, ncl - 1)
+    deg = (col_off[u_safe + 1] - col_off[u_safe])
+    deg = jnp.where(jnp.arange(ncl) < front_total, deg, 0)
+    cumul = exclusive_cumsum(deg)                      # (ncl + 1,)
+    total = cumul[front_total]
+
+    dst = jnp.full((C, S), -1, jnp.int32)
+    dst_cnt = jnp.zeros((C,), jnp.int32)
+
+    def chunk_body(state):
+        start, visited, level, pred, dst, dst_cnt = state
+        gids = start + jnp.arange(edge_chunk, dtype=jnp.int32)
+        if expand_fn is None:
+            k = jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1
+            k = jnp.clip(k, 0, ncl - 1)
+            u = u_safe[k]
+            addr = col_off[u] + gids - cumul[k]
+            valid = gids < total
+            v = row_idx[jnp.clip(addr, 0, nnz_cap - 1)]
+            v = jnp.where(valid, v, 0)
+            unvis = valid & ~visited[v]
+        else:
+            v, unvis, u = expand_fn(gids, cumul, all_front, front_total,
+                                    col_off, row_idx, visited)
+        win = winner_dedup(v, unvis, n_rows, method=dedup)
+        # mark visited (paper: atomicOr on the full-local-row bitmap -- this
+        # is what makes every remote vertex fold at most once per search)
+        visited = visited.at[jnp.where(win, v, n_rows)].set(True, mode="drop")
+        # predecessor: global parent id, stored also for remote rows
+        # (deferred resolution, paper sec. 3.5 / [2])
+        pg = (j * ncl + u).astype(jnp.int32)
+        pred = pred.at[jnp.where(win, v, n_rows)].set(
+            jnp.where(win, pg, 0), mode="drop")
+        # local rows get their level here (Alg. 3 line 15)
+        m = v // S
+        is_local = win & (m == j)
+        level = level.at[jnp.where(is_local, v, n_rows)].set(
+            jnp.where(is_local, lvl, 0), mode="drop")
+        dst, dst_cnt = bucket_append(dst, dst_cnt, v, m, win, C)
+        return start + edge_chunk, visited, level, pred, dst, dst_cnt
+
+    def chunk_cond(state):
+        return state[0] < total
+
+    init = (jnp.int32(0), visited, level, pred, dst, dst_cnt)
+    _, visited, level, pred, dst, dst_cnt = jax.lax.while_loop(
+        chunk_cond, chunk_body, init)
+    return ExpandResult(visited, level, pred, dst, dst_cnt, total)
+
+
+class UpdateResult(NamedTuple):
+    visited: jax.Array
+    level: jax.Array
+    pred: jax.Array
+    new_front: jax.Array   # (S,) local col ids of newly frontier vertices
+    new_cnt: jax.Array
+
+
+def update_frontier(int_verts, int_cnt, visited, level, pred, lvl, *,
+                    grid: Grid2D, i, j) -> UpdateResult:
+    """Process fold-received vertices (paper sec. 3.5).
+
+    int_verts: (C, S) local-row ids received from each processor-column
+    (sender m in slot m).  Received vertices are OWNED here; unvisited ones
+    get level/visited set, pred <- -(sender_col + 2) (deferred), and are
+    appended to the next frontier as local COL indices.
+    """
+    n_rows = visited.shape[0]
+    C, S = int_verts.shape
+    sender = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, S))
+    mask = jnp.arange(S, dtype=jnp.int32)[None, :] < int_cnt[:, None]
+    v = jnp.where(mask, int_verts, 0).reshape(-1)
+    snd = sender.reshape(-1)
+    eligible = mask.reshape(-1) & ~visited[v]
+    win = winner_dedup(v, eligible, n_rows)
+    visited = visited.at[jnp.where(win, v, n_rows)].set(True, mode="drop")
+    level = level.at[jnp.where(win, v, n_rows)].set(
+        jnp.where(win, lvl, 0), mode="drop")
+    pred = pred.at[jnp.where(win, v, n_rows)].set(
+        jnp.where(win, -(snd + 2), 0), mode="drop")
+    # new frontier = winners, converted row -> col index (ROW2COL)
+    lc = (i * S + (v - j * S)).astype(jnp.int32)
+    nf = jnp.full((C * S,), -1, jnp.int32)
+    nf_cnt0 = jnp.zeros((1,), jnp.int32)
+    nf, cnt = bucket_append(nf[None, :], nf_cnt0, lc, jnp.zeros_like(lc), win, 1)
+    return UpdateResult(visited, level, pred, nf[0, :S], cnt[0])

@@ -1,0 +1,167 @@
+"""Graph partitioning (paper sec. 2.2 + 3.1, and the 1D baseline of [1]).
+
+Host-side (numpy) construction: runs once before the search, exactly as the
+paper partitions after generation.  All outputs are padded to uniform
+per-device shapes so they can be dropped onto a device mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import Grid2D, LocalGraph2D
+
+
+# ----------------------------------------------------------------------------
+# Index maps (numpy/int aware; jnp arrays also work through these).
+# ----------------------------------------------------------------------------
+
+def owner_of(g, grid: Grid2D):
+    """Vertex g -> (i, j) owner coordinates.  Block b = j*R + i."""
+    b = g // grid.S
+    return b % grid.R, b // grid.R
+
+
+def local_row(g, grid: Grid2D):
+    """Global row -> local row (valid on every processor in the owner's
+    processor-row)."""
+    return (g // grid.S // grid.R) * grid.S + g % grid.S
+
+
+def local_col(g, grid: Grid2D):
+    """Global col -> local col (valid on every processor in the owner's
+    processor-column)."""
+    return g % grid.n_cols_local
+
+
+def row2col(lr, i, j, grid: Grid2D):
+    """Owner-local row index -> owner-local col index (paper ROW2COL)."""
+    return i * grid.S + (lr - j * grid.S)
+
+
+def global_from_row(lr, i, grid: Grid2D):
+    """Local row index -> global vertex id, for a processor in grid-row i."""
+    m = lr // grid.S
+    return (m * grid.R + i) * grid.S + lr % grid.S
+
+
+def global_from_col(lc, j, grid: Grid2D):
+    """Local col index -> global vertex id for processor-column j."""
+    return j * grid.n_cols_local + lc
+
+
+# ----------------------------------------------------------------------------
+# 2D partition
+# ----------------------------------------------------------------------------
+
+def partition_2d(edges, grid: Grid2D, pad_to: int | None = None):
+    """Split a directed edge list among the R x C grid.
+
+    edges: (2, E) [src u, dst v] -- the non-zero A[v, u].
+    Edge (u, v) belongs to P_ij with i = (v // S) % R (row-block congruence)
+    and j = u // (N/C) (column block).
+
+    Returns a LocalGraph2D whose arrays have leading dims (R, C):
+      col_off: (R, C, N/C + 1), row_idx: (R, C, e_max), nnz: (R, C).
+    """
+    R, C, S = grid.R, grid.C, grid.S
+    ncl = grid.n_cols_local
+    u = np.asarray(edges[0], dtype=np.int64)
+    v = np.asarray(edges[1], dtype=np.int64)
+
+    pi = (v // S) % R
+    pj = u // ncl
+    lc = u % ncl
+    lr = (v // S // R) * S + v % S
+
+    dev = pi * C + pj
+    e_max = pad_to if pad_to is not None else int(np.bincount(dev, minlength=R * C).max())
+
+    col_off = np.zeros((R, C, ncl + 1), np.int32)
+    row_idx = np.full((R, C, e_max), -1, np.int32)
+    nnz = np.zeros((R, C), np.int32)
+
+    order = np.lexsort((lc, dev))  # group by device, then by local column
+    dev_s, lc_s, lr_s = dev[order], lc[order], lr[order]
+    starts = np.searchsorted(dev_s, np.arange(R * C + 1))
+    for i in range(R):
+        for j in range(C):
+            d = i * C + j
+            a, b = starts[d], starts[d + 1]
+            cnt = b - a
+            if cnt > e_max:
+                raise ValueError(f"pad_to={e_max} < local nnz {cnt} at P({i},{j})")
+            deg = np.bincount(lc_s[a:b], minlength=ncl)
+            np.cumsum(deg, out=col_off[i, j, 1:])
+            row_idx[i, j, :cnt] = lr_s[a:b]
+            nnz[i, j] = cnt
+    return LocalGraph2D(col_off=col_off, row_idx=row_idx, nnz=nnz)
+
+
+def partition_2d_csr(edges, grid: Grid2D, pad_to: int | None = None):
+    """Row-major (CSR) twin of partition_2d for the bottom-up direction
+    (DESIGN.md: beyond-paper direction-optimising needs row access).
+
+    Returns dict(row_off=(R, C, N/R + 1), col_idx=(R, C, e_max), nnz=(R, C))
+    where col_idx holds LOCAL column indices.
+    """
+    R, C, S = grid.R, grid.C, grid.S
+    nrl = grid.n_rows_local
+    ncl = grid.n_cols_local
+    u = np.asarray(edges[0], dtype=np.int64)
+    v = np.asarray(edges[1], dtype=np.int64)
+    pi = (v // S) % R
+    pj = u // ncl
+    lc = u % ncl
+    lr = (v // S // R) * S + v % S
+    dev = pi * C + pj
+    e_max = pad_to if pad_to is not None else int(np.bincount(dev, minlength=R * C).max())
+    row_off = np.zeros((R, C, nrl + 1), np.int32)
+    col_idx = np.full((R, C, e_max), -1, np.int32)
+    nnz = np.zeros((R, C), np.int32)
+    order = np.lexsort((lr, dev))
+    dev_s, lr_s, lc_s = dev[order], lr[order], lc[order]
+    starts = np.searchsorted(dev_s, np.arange(R * C + 1))
+    for i in range(R):
+        for j in range(C):
+            d = i * C + j
+            a, b = starts[d], starts[d + 1]
+            deg = np.bincount(lr_s[a:b], minlength=nrl)
+            np.cumsum(deg, out=row_off[i, j, 1:])
+            col_idx[i, j, :b - a] = lc_s[a:b]
+            nnz[i, j] = b - a
+    return dict(row_off=row_off, col_idx=col_idx, nnz=nnz)
+
+
+# ----------------------------------------------------------------------------
+# 1D baseline partition (the paper's ORIGINAL code [1]: modulo rule)
+# ----------------------------------------------------------------------------
+
+def partition_1d(edges, n: int, P: int, pad_to: int | None = None):
+    """Vertices assigned by modulo rule; each processor stores the full
+    adjacency lists (CSC columns) of its own vertices.
+
+    Returns dict with per-processor CSC over local columns (n/P columns,
+    column k on processor p is vertex k*P + p) and global row ids.
+    """
+    if n % P:
+        raise ValueError("n must be divisible by P (pad first)")
+    u = np.asarray(edges[0], dtype=np.int64)
+    v = np.asarray(edges[1], dtype=np.int64)
+    ncl = n // P
+    dev = u % P
+    lc = u // P
+    e_max = pad_to if pad_to is not None else int(np.bincount(dev, minlength=P).max())
+
+    col_off = np.zeros((P, ncl + 1), np.int32)
+    row_idx = np.full((P, e_max), -1, np.int32)  # GLOBAL dst ids
+    nnz = np.zeros((P,), np.int32)
+    order = np.lexsort((lc, dev))
+    dev_s, lc_s, v_s = dev[order], lc[order], v[order]
+    starts = np.searchsorted(dev_s, np.arange(P + 1))
+    for p in range(P):
+        a, b = starts[p], starts[p + 1]
+        deg = np.bincount(lc_s[a:b], minlength=ncl)
+        np.cumsum(deg, out=col_off[p, 1:])
+        row_idx[p, :b - a] = v_s[a:b]
+        nnz[p] = b - a
+    return dict(col_off=col_off, row_idx=row_idx, nnz=nnz, n=n, P=P)

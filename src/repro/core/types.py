@@ -1,0 +1,117 @@
+"""Core datatypes for the 2D-partitioned BFS (paper sec. 2.2 / 3.1).
+
+Conventions (matching the paper / Fig. 1):
+  * adjacency A is N x N; an edge u -> v is the non-zero A[v, u], i.e. column
+    u of A is u's adjacency list;
+  * the processor grid is R rows x C cols; processor P_ij handles the edge
+    blocks (m*R + i, j), m = 0..C-1, each of size S x (N/C), S = N/(R*C);
+  * vertex block b = j*R + i (size S) is OWNED by P_ij;
+  * every P_ij stores an (N/R) x (N/C) local matrix in CSC.
+
+Local index maps (paper sec. 3.1; derivations in DESIGN.md):
+  LOCAL_ROW(g) = (g // S // R) * S + g % S      -- same for every processor in
+                                                   the owner's processor-row
+  LOCAL_COL(g) = g % (N/C)                      -- same for every processor in
+                                                   the owner's processor-column
+  ROW2COL(lr)  = i*S + (lr - j*S)               -- owner-local row -> col
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Sentinels (paper initialises level/pred to -1).
+NOT_VISITED = jnp.int32(-1)
+INVALID = jnp.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid2D:
+    """Static description of the processor grid and padded vertex space."""
+    R: int          # processor-grid rows
+    C: int          # processor-grid cols
+    n: int          # padded global vertex count; divisible by R*C
+
+    def __post_init__(self):
+        if self.n % (self.R * self.C) != 0:
+            raise ValueError(f"n={self.n} not divisible by R*C={self.R * self.C}")
+
+    @property
+    def P(self) -> int:
+        return self.R * self.C
+
+    @property
+    def S(self) -> int:
+        """Vertex-block size N/(RC) (owned vertices per processor)."""
+        return self.n // (self.R * self.C)
+
+    @property
+    def n_rows_local(self) -> int:
+        return self.n // self.R
+
+    @property
+    def n_cols_local(self) -> int:
+        return self.n // self.C
+
+    @staticmethod
+    def for_vertices(n_raw: int, R: int, C: int) -> "Grid2D":
+        """Pad the vertex space up to a multiple of R*C (isolated vertices)."""
+        rc = R * C
+        return Grid2D(R, C, ((n_raw + rc - 1) // rc) * rc)
+
+
+def _dc(cls):
+    """Register a dataclass as a pytree (arrays = leaves, ints = static)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+    meta = [f.name for f in dataclasses.fields(cls) if f.metadata.get("static")]
+    data = [f for f in fields if f not in meta]
+    jax.tree_util.register_dataclass(cls, data_fields=data, meta_fields=meta)
+    return cls
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+@_dc
+@dataclasses.dataclass
+class LocalGraph2D:
+    """Per-device local CSC block of the 2D-partitioned adjacency matrix.
+
+    When used host-side (building), arrays carry a leading (R, C) axis; inside
+    shard_map each device sees its own block.  row indices are LOCAL rows
+    (int32), columns are LOCAL cols -- 32-bit on the wire as in the paper.
+    """
+    col_off: jax.Array   # (..., n_cols_local + 1) int32
+    row_idx: jax.Array   # (..., e_max) int32, padded with -1
+    nnz: jax.Array       # (...,) int32 valid entries of row_idx
+
+
+@_dc
+@dataclasses.dataclass
+class BFSState:
+    """Per-device BFS state (paper Alg. 2 requires).
+
+    level/pred/visited span ALL local rows (n/R): the bitmap covering
+    remotely-owned rows is what guarantees each remote vertex is folded at
+    most once per search (paper sec. 3.4).
+    """
+    level: jax.Array      # (..., n_rows_local) int32, -1 = unvisited
+    pred: jax.Array       # (..., n_rows_local) int32 global parent id;
+                          #   -(col+2) = deferred (fold sender column); -1 = none
+    visited: jax.Array    # (..., n_rows_local) bool
+    front: jax.Array      # (..., S) int32 local col indices, padded -1
+    front_cnt: jax.Array  # (...,) int32
+    lvl: jax.Array        # (...,) int32 current level
+
+
+@_dc
+@dataclasses.dataclass
+class BFSOutput:
+    """Global (gathered) BFS result."""
+    level: jax.Array   # (n,) int32
+    pred: jax.Array    # (n,) int32, global parent ids
+    n_levels: jax.Array

@@ -1,0 +1,1 @@
+from repro.data.pipeline import synthetic_lm_batches, shard_batch

@@ -1,0 +1,3 @@
+from repro.graphgen.rmat import rmat_edges, make_undirected, permute_labels
+from repro.graphgen.build import build_csc, build_csr, degrees
+from repro.graphgen.datasets import realworld_analog, REALWORLD_SPECS

@@ -1,0 +1,50 @@
+"""CSR/CSC builders.
+
+The paper (sec. 3.1) stores each local adjacency block in Compressed Sparse
+Column form -- two arrays only (col offsets + row indices), since all
+non-zeroes equal 1.  We build with a counting sort (degree histogram +
+exclusive scan + stable scatter), the same scan-based construction the paper
+uses via Thrust.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def degrees(ids: jax.Array, n: int) -> jax.Array:
+    """Histogram of vertex ids (degree when fed edge endpoints)."""
+    return jnp.zeros((n,), jnp.int32).at[ids].add(1)
+
+
+def build_csc(edges, n_cols: int, n_rows: int | None = None):
+    """CSC of the directed edge set: column u holds the rows v of edges u->v.
+
+    edges: (2, E) int array [src(=col), dst(=row)].
+    Returns (col_off[n_cols+1] int32, row_idx[E] int32); rows within a column
+    are in input order (stable).
+    """
+    src, dst = edges[0], edges[1]
+    deg = degrees(src, n_cols)
+    col_off = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(deg, dtype=jnp.int32)])
+    order = jnp.argsort(src, stable=True)
+    row_idx = dst[order].astype(jnp.int32)
+    return col_off, row_idx
+
+
+def build_csr(edges, n_rows: int, n_cols: int | None = None):
+    """CSR: row v holds the cols u of edges u->v (transpose access order)."""
+    return build_csc(edges[::-1], n_rows)
+
+
+def build_csc_np(edges: np.ndarray, n_cols: int):
+    """numpy twin of build_csc for host-side partitioning of big graphs."""
+    src = np.asarray(edges[0])
+    dst = np.asarray(edges[1])
+    deg = np.bincount(src, minlength=n_cols).astype(np.int64)
+    col_off = np.zeros(n_cols + 1, np.int64)
+    np.cumsum(deg, out=col_off[1:])
+    order = np.argsort(src, kind="stable")
+    return col_off.astype(np.int32), dst[order].astype(np.int32)

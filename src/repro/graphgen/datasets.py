@@ -1,0 +1,30 @@
+"""Reduced-scale analogs of the paper's real-world graphs (Table 3).
+
+The container has no network access, so the four SNAP graphs are replaced by
+R-MAT graphs matched to each dataset's (approximate) scale and edge factor as
+reported in the paper's Table 3, reduced by `scale_reduction` so they fit/run
+on one CPU.  The analog keeps the skew (power-law-ish degree distribution)
+that makes these graphs interesting for BFS load balance.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.graphgen.rmat import rmat_edges
+
+# name -> (paper_scale, paper_edge_factor)
+REALWORLD_SPECS = {
+    "com-LiveJournal": (22, 9),
+    "soc-LiveJournal1": (22, 14),
+    "com-Orkut": (22, 38),
+    "com-Friendster": (25, 27),
+}
+
+
+def realworld_analog(name: str, key: jax.Array, scale_reduction: int = 6):
+    """Return (edges, n, meta) for a reduced analog of a Table-3 graph."""
+    paper_scale, ef = REALWORLD_SPECS[name]
+    scale = max(8, paper_scale - scale_reduction)
+    edges = rmat_edges(key, scale, ef)
+    meta = dict(name=name, paper_scale=paper_scale, scale=scale, edge_factor=ef)
+    return edges, 1 << scale, meta

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the BFS hot spots (paper sec. 3.4/3.4.1).
+
+The paper's column-scan CUDA kernel decomposes on TPU into:
+  binsearch_map   -- thread->edge mapping (scan + search) as a monotonic
+                     windowed broadcast-compare (VPU-dense, no per-lane
+                     divergent binary search);
+  gather_segments -- concatenation of the frontier's CSC columns into a
+                     contiguous edge buffer (chunked sequential-grid DMA);
+  visited_filter  -- bitmap test + first-occurrence dedup (the atomicOr
+                     analog; dense triangular compare replaces the race).
+
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+"""
+from repro.kernels.ops import binsearch_map, gather_segments, visited_filter, \
+    make_expand_fn

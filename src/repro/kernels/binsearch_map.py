@@ -1,0 +1,99 @@
+"""Thread->edge mapping kernel (paper sec. 3.4, Alg. 3 line 2).
+
+GPU original: every thread runs an independent binary search of its global id
+in the cumulative-degree array (log F divergent scalar gathers per lane).
+
+TPU adaptation (DESIGN.md sec. 3): edge ids handled by one tile are
+CONSECUTIVE, so their frontier indices k form a non-decreasing run
+[k0, k_last] (the same monotonicity the paper's sec. 3.4.1 optimisation
+exploits to amortise searches across a thread's edge group).  We therefore:
+  1. find k0 for the tile's first id with ONE scalar binary search;
+  2. count, per lane, the cumul entries in (k0, ...] that are <= gid, with
+     W-wide windowed broadcast-compares -- dense (TILE x W) VPU ops;
+  3. k = k0 + count.
+The loop runs ceil((k_last - k0 + 1) / W) times: total work O(TILE * span/W)
+vector ops instead of O(TILE log F) divergent scalar ops.
+
+cumul must be CLIPPED by the caller: entries at index > front_total set to
+I32_MAX (ops.py does this) so the window loop terminates after the live
+frontier prefix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
+    gid = gids_ref[...]
+    g0 = gid[0]
+    gmax = gid[-1]
+
+    # --- 1. scalar binary search for k0 = max { l : cumul[l] <= g0 } ------
+    def bcond(s):
+        lo, hi = s
+        return hi - lo > 1
+
+    def bbody(s):
+        lo, hi = s
+        mid = (lo + hi) // 2
+        cm = pl.load(cumul_ref, (pl.ds(mid, 1),))[0]
+        lo2 = jnp.where(cm <= g0, mid, lo)
+        hi2 = jnp.where(cm <= g0, hi, mid)
+        return lo2, hi2
+
+    k0, _ = jax.lax.while_loop(
+        bcond, bbody, (jnp.int32(0), jnp.int32(n_cumul)))
+
+    # --- 2. windowed broadcast-compare count over (k0, ...] ---------------
+    def wcond(s):
+        start, _ = s
+        probe = pl.load(
+            cumul_ref, (pl.ds(jnp.minimum(start, n_cumul - 1), 1),))[0]
+        return (start < n_cumul) & (probe <= gmax)
+
+    def wbody(s):
+        start, count = s
+        base = jnp.minimum(start, n_cumul - window)
+        win = pl.load(cumul_ref, (pl.ds(base, window),))
+        idx_ok = base + jax.lax.iota(jnp.int32, window) >= start
+        hits = (win[None, :] <= gid[:, None]) & idx_ok[None, :]
+        return start + window, count + jnp.sum(
+            hits, axis=1, dtype=jnp.int32)
+
+    _, count = jax.lax.while_loop(
+        wcond, wbody, (k0 + 1, jnp.zeros_like(gid)))
+    k_ref[...] = k0 + count
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "window", "interpret"))
+def binsearch_map(cumul, gids, *, tile: int = 512, window: int = 256,
+                  interpret: bool = True):
+    """k[t] = max { l : cumul[l] <= gids[t] }; gids must be sorted ascending
+    (they are consecutive edge ids in the BFS).  cumul int32 non-decreasing.
+    """
+    n_cumul = cumul.shape[0]
+    e = gids.shape[0]
+    assert e % tile == 0, "pad gids to a multiple of tile"
+    if n_cumul < window:  # tiny frontier: pad so the window load is legal
+        cumul = jnp.concatenate(
+            [cumul, jnp.full((window - n_cumul,), I32_MAX, jnp.int32)])
+        n_cumul = window
+    grid = (e // tile,)
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, n_cumul=n_cumul),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),       # gid tile -> VMEM
+            pl.BlockSpec((n_cumul,), lambda t: (0,)),    # cumul stays whole
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
+        interpret=interpret,
+    )(gids, cumul)

@@ -1,0 +1,56 @@
+"""jit'd wrappers + the drop-in expand_fn for repro.core.frontier.
+
+`interpret=True` everywhere by default: this container is CPU-only; on a TPU
+runtime the same calls compile via Mosaic (interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binsearch_map import binsearch_map
+from repro.kernels.gather_segments import gather_segments
+from repro.kernels.visited_filter import visited_filter
+
+I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def clip_cumul(cumul, front_total):
+    """Entries past the live frontier -> I32_MAX (terminates the kernel's
+    window loop right after the prefix; see binsearch_map docstring)."""
+    idx = jnp.arange(cumul.shape[0], dtype=jnp.int32)
+    return jnp.where(idx <= front_total, cumul, I32_MAX)
+
+
+def make_expand_fn(*, tile: int = 512, window: int = 256,
+                   interpret: bool = True):
+    """Returns the kernel-backed chunk expansion for
+    `repro.core.frontier.expand_frontier(expand_fn=...)`:
+
+        (gids, cumul, all_front, front_total, col_off, row_idx, visited)
+            -> (v, unvisited_mask, u)
+    """
+
+    def expand_fn(gids, cumul, all_front, front_total, col_off, row_idx,
+                  visited):
+        ncl = all_front.shape[0]
+        cc = clip_cumul(cumul, front_total)
+        k = binsearch_map(cc, gids, tile=tile, window=window,
+                          interpret=interpret)
+        k = jnp.clip(k, 0, ncl - 1)
+        u = jnp.clip(all_front[k], 0, ncl - 1)
+        addr = col_off[u] + gids - cumul[k]
+        total = cumul[front_total]
+        valid = gids < total
+        v = row_idx[jnp.clip(addr, 0, row_idx.shape[0] - 1)]
+        v = jnp.where(valid, v, 0)
+        unvis = valid & ~visited[v]
+        return v, unvis, u
+
+    return expand_fn
+
+
+__all__ = ["binsearch_map", "gather_segments", "visited_filter",
+           "make_expand_fn", "clip_cumul"]

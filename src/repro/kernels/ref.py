@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def binsearch_map_ref(cumul, gids):
+    """k[t] = max { l : cumul[l] <= gids[t] } (paper's binsearch_maxle)."""
+    return (jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1)
+
+
+def gather_segments_ref(front_off, cumul, row_idx, out_size: int):
+    """Concatenate row_idx[front_off[k] : front_off[k] + deg_k] at cumul[k].
+
+    front_off: (F,) segment starts in row_idx; cumul: (F+1,) exclusive scan
+    of segment lengths (entries beyond the real frontier repeat the total).
+    Returns (out_size,) with unused tail = -1.
+    """
+    slots = jnp.arange(out_size, dtype=jnp.int32)
+    k = binsearch_map_ref(cumul, slots)
+    k = jnp.clip(k, 0, front_off.shape[0] - 1)
+    addr = front_off[k] + slots - cumul[k]
+    valid = slots < cumul[-1]
+    v = row_idx[jnp.clip(addr, 0, row_idx.shape[0] - 1)]
+    return jnp.where(valid, v, -1)
+
+
+def visited_filter_ref(v, valid, bitmap_words):
+    """won[t] = valid[t] and bit v[t] unset and t is the first slot with v[t].
+
+    Mirrors the paper's atomicOr(&bmap[v/32], m) first-thread-wins check
+    (Alg. 3 lines 5-8), deterministically.
+    """
+    n = v.shape[0]
+    w = jnp.clip(v >> 5, 0, bitmap_words.shape[0] - 1)
+    bit = (bitmap_words[w] >> (v & 31).astype(jnp.uint32)) & 1
+    unvis = valid & (bit == 0)
+    eq = (v[:, None] == v[None, :]) & valid[None, :]
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)
+    dup = jnp.any(eq & earlier, axis=1)
+    return unvis & ~dup

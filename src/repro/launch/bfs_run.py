@@ -1,0 +1,83 @@
+"""Distributed-BFS driver CLI (the paper's workload as a service).
+
+    PYTHONPATH=src python -m repro.launch.bfs_run --devices 8 --grid 2x4 \
+        --scale 14 --ef 16 --roots 64 [--fold bitmap] [--direction]
+
+Forces host devices when asked for more than physically available (CPU
+container); on a TPU pod, drop --devices and bind --row-axes/--col-axes to
+the pod mesh."""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--grid", default="2x4")
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--ef", type=int, default=16)
+    ap.add_argument("--roots", type=int, default=64)
+    ap.add_argument("--fold", default="list", choices=["list", "bitmap"])
+    ap.add_argument("--direction", action="store_true")
+    ap.add_argument("--validate", type=int, default=4)
+    args = ap.parse_args()
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import AxisType
+
+    from repro.graphgen import rmat_edges
+    from repro.core import Grid2D, partition_2d, validate_bfs
+    from repro.core.partition import partition_2d_csr
+    from repro.core.bfs2d import BFS2D
+    from repro.core.direction import BFS2DDirection
+    from repro.core.types import LocalGraph2D
+    from repro.core.validate import count_component_edges, harmonic_mean
+
+    R, C = (int(x) for x in args.grid.split("x"))
+    n = 1 << args.scale
+    edges = rmat_edges(jax.random.key(1), args.scale, args.ef)
+    edges_np = np.asarray(edges)
+    mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    grid = Grid2D.for_vertices(n, R, C)
+    lg = partition_2d(edges_np, grid)
+    graph = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                         jnp.asarray(lg.nnz))
+    if args.direction:
+        csr = {k: jnp.asarray(v) for k, v in
+               partition_2d_csr(edges_np, grid).items()}
+        bfs = BFS2DDirection(grid, mesh, edge_chunk=16384)
+        run = lambda r: bfs.run(graph, csr, r)
+    else:
+        bfs = BFS2D(grid, mesh, edge_chunk=16384,
+                    fold_bitmap=(args.fold == "bitmap"))
+        run = lambda r: bfs.run(graph, r)
+
+    deg = np.bincount(edges_np[0], minlength=n)
+    roots = np.random.default_rng(7).choice(np.flatnonzero(deg > 0),
+                                            args.roots, replace=False)
+    jax.block_until_ready(run(int(roots[0])).level)
+    teps = []
+    for i, root in enumerate(roots):
+        t0 = time.perf_counter()
+        out = run(int(root))
+        jax.block_until_ready(out.level)
+        dt = time.perf_counter() - t0
+        lvl = np.asarray(out.level)[:n]
+        teps.append(count_component_edges(edges_np, lvl) / dt)
+        if i < args.validate:
+            validate_bfs(edges_np, lvl, np.asarray(out.pred)[:n], int(root))
+    print(f"grid={R}x{C} scale={args.scale} ef={args.ef} fold={args.fold} "
+          f"dir={args.direction}: harmonic TEPS {harmonic_mean(teps):.3e} "
+          f"({min(args.validate, len(roots))} validated)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   Set here only -- smoke tests and benches see the single real device.
+
+"""Multi-pod dry-run driver (deliverable e + the roofline sources for g).
+
+For every (architecture x input shape) cell and each production mesh
+(single-pod 16x16, multi-pod 2x16x16):
+    jax.jit(step, in_shardings, out_shardings).lower(*abstract_args).compile()
+then record memory_analysis() (proves per-chip fit), cost_analysis()
+(FLOPs/bytes for the roofline) and the parsed collective wire bytes.
+
+Results append to a JSON file (resumable: done cells are skipped), one
+record per (arch, shape, mesh).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def model_flops_global(arch, shape: str) -> float | None:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for training;
+    2 N D for inference passes (prefill/decode); None where ill-defined."""
+    if arch.family == "lm":
+        import importlib
+        mod = importlib.import_module(
+            "repro.configs." + arch.arch_id.replace("-", "_").replace(".", "_"))
+        cfg = mod.CONFIG
+        n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+        from repro.configs.lm_common import SHAPES
+        sh = SHAPES[shape]
+        if sh["kind"] == "train":
+            return 6.0 * n * sh["batch"] * sh["seq"]
+        if sh["kind"] == "prefill":
+            return 2.0 * n * sh["batch"] * sh["seq"]
+        return 2.0 * n * sh["batch"]          # decode: one token per seq
+    return None
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, results: dict,
+             out_path: str):
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh, mesh_axes
+    from repro.launch import roofline
+
+    key = f"{arch_id}|{shape}|{mesh_kind}"
+    if key in results and results[key].get("status") == "ok":
+        print(f"[skip] {key} (done)")
+        return
+    arch = get_arch(arch_id)
+    rec = {"arch": arch_id, "shape": shape, "mesh": mesh_kind,
+           "status": "running"}
+    if shape in arch.skip_shapes:
+        rec.update(status="skipped", reason=arch.skip_shapes[shape])
+        results[key] = rec
+        _flush(results, out_path)
+        print(f"[skip] {key}: {rec['reason']}")
+        return
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    axes = mesh_axes(mesh)
+    t0 = time.time()
+    try:
+        spec = arch.build_dryrun(shape, mesh, axes)
+        with mesh:
+            jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                             out_shardings=spec.out_shardings,
+                             donate_argnums=spec.donate_argnums)
+            lowered = jitted.lower(*spec.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            mf = model_flops_global(arch, shape)
+            rl = roofline.analyze(compiled, model_flops=mf,
+                                  n_chips=mesh.devices.size)
+        rec.update(
+            status="ok", note=spec.note,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                code_bytes=mem.generated_code_size_in_bytes),
+            roofline=rl.as_dict())
+        print(f"[ok]   {key}: compile={t_compile:.0f}s "
+              f"dom={rl.dominant} c={rl.compute_s:.3e} m={rl.memory_s:.3e} "
+              f"w={rl.collective_s:.3e}")
+    except Exception as e:  # noqa: BLE001 -- record and continue
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[FAIL] {key}: {type(e).__name__}: {e}")
+    results[key] = rec
+    _flush(results, out_path)
+
+
+def _flush(results, path):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch_id in archs:
+        arch = ARCHS[arch_id]
+        shapes = arch.shapes if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for mk in meshes:
+                run_cell(arch_id, shape, mk, results, args.out)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

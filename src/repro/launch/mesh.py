@@ -1,0 +1,38 @@
+"""Production mesh definition (a FUNCTION: importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Works under --xla_force_host_platform_device_count=512 for either mesh
+    (the single-pod mesh takes the first 256 placeholder devices)."""
+    import jax
+    from jax.sharding import AxisType
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax -- dryrun.py does this)")
+    if len(devs) == need:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axes,
+                axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(mesh):
+    """MeshAxes descriptor for a production mesh."""
+    from repro.configs.common import MeshAxes
+    if "pod" in mesh.axis_names:
+        return MeshAxes(dp=("pod", "data"), tp="model")
+    return MeshAxes(dp=("data",), tp="model")

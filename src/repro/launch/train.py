@@ -1,0 +1,75 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 50 \
+        [--reduced] [--ckpt-dir ckpts]
+
+On this CPU container only --reduced is practical (full configs are for the
+production mesh); the driver wires the full stack either way: config ->
+params -> sharded train step -> data pipeline -> fault-tolerant runner ->
+checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="ckpts")
+    args = ap.parse_args()
+
+    import importlib
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm as L
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import TrainConfig, make_train_step
+    from repro.train.train_step import init_state
+    from repro.data import synthetic_lm_batches
+    from repro.ckpt import CheckpointManager
+    from repro.runtime import StepRunner, RetryPolicy
+
+    mod = importlib.import_module(
+        "repro.configs." + args.arch.replace("-", "_").replace(".", "_"))
+    full = mod.CONFIG
+    cfg = L.LMConfig(
+        name=full.name + "-reduced", n_layers=2, d_model=128,
+        n_heads=min(4, full.n_heads), n_kv_heads=min(2, full.n_kv_heads),
+        d_head=32, d_ff=256, vocab=512,
+        attn_softcap=full.attn_softcap, logit_softcap=full.logit_softcap,
+        window_pattern=tuple(min(w, 32) for w in full.window_pattern),
+        post_norms=full.post_norms, tie_embeddings=full.tie_embeddings,
+        moe=None if full.moe is None else L.MoESettings(8, 2, 64, 1),
+        dtype=jnp.float32, remat=False)
+
+    params = L.init_params(cfg, jax.random.key(0))
+    tc = TrainConfig(optimizer=AdamWConfig(lr=3e-4, warmup_steps=10,
+                                           total_steps=args.steps))
+    step = jax.jit(make_train_step(
+        lambda p, b: L.loss_fn(cfg, p, b[0], b[1]), tc))
+    state = init_state(tc, params).tree()
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    runner = StepRunner(step, policy=RetryPolicy(), ckpt=ckpt, ckpt_every=25)
+
+    data = ((jnp.asarray(t), jnp.asarray(l)) for t, l in
+            synthetic_lm_batches(cfg.vocab, args.batch, args.seq,
+                                 n_batches=args.steps))
+    for i, batch in enumerate(data):
+        state, info = step(state, batch)
+        if i % 10 == 0:
+            print(f"step {i:4d} loss={float(info['loss']):.4f}")
+        if i % 25 == 0:
+            ckpt.save(i, state)
+    ckpt.wait()
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Minimal E(3)-equivariant algebra for l_max <= 2, in the CARTESIAN basis.
+
+Hardware adaptation (DESIGN.md): e3nn's spherical-irrep tensor products need
+Clebsch-Gordan tables and per-irrep segmented einsums -- gather-heavy and
+convention-sensitive.  For l <= 2 the same algebra is exactly expressible
+with Cartesian tensors, where every coupling path is a dense einsum (MXU
+friendly) and equivariance is manifest:
+
+  l=0  <-> scalar s
+  l=1  <-> vector v (3,)
+  l=2  <-> traceless symmetric matrix t (3, 3)
+
+Features: dict {"s": (N, C, 1)? -> (N, C), "v": (N, C, 3), "t": (N, C, 3, 3)}.
+Coupling paths used (a complete generating set for l<=2):
+  s*s->s   v.v->s    t:t->s
+  s*v->v   v x v->v  t@v->v
+  s*t->t   v(x)v->t  sym(t@t)->t  v(x)t-ish via t@v paths
+Radial envelopes weight each path per channel (NequIP-style).
+
+`spherical` helpers give Y1 = r_hat and Y2 = r_hat r_hat^T - I/3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I3 = jnp.eye(3)
+
+
+def traceless_sym(m):
+    """Project (..., 3, 3) onto traceless symmetric part (the l=2 subspace)."""
+    s = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    tr = jnp.trace(s, axis1=-2, axis2=-1)[..., None, None]
+    return s - tr * I3 / 3.0
+
+
+def sph(r):
+    """r: (..., 3) displacement -> (rhat (...,3), Y2 (...,3,3), d (...,))."""
+    d = jnp.linalg.norm(r, axis=-1)
+    rhat = r / jnp.maximum(d, 1e-9)[..., None]
+    y2 = rhat[..., :, None] * rhat[..., None, :] - I3 / 3.0
+    return rhat, y2, d
+
+
+def bessel_basis(d, n_rbf: int, cutoff: float):
+    """Radial Bessel basis sin(n pi d / rc) / d with polynomial envelope
+    (NequIP / DimeNet standard)."""
+    dn = jnp.clip(d / cutoff, 1e-6, 1.0)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rb = jnp.sin(jnp.pi * n * dn[..., None]) / dn[..., None]
+    # p=6 polynomial cutoff envelope
+    env = 1 - 28 * dn**6 + 48 * dn**7 - 21 * dn**8
+    return rb * env[..., None], env
+
+
+# ----------------------------------------------------------------------------
+# tensor-product paths: (features of j) x (edge harmonics), channelwise
+# weighted by radial coefficients w[...] of shape (E, C)
+# ----------------------------------------------------------------------------
+
+N_PATHS = 10
+
+
+def edge_tensor_product(feat_j, rhat, y2, w):
+    """feat_j: {"s": (E, C), "v": (E, C, 3), "t": (E, C, 3, 3)};
+    rhat (E, 3), y2 (E, 3, 3); w (E, C, N_PATHS) radial path weights.
+    Returns message dict with the same structure."""
+    s, v, t = feat_j["s"], feat_j["v"], feat_j["t"]
+    r1 = rhat[:, None, :]                      # (E, 1, 3)
+    Y2 = y2[:, None, :, :]                     # (E, 1, 3, 3)
+
+    out_s = (w[..., 0] * s
+             + w[..., 1] * jnp.einsum("eci,ei->ec", v, rhat)
+             + w[..., 2] * jnp.einsum("ecij,eij->ec", t, y2))
+    # matmul forms (not einsum) for the t-contractions: identical math, but
+    # dot_general batching stays canonical under vmap+grad (XLA verifier bug
+    # workaround, see dryrun notes)
+    tv = jnp.matmul(t, rhat[:, None, :, None])[..., 0]      # (E, C, 3)
+    out_v = (w[..., 3, None] * s[..., None] * r1
+             + w[..., 4, None] * v
+             + w[..., 5, None] * jnp.cross(v, jnp.broadcast_to(r1, v.shape))
+             + w[..., 6, None] * tv)
+    out_t = (w[..., 7, None, None] * s[..., None, None] * Y2
+             + w[..., 8, None, None] * t
+             + w[..., 9, None, None] * traceless_sym(
+                 v[..., :, None] * r1[..., None, :]))
+    return {"s": out_s, "v": out_v, "t": out_t}
+
+
+def self_tensor_product(f, w):
+    """Quadratic self-interaction (MACE's A x A): channelwise couplings of a
+    feature with itself; w (N, C, 6)."""
+    s, v, t = f["s"], f["v"], f["t"]
+    out_s = (w[..., 0] * s * s
+             + w[..., 1] * jnp.einsum("nci,nci->nc", v, v)
+             + w[..., 2] * jnp.einsum("ncij,ncij->nc", t, t))
+    out_v = (w[..., 3, None] * jnp.matmul(t, v[..., None])[..., 0])
+    out_t = (w[..., 4, None, None] * traceless_sym(
+                 v[..., :, None] * v[..., None, :])
+             + w[..., 5, None, None] * traceless_sym(jnp.matmul(t, t)))
+    return {"s": out_s, "v": out_v, "t": out_t}
+
+
+def linear_mix(f, ws, wv, wt):
+    """Per-irrep channel mixing (self-interaction): w*: (C_in, C_out).
+    tensordot+moveaxis (not einsum) keeps dot_general batching canonical
+    under vmap+grad (XLA verifier workaround, see dryrun notes)."""
+    v = jnp.moveaxis(jnp.tensordot(f["v"], wv, axes=[[-2], [0]]), -1, -2)
+    t = jnp.moveaxis(jnp.tensordot(f["t"], wt, axes=[[-3], [0]]), -1, -3)
+    return {"s": f["s"] @ ws, "v": v, "t": t}
+
+
+def gate(f, gv, gt):
+    """Equivariant gate: scalars -> silu; v/t scaled by sigmoid(gate
+    scalars).  gv/gt: (C_s, C) projections from scalar channels."""
+    s = jax.nn.silu(f["s"])
+    gvx = jax.nn.sigmoid(f["s"] @ gv)
+    gtx = jax.nn.sigmoid(f["s"] @ gt)
+    return {"s": s, "v": f["v"] * gvx[..., None],
+            "t": f["t"] * gtx[..., None, None]}
+
+
+def add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def zeros(n, c, dtype=jnp.float32):
+    return {"s": jnp.zeros((n, c), dtype), "v": jnp.zeros((n, c, 3), dtype),
+            "t": jnp.zeros((n, c, 3, 3), dtype)}
+
+
+def scatter_nodes(msg, dst, n, valid=None):
+    """Segment-sum each irrep component onto destination nodes."""
+    dst = jnp.where(valid, dst, n) if valid is not None else dst
+
+    def red(x):
+        z = jnp.zeros((n,) + x.shape[1:], x.dtype)
+        m = x if valid is None else jnp.where(
+            valid.reshape((-1,) + (1,) * (x.ndim - 1)), x, 0)
+        return z.at[dst].add(m, mode="drop")
+
+    return jax.tree.map(red, msg)

@@ -1,0 +1,70 @@
+"""EGNN [arXiv:2102.09844]: E(n)-equivariant message passing without
+spherical harmonics -- scalar messages from invariant distances + coordinate
+updates along relative displacements."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_in: int = 8
+
+
+def _mlp(ks, sizes):
+    return [jax.random.normal(k, (i, o), jnp.float32) / jnp.sqrt(i)
+            for k, i, o in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def _apply_mlp(ws, x):
+    for i, w in enumerate(ws):
+        x = x @ w
+        if i < len(ws) - 1:
+            x = jax.nn.silu(x)
+    return x
+
+
+def init_params(cfg: EGNNConfig, key):
+    ks = iter(jax.random.split(key, 10 * cfg.n_layers + 2))
+    d = cfg.d_hidden
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "msg": _mlp([next(ks)] * 3, [2 * d + 1, d, d]),
+            "coord": _mlp([next(ks)] * 3, [d, d, 1]),
+            "upd": _mlp([next(ks)] * 3, [2 * d, d, d]),
+        })
+    return {"embed": jax.random.normal(next(ks), (cfg.d_in, d)) / jnp.sqrt(cfg.d_in),
+            "layers": layers,
+            "readout": jax.random.normal(next(ks), (d, 1)) / jnp.sqrt(d)}
+
+
+def apply(cfg: EGNNConfig, params, feats, positions, edge_src, edge_dst,
+          edge_valid=None):
+    n = feats.shape[0]
+    h = feats @ params["embed"]
+    x = positions
+    src = jnp.clip(edge_src, 0, n - 1)
+    dst = jnp.clip(edge_dst, 0, n - 1)
+    for lp in params["layers"]:
+        rij = x[src] - x[dst]
+        d2 = jnp.sum(rij**2, axis=-1, keepdims=True)
+        m = _apply_mlp(lp["msg"], jnp.concatenate([h[src], h[dst], d2], -1))
+        if edge_valid is not None:
+            m = jnp.where(edge_valid[:, None], m, 0)
+        cw = _apply_mlp(lp["coord"], m)
+        dx = jnp.zeros_like(x).at[dst].add(rij * cw, mode="drop")
+        cnt = jnp.zeros((n,), x.dtype).at[dst].add(
+            jnp.where(edge_valid, 1., 0.) if edge_valid is not None
+            else jnp.ones_like(dst, x.dtype), mode="drop")
+        x = x + dx / jnp.maximum(cnt, 1)[:, None]
+        agg = jnp.zeros_like(h).at[dst].add(m, mode="drop")
+        h = h + _apply_mlp(lp["upd"], jnp.concatenate([h, agg], -1))
+    energy = jnp.sum(h @ params["readout"])
+    return energy, h, x

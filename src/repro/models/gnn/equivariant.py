@@ -1,0 +1,105 @@
+"""NequIP and MACE on the Cartesian l<=2 algebra (repro.models.gnn.e3).
+
+NequIP [arXiv:2101.03164]: per-edge tensor product of neighbour features with
+edge harmonics, radial-MLP path weights, segment-sum aggregation, gated
+nonlinearity, n_layers interaction blocks, per-atom scalar readout -> energy.
+
+MACE [arXiv:2206.07697]: one/two interaction layers building the A-basis
+(aggregated TP features), then higher-order B-basis via repeated
+self-tensor-products (correlation order 3 = two quadratic couplings),
+linear readout per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import e3
+
+
+@dataclasses.dataclass(frozen=True)
+class EquivConfig:
+    name: str
+    n_layers: int
+    d_hidden: int          # channels per irrep
+    n_rbf: int
+    cutoff: float
+    n_species: int = 8
+    correlation_order: int = 1   # 1 = NequIP; 3 = MACE
+    radial_hidden: int = 64
+
+
+def init_params(cfg: EquivConfig, key):
+    C, k = cfg.d_hidden, key
+    ks = iter(jax.random.split(key, 12 * cfg.n_layers + 8))
+
+    def dense(k, i, o, scale=None):
+        s = scale if scale else (1.0 / jnp.sqrt(i))
+        return jax.random.normal(k, (i, o), jnp.float32) * s
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        lp = {
+            "radial1": dense(next(ks), cfg.n_rbf, cfg.radial_hidden),
+            "radial2": dense(next(ks), cfg.radial_hidden,
+                             C * e3.N_PATHS),
+            "mix_s": dense(next(ks), C, C),
+            "mix_v": dense(next(ks), C, C),
+            "mix_t": dense(next(ks), C, C),
+            "gate_v": dense(next(ks), C, C),
+            "gate_t": dense(next(ks), C, C),
+        }
+        if cfg.correlation_order >= 2:
+            lp["stp_w"] = jax.random.normal(next(ks), (1, C, 6)) * 0.3
+        if cfg.correlation_order >= 3:
+            lp["stp_w2"] = jax.random.normal(next(ks), (1, C, 6)) * 0.3
+        layers.append(lp)
+    return {
+        "embed": dense(next(ks), cfg.n_species, C, scale=1.0),
+        "layers": layers,
+        "readout1": dense(next(ks), C, C),
+        "readout2": dense(next(ks), C, 1),
+    }
+
+
+def apply(cfg: EquivConfig, params, species, positions, edge_src, edge_dst,
+          edge_valid=None):
+    """species (N,) int; positions (N, 3); edges j=src -> i=dst.
+    Returns (energy scalar, per-node scalars)."""
+    n = species.shape[0]
+    C = cfg.d_hidden
+    f = e3.zeros(n, C)
+    f = {**f, "s": jnp.take(params["embed"], species, axis=0)}
+
+    r = positions[jnp.clip(edge_src, 0, n - 1)] - \
+        positions[jnp.clip(edge_dst, 0, n - 1)]
+    rhat, y2, d = e3.sph(r)
+    rbf, env = e3.bessel_basis(d, cfg.n_rbf, cfg.cutoff)
+    if edge_valid is not None:
+        rbf = jnp.where(edge_valid[:, None], rbf, 0)
+
+    for lp in params["layers"]:
+        w = jax.nn.silu(rbf @ lp["radial1"]) @ lp["radial2"]
+        w = w.reshape(-1, C, e3.N_PATHS)
+        fj = jax.tree.map(lambda x: x[jnp.clip(edge_src, 0, n - 1)], f)
+        msg = e3.edge_tensor_product(fj, rhat, y2, w)
+        agg = e3.scatter_nodes(msg, edge_dst, n, valid=edge_valid)
+        agg = e3.linear_mix(agg, lp["mix_s"], lp["mix_v"], lp["mix_t"])
+        if cfg.correlation_order >= 2:
+            agg = e3.add(agg, e3.self_tensor_product(agg, lp["stp_w"]))
+        if cfg.correlation_order >= 3:
+            agg = e3.add(agg, e3.self_tensor_product(agg, lp["stp_w2"]))
+        f = e3.add(f, e3.gate(agg, lp["gate_v"], lp["gate_t"]))
+
+    h = jax.nn.silu(f["s"] @ params["readout1"]) @ params["readout2"]
+    return jnp.sum(h), h[:, 0]
+
+
+def energy_and_forces(cfg: EquivConfig, params, species, positions, edge_src,
+                      edge_dst, edge_valid=None):
+    e, grad = jax.value_and_grad(
+        lambda pos: apply(cfg, params, species, pos, edge_src, edge_dst,
+                          edge_valid)[0])(positions)
+    return e, -grad

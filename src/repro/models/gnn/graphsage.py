@@ -1,0 +1,76 @@
+"""GraphSAGE [arXiv:1706.02216] -- mean aggregator, full-graph and sampled
+(block) modes.  Full-graph aggregation can run distributed on the paper's 2D
+expand/fold pattern via repro.core.spmm2d."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import gather_scatter
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int = 41
+    aggregator: str = "mean"
+
+
+def init_params(cfg: SAGEConfig, key):
+    ks = iter(jax.random.split(key, 2 * cfg.n_layers + 1))
+    dims = [cfg.d_in] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    for l in range(cfg.n_layers):
+        layers.append({
+            "w_self": jax.random.normal(next(ks), (dims[l], dims[l + 1])) / jnp.sqrt(dims[l]),
+            "w_neigh": jax.random.normal(next(ks), (dims[l], dims[l + 1])) / jnp.sqrt(dims[l]),
+        })
+    return {"layers": layers,
+            "out": jax.random.normal(next(ks), (cfg.d_hidden, cfg.n_classes)) / jnp.sqrt(cfg.d_hidden)}
+
+
+def apply_fullgraph(cfg: SAGEConfig, params, feats, edge_src, edge_dst,
+                    edge_valid=None, spmm=None):
+    """spmm: optional distributed aggregation fn h -> mean-agg(h)
+    (the 2D expand/fold SpMM); defaults to local segment ops."""
+    h = feats
+    n = feats.shape[0]
+    for lp in params["layers"]:
+        if spmm is None:
+            agg = gather_scatter(h, edge_src, edge_dst, n, reduce=cfg.aggregator,
+                                 valid=edge_valid)
+        else:
+            agg = spmm(h)
+        h = jax.nn.relu(h @ lp["w_self"] + agg @ lp["w_neigh"])
+    return h @ params["out"]
+
+
+def apply_block(cfg: SAGEConfig, params, block_feats, fanouts):
+    """Sampled minibatch: block_feats[k] = features of hop-k nodes, hop k has
+    B * prod(fanouts[:k]) rows.  Aggregates innermost-out."""
+    hs = list(block_feats)
+    for l, lp in enumerate(params["layers"]):
+        nxt = []
+        for k in range(len(hs) - 1):
+            f = fanouts[k]
+            neigh = hs[k + 1].reshape(hs[k].shape[0], f, -1).mean(axis=1)
+            nxt.append(jax.nn.relu(hs[k] @ lp["w_self"] + neigh @ lp["w_neigh"]))
+        hs = nxt
+    return hs[0] @ params["out"]
+
+
+def loss_fn(cfg, params, feats, edge_src, edge_dst, labels, edge_valid=None,
+            label_mask=None):
+    logits = apply_fullgraph(cfg, params, feats, edge_src, edge_dst, edge_valid)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = lse - ll
+    if label_mask is not None:
+        return jnp.sum(jnp.where(label_mask, nll, 0)) / jnp.maximum(
+            label_mask.sum(), 1)
+    return nll.mean()

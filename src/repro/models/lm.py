@@ -1,0 +1,406 @@
+"""Decoder-only LM family: dense (glm4, gemma2, h2o-danube) and MoE
+(kimi-k2, qwen2-moe) variants from one implementation.
+
+Pure-JAX (no flax): params are pytrees of jnp arrays; `param_shardings`
+returns a matching pytree of PartitionSpec for GSPMD.  Layers are stacked and
+scanned (compile time stays flat in depth); per-layer attention windows ride
+along as scanned xs (gemma2's local/global alternation, danube's SWA).
+
+Sharding scheme (DESIGN.md sec. 5): batch on ("pod","data"); tensor-parallel
+on "model" (attention heads / d_ff / vocab); MoE experts on "model" (EP) with
+the all_to_all dispatch implemented in models/moe.py on top of the same
+bucket-and-fold machinery as the BFS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    # EP divisibility: expert arrays are allocated at this count (phantom
+    # experts are masked out of routing) -- e.g. qwen2-moe 60 -> 64 on a
+    # 16-wide model axis.  None = n_experts.
+    n_experts_padded: int | None = None
+
+    @property
+    def e_alloc(self) -> int:
+        return self.n_experts_padded or self.n_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0          # glm4 uses 0.5 (partial rotary)
+    attn_softcap: Optional[float] = None   # gemma2: 50.0
+    logit_softcap: Optional[float] = None  # gemma2: 30.0
+    query_scale: Optional[float] = None    # gemma2: 1/sqrt(256)
+    window_pattern: tuple = (0,)        # cycled over layers; 0 = global attn
+    post_norms: bool = False            # gemma2 sandwich norms
+    tie_embeddings: bool = False
+    moe: Optional[MoESettings] = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def windows(self):
+        pat = self.window_pattern
+        return tuple(pat[l % len(pat)] for l in range(self.n_layers))
+
+    def param_count(self) -> int:
+        c = self.vocab * self.d_model
+        if not self.tie_embeddings:
+            c += self.vocab * self.d_model
+        per = (self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+               + self.n_heads * self.d_head * self.d_model)
+        if self.moe:
+            per += self.d_model * self.moe.n_experts
+            per += 3 * self.moe.n_experts * self.d_model * self.moe.d_ff_expert
+            per += 3 * self.d_model * self.moe.d_ff_expert * self.moe.n_shared
+        else:
+            per += 3 * self.d_model * self.d_ff
+        return c + self.n_layers * per
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        per_active = (self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+                      + self.n_heads * self.d_head * self.d_model
+                      + self.d_model * self.moe.n_experts
+                      + 3 * self.d_model * self.moe.d_ff_expert
+                      * (self.moe.top_k + self.moe.n_shared))
+        return 2 * self.vocab * self.d_model + self.n_layers * per_active
+
+
+# ----------------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key) -> dict:
+    L, d, H, KV, dh = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.d_head)
+    ks = jax.random.split(key, 12)
+    dt = cfg.dtype
+
+    def nrm(k, *shape):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(shape[-2] if len(shape) > 1 else d,
+                                           jnp.float32))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    p = {
+        "embed": nrm(ks[0], cfg.vocab, d),
+        "ln_f": jnp.ones((d,), dt),
+        "attn": {
+            "ln": jnp.ones((L, d), dt),
+            "wq": nrm(ks[1], L, d, H * dh),
+            "wk": nrm(ks[2], L, d, KV * dh),
+            "wv": nrm(ks[3], L, d, KV * dh),
+            "wo": nrm(ks[4], L, H * dh, d),
+        },
+    }
+    if cfg.post_norms:
+        p["attn"]["ln_post"] = jnp.ones((L, d), dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = nrm(ks[5], d, cfg.vocab)
+    if cfg.moe:
+        m = cfg.moe
+        p["mlp"] = {
+            "ln": jnp.ones((L, d), dt),
+            "router": nrm(ks[6], L, d, m.e_alloc).astype(jnp.float32),
+            "w1": nrm(ks[7], L, m.e_alloc, d, m.d_ff_expert),
+            "w3": nrm(ks[8], L, m.e_alloc, d, m.d_ff_expert),
+            "w2": nrm(ks[9], L, m.e_alloc, m.d_ff_expert, d),
+        }
+        if m.n_shared:
+            ffs = m.n_shared * m.d_ff_expert
+            p["mlp"]["sw1"] = nrm(ks[10], L, d, ffs)
+            p["mlp"]["sw3"] = nrm(ks[10], L, d, ffs)
+            p["mlp"]["sw2"] = nrm(ks[11], L, ffs, d)
+    else:
+        p["mlp"] = {
+            "ln": jnp.ones((L, d), dt),
+            "w1": nrm(ks[6], L, d, cfg.d_ff),
+            "w3": nrm(ks[7], L, d, cfg.d_ff),
+            "w2": nrm(ks[8], L, cfg.d_ff, d),
+        }
+    if cfg.post_norms:
+        p["mlp"]["ln_post"] = jnp.ones((L, d), dt)
+    return p
+
+
+def param_shardings(cfg: LMConfig, *, data_axes=("data",), model_axis="model",
+                    pod_axis=None) -> dict:
+    """PartitionSpec pytree matching init_params.
+
+    Weights: Megatron TP over `model_axis` (heads / ff / experts / vocab);
+    ZeRO-style optimizer sharding adds `data_axes` on the largest dim where
+    divisible (applied in repro/train).  Embedding is sharded on d_model so
+    token lookup stays gather-free (DESIGN.md sec. 5).
+    """
+    M = model_axis
+    s = {
+        "embed": P(None, M),
+        "ln_f": P(None),
+        "attn": {
+            "ln": P(None, None),
+            "wq": P(None, None, M),
+            "wk": P(None, None, M),
+            "wv": P(None, None, M),
+            "wo": P(None, M, None),
+        },
+    }
+    if cfg.post_norms:
+        s["attn"]["ln_post"] = P(None, None)
+    if not cfg.tie_embeddings:
+        s["unembed"] = P(None, None, ) if cfg.vocab % 8 else P(None, M)
+        s["unembed"] = P(None, M)
+    if cfg.moe:
+        s["mlp"] = {
+            "ln": P(None, None),
+            "router": P(None, None, None),
+            "w1": P(None, M, None, None),
+            "w3": P(None, M, None, None),
+            "w2": P(None, M, None, None),
+        }
+        if cfg.moe.n_shared:
+            s["mlp"]["sw1"] = P(None, None, M)
+            s["mlp"]["sw3"] = P(None, None, M)
+            s["mlp"]["sw2"] = P(None, M, None)
+    else:
+        s["mlp"] = {
+            "ln": P(None, None),
+            "w1": P(None, None, M),
+            "w3": P(None, None, M),
+            "w2": P(None, M, None),
+        }
+    if cfg.post_norms:
+        s["mlp"]["ln_post"] = P(None, None)
+    return s
+
+
+# ----------------------------------------------------------------------------
+# building blocks
+# ----------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * scale
+
+
+def rope(x, positions, theta, fraction):
+    """x: (..., T, n, dh); positions: (..., T)."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:rot]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos,
+                          x[..., rot:]], axis=-1)
+    return xr.astype(x.dtype)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def attention(q, k, v, q_pos, k_pos, *, window, softcap, scale, k_valid=None):
+    """q: (B, Tq, H, dh); k/v: (B, Tk, KV, dh).  Causal + optional sliding
+    window (window > 0) + optional logit softcap."""
+    B, Tq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Tq, KV, G, dh)
+    logits = jnp.einsum("btkgd,bskd->bktgs", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    logits = _softcap(logits, softcap)
+    causal = k_pos[:, None, :] <= q_pos[:, :, None]               # (B,Tq,Tk)
+    if window is not None:
+        inwin = jnp.where(window > 0,
+                          q_pos[:, :, None] - k_pos[:, None, :] < window,
+                          True)
+        causal = causal & inwin
+    if k_valid is not None:
+        causal = causal & k_valid[:, None, :]
+    mask = causal[:, None, :, None, :]                            # b1t1s
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bktgs,bskd->btkgd", w.astype(v.dtype), v)
+    return o.reshape(B, Tq, H * dh)
+
+
+def swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+# ----------------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------------
+
+def _layer(cfg: LMConfig, x, layer_params, window, positions, mesh=None):
+    ap, mp = layer_params["attn"], layer_params["mlp"]
+    B, T, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rmsnorm(x, ap["ln"])
+    q = (h @ ap["wq"]).reshape(B, T, H, dh)
+    k = (h @ ap["wk"]).reshape(B, T, KV, dh)
+    v = (h @ ap["wv"]).reshape(B, T, KV, dh)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    scale = cfg.query_scale if cfg.query_scale else dh ** -0.5
+    o = attention(q, k, v, positions, positions, window=window,
+                  softcap=cfg.attn_softcap, scale=scale)
+    o = o @ ap["wo"]
+    if cfg.post_norms:
+        o = rmsnorm(o, ap["ln_post"])
+    x = x + o
+    h = rmsnorm(x, mp["ln"])
+    if cfg.moe:
+        y, aux = moe_lib.moe_apply(h.reshape(B * T, d), mp, cfg.moe, mesh=mesh)
+        y = y.reshape(B, T, d)
+        if cfg.moe.n_shared:
+            y = y + swiglu(h, mp["sw1"], mp["sw3"], mp["sw2"])
+    else:
+        y, aux = swiglu(h, mp["w1"], mp["w3"], mp["w2"]), 0.0
+    if cfg.post_norms:
+        y = rmsnorm(y, mp["ln_post"])
+    return x + y, aux
+
+
+def forward(cfg: LMConfig, params, tokens, mesh=None):
+    """tokens (B, T) -> logits (B, T, V)."""
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype) if cfg.tie_embeddings else x
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    windows = jnp.asarray(cfg.windows, jnp.int32)
+
+    stacked = {"attn": {k: v for k, v in params["attn"].items()},
+               "mlp": {k: v for k, v in params["mlp"].items()}}
+
+    def body(x, xs):
+        lp, w = xs
+        fn = functools.partial(_layer, cfg, mesh=mesh)
+        if cfg.remat:
+            fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        x, aux = fn(x, lp, w, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, (stacked, windows))
+    x = rmsnorm(x, params["ln_f"])
+    un = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ un.astype(cfg.dtype)).astype(jnp.float32)
+    logits = _softcap(logits, cfg.logit_softcap)
+    return logits, jnp.sum(auxes)
+
+
+def loss_fn(cfg: LMConfig, params, tokens, labels, mesh=None):
+    logits, aux = forward(cfg, params, tokens, mesh=mesh)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.sum(jnp.where(mask, lse - ll, 0.0)) / jnp.maximum(
+        jnp.sum(mask), 1)
+    return nll + 1e-2 * aux
+
+
+# ----------------------------------------------------------------------------
+# decode (serving)
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """KV cache pytree.  For pure-SWA models (all windows > 0) the cache is a
+    ring buffer of the window size -- this is what makes 500k-token decode
+    feasible (DESIGN.md sec. 6)."""
+    win = max(cfg.windows) if all(w > 0 for w in cfg.windows) else 0
+    W = min(max_seq, win) if win else max_seq
+    L, KV, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((L, batch, W, KV, dh), cfg.dtype),
+        "v": jnp.zeros((L, batch, W, KV, dh), cfg.dtype),
+        "pos": jnp.zeros((L, batch, W), jnp.int32) - 1,
+    }
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens, pos, mesh=None):
+    """One greedy decode step.  tokens (B,), pos scalar int32 (current index).
+    Returns (next_tokens (B,), new_cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    windows = jnp.asarray(cfg.windows, jnp.int32)
+    W = cache["k"].shape[2]
+    slot = pos % W
+
+    stacked = {"attn": params["attn"], "mlp": params["mlp"]}
+
+    def body(x, xs):
+        lp, w, kc, vc, pc = xs
+        ap, mp = lp["attn"], lp["mlp"]
+        H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        h = rmsnorm(x, ap["ln"])
+        q = rope((h @ ap["wq"]).reshape(B, 1, H, dh), positions,
+                 cfg.rope_theta, cfg.rope_fraction)
+        k = rope((h @ ap["wk"]).reshape(B, 1, KV, dh), positions,
+                 cfg.rope_theta, cfg.rope_fraction)
+        v = (h @ ap["wv"]).reshape(B, 1, KV, dh)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        pc = jax.lax.dynamic_update_slice_in_dim(
+            pc, positions[:, :1], slot, axis=1)
+        scale = cfg.query_scale if cfg.query_scale else dh ** -0.5
+        o = attention(q, kc, vc, positions, pc, window=w,
+                      softcap=cfg.attn_softcap, scale=scale,
+                      k_valid=pc >= 0)
+        o = o @ ap["wo"]
+        if cfg.post_norms:
+            o = rmsnorm(o, ap["ln_post"])
+        x = x + o
+        h = rmsnorm(x, mp["ln"])
+        if cfg.moe:
+            y, _ = moe_lib.moe_apply(h.reshape(B, -1), mp, cfg.moe, mesh=mesh)
+            y = y.reshape(B, 1, -1)
+            if cfg.moe.n_shared:
+                y = y + swiglu(h, mp["sw1"], mp["sw3"], mp["sw2"])
+        else:
+            y = swiglu(h, mp["w1"], mp["w3"], mp["w2"])
+        if cfg.post_norms:
+            y = rmsnorm(y, mp["ln_post"])
+        return x + y, (kc, vc, pc)
+
+    x, (kc, vc, pc) = jax.lax.scan(
+        body, x, (stacked, windows, cache["k"], cache["v"], cache["pos"]))
+    x = rmsnorm(x, params["ln_f"])
+    un = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = _softcap((x @ un.astype(cfg.dtype)).astype(jnp.float32),
+                      cfg.logit_softcap)
+    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return nxt, {"k": kc, "v": vc, "pos": pc}

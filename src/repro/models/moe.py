@@ -1,0 +1,200 @@
+"""Expert-parallel MoE layer (kimi-k2, qwen2-moe).
+
+The dispatch is literally the paper's fold exchange applied to tokens
+instead of vertices: bucket each (token, expert) copy by OWNER shard
+(repro.core.frontier.bucket_append -- the same sort-based compaction that
+replaces atomicInc in the BFS), all_to_all the buckets along the expert
+axis, run the local grouped-GEMMs, and all_to_all back.
+
+Capacity-based (GShard-style): copies beyond a bucket's capacity are dropped
+and contribute zero output.  Router is fp32; aux load-balance loss follows
+Switch (E * sum(f_e * p_e)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.frontier import bucket_append
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEShard:
+    """How to run the MoE: tokens sharded over token_axes, experts over
+    expert_axis (EP), optional FSDP of expert weights over fsdp_axis, and
+    optional int8 dispatch quantisation.  None mesh = reference path."""
+    mesh: object = None
+    token_axes: tuple = ()
+    expert_axis: Optional[str] = None
+    fsdp_axis: Optional[str] = None
+    quant_dispatch: bool = False
+
+    @property
+    def ep(self) -> int:
+        if self.mesh is None or self.expert_axis is None:
+            return 1
+        return dict(zip(self.mesh.axis_names,
+                        self.mesh.devices.shape))[self.expert_axis]
+
+
+def _route(x, router_w, top_k, n_real=None):
+    logits = x.astype(jnp.float32) @ router_w
+    if n_real is not None and n_real < router_w.shape[-1]:
+        # phantom padding experts (EP divisibility) never receive traffic
+        mask = jnp.arange(router_w.shape[-1]) < n_real
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: fraction routed vs mean prob, per expert
+    E = router_w.shape[-1]
+    f = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(topi.size, 1)
+    aux = E * jnp.sum(f * probs.mean(0))
+    return topi.astype(jnp.int32), topv, aux
+
+
+def _grouped_ffn(buf, mask, w1, w3, w2):
+    """buf: (E_loc, cap_e, d); SwiGLU per expert."""
+    h = jax.nn.silu(jnp.einsum("ekd,edf->ekf", buf, w1)) * \
+        jnp.einsum("ekd,edf->ekf", buf, w3)
+    y = jnp.einsum("ekf,efd->ekd", h, w2)
+    return jnp.where(mask[..., None], y, 0)
+
+
+def _moe_local(x, router_w, w1, w3, w2, *, top_k: int, ep: int,
+               capacity_factor: float, expert_axis=None, cap_e_mult: int = 4,
+               n_real=None, quant_dispatch: bool = False, fsdp_axis=None):
+    """Device-local body (EP=1 degenerates to the reference path)."""
+    if fsdp_axis is not None:
+        # ZeRO-3/FSDP: expert weights live sharded on d_model across the
+        # data axis; gather just-in-time (freed after the layer)
+        w1 = jax.lax.all_gather(w1, fsdp_axis, axis=1, tiled=True)
+        w3 = jax.lax.all_gather(w3, fsdp_axis, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2, fsdp_axis, axis=2, tiled=True)
+    N, d = x.shape
+    E_loc = w1.shape[0]
+    topi, topv, aux = _route(x, router_w, top_k, n_real)
+
+    copies = N * top_k
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), top_k)
+    e_flat = topi.reshape(-1)
+    w_flat = topv.reshape(-1).astype(x.dtype)
+
+    cap_s = max(8, int(math.ceil(copies / ep * capacity_factor)))
+    peer = e_flat // E_loc
+    idx0 = jnp.arange(copies, dtype=jnp.int32)
+    dst = jnp.full((ep, cap_s), -1, jnp.int32)
+    dst, _ = bucket_append(dst, jnp.zeros((ep,), jnp.int32), idx0, peer,
+                           jnp.ones((copies,), bool), ep)
+    s_valid = dst >= 0
+    dsafe = jnp.where(s_valid, dst, 0)
+    send_x = jnp.where(s_valid[..., None], x[tok[dsafe]], 0)
+    send_e = jnp.where(s_valid, e_flat[dsafe] % E_loc, 0)
+
+    if ep > 1:
+        if quant_dispatch:
+            # int8 a2a with per-copy scales: halves dispatch wire vs bf16
+            sc = jnp.max(jnp.abs(send_x), axis=-1, keepdims=True) / 127.0
+            q = jnp.round(send_x / jnp.maximum(sc, 1e-9)).astype(jnp.int8)
+            q = jax.lax.all_to_all(q, expert_axis, 0, 0).reshape(ep, cap_s, d)
+            sc = jax.lax.all_to_all(sc, expert_axis, 0, 0).reshape(ep, cap_s, 1)
+            recv_x = (q.astype(x.dtype) * sc.astype(x.dtype))
+        else:
+            recv_x = jax.lax.all_to_all(send_x, expert_axis, 0, 0).reshape(
+                ep, cap_s, d)
+        recv_e = jax.lax.all_to_all(send_e, expert_axis, 0, 0).reshape(ep, cap_s)
+        recv_v = jax.lax.all_to_all(s_valid, expert_axis, 0, 0).reshape(ep, cap_s)
+    else:
+        recv_x, recv_e, recv_v = send_x, send_e, s_valid
+
+    # group received copies by local expert
+    flat = ep * cap_s
+    cap_e = min(flat, max(8, int(math.ceil(flat / E_loc)) * cap_e_mult))
+    gidx = jnp.full((E_loc, cap_e), -1, jnp.int32)
+    gidx, _ = bucket_append(gidx, jnp.zeros((E_loc,), jnp.int32),
+                            jnp.arange(flat, dtype=jnp.int32),
+                            recv_e.reshape(-1), recv_v.reshape(-1), E_loc)
+    g_valid = gidx >= 0
+    gsafe = jnp.where(g_valid, gidx, 0)
+    buf = jnp.where(g_valid[..., None], recv_x.reshape(flat, d)[gsafe], 0)
+
+    y = _grouped_ffn(buf, g_valid, w1, w3, w2)
+
+    y_recv = jnp.zeros((flat, d), x.dtype).at[
+        jnp.where(g_valid, gidx, flat).reshape(-1)].add(
+            y.reshape(-1, d), mode="drop")
+    y_recv = y_recv.reshape(ep, cap_s, d)
+
+    if ep > 1:
+        if quant_dispatch:
+            sc = jnp.max(jnp.abs(y_recv), axis=-1, keepdims=True) / 127.0
+            q = jnp.round(y_recv / jnp.maximum(sc, 1e-9)).astype(jnp.int8)
+            q = jax.lax.all_to_all(q, expert_axis, 0, 0).reshape(ep, cap_s, d)
+            sc = jax.lax.all_to_all(sc, expert_axis, 0, 0).reshape(ep, cap_s, 1)
+            y_send = q.astype(x.dtype) * sc.astype(x.dtype)
+        else:
+            y_send = jax.lax.all_to_all(y_recv, expert_axis, 0, 0).reshape(
+                ep, cap_s, d)
+    else:
+        y_send = y_recv
+
+    contrib = jnp.where(s_valid[..., None],
+                        y_send * w_flat[dsafe][..., None], 0)
+    out = jnp.zeros((N, d), x.dtype).at[
+        jnp.where(s_valid, tok[dsafe], N).reshape(-1)].add(
+            contrib.reshape(-1, d), mode="drop")
+    return out, aux
+
+
+def moe_apply(x, mp, cfg, mesh: Optional[MoEShard] = None):
+    """x: (N, d) global token activations.  Returns (y (N, d), aux scalar).
+
+    mp holds router/w1/w3/w2 (global, sharded by param_shardings);
+    mesh (MoEShard) selects the shard_map EP path.
+    """
+    if mesh is None or mesh.mesh is None or mesh.ep == 1:
+        return _moe_local(x, mp["router"], mp["w1"], mp["w3"], mp["w2"],
+                          top_k=cfg.top_k, ep=1,
+                          capacity_factor=cfg.capacity_factor,
+                          cap_e_mult=getattr(cfg, "cap_e_mult", 4),
+                          n_real=cfg.n_experts)
+
+    ep = mesh.ep
+    n_shards = 1
+    for a in mesh.token_axes:
+        n_shards *= dict(zip(mesh.mesh.axis_names, mesh.mesh.devices.shape))[a]
+    N, d = x.shape
+    pad = (-N) % n_shards
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)])
+
+    def body(xl, router_w, w1, w3, w2):
+        y, aux = _moe_local(xl, router_w, w1, w3, w2, top_k=cfg.top_k, ep=ep,
+                            capacity_factor=cfg.capacity_factor,
+                            expert_axis=mesh.expert_axis,
+                            cap_e_mult=getattr(cfg, "cap_e_mult", 4),
+                            n_real=cfg.n_experts,
+                            quant_dispatch=mesh.quant_dispatch,
+                            fsdp_axis=mesh.fsdp_axis)
+        axes = tuple(dict.fromkeys(mesh.token_axes + (mesh.expert_axis,)))
+        return y, jax.lax.pmean(aux, axes)
+
+    tk = P(mesh.token_axes)
+    fa = mesh.fsdp_axis
+    w13 = P(mesh.expert_axis, fa, None)
+    w2s = P(mesh.expert_axis, None, fa)
+    # check_vma=True: the replication checker is what makes the transpose
+    # (backward pass) insert the psums for the replicated router and the
+    # (pod, data)-replicated expert weights.
+    y, aux = jax.shard_map(
+        body, mesh=mesh.mesh,
+        in_specs=(tk, P(None, None), w13, w13, w2s),
+        out_specs=(tk, P()), check_vma=True)(
+            x, mp["router"], mp["w1"], mp["w3"], mp["w2"])
+    return y[:N], aux

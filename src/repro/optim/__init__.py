@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.grad_compress import (topk_compress_init, topk_compress,
+                                       int8_compress, int8_decompress)

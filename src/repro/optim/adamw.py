@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay + linear-warmup cosine schedule.
+Optimizer state is a pytree twin of params; the train step shards it
+ZeRO-style over the data axes (see repro/train/train_step.py)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    gn = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = schedule(cfg, step)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nhat = nu / (1 - cfg.b2 ** step.astype(jnp.float32))
+        newp = p.astype(jnp.float32) - lr * (
+            mhat / (jnp.sqrt(nhat) + cfg.eps)
+            + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    newp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gn, "lr": lr}

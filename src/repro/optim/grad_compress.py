@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two codecs, composable with the train step's gradient sync:
+  * top-k sparsification with ERROR FEEDBACK (memory pytree carries the
+    residual; Stich et al. / Deep Gradient Compression) -- used across the
+    "pod" axis where links are the scarcest;
+  * int8 range quantisation (per-tensor scale) for the dense remainder.
+
+Both are pure functions so they compose with pjit/shard_map; the all-reduce
+of the compressed representation is an all_gather of (idx, val) pairs (top-k)
+or an int8 psum emulation (quantise -> sum fp32 -> requantise).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _topk_one(g, err, frac):
+    g = g.astype(jnp.float32) + err
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    val, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    sparse_flat = jnp.zeros_like(flat).at[idx].set(kept)
+    new_err = flat - sparse_flat
+    return (idx.astype(jnp.int32), kept), new_err.reshape(g.shape)
+
+
+def topk_compress(grads, err_state, *, frac=0.01):
+    """Returns (compressed list of (idx, val) in leaf order, new
+    error-feedback pytree, densify fn)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = treedef.flatten_up_to(err_state)
+    results = [_topk_one(g, e, frac) for g, e in zip(leaves, errs)]
+    comp = [r[0] for r in results]
+    err = jax.tree.unflatten(treedef, [r[1] for r in results])
+
+    def densify(comp_list, like):
+        lv, td = jax.tree.flatten(like)
+        dense = [jnp.zeros((p.size,), jnp.float32).at[idx].set(val)
+                 .reshape(p.shape) for (idx, val), p in zip(comp_list, lv)]
+        return jax.tree.unflatten(td, dense)
+
+    return comp, err, densify
+
+
+def int8_compress(g):
+    """Per-tensor symmetric int8: returns (q int8, scale f32)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127) \
+        .astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale

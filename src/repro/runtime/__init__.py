@@ -1,0 +1,2 @@
+from repro.runtime.fault import RetryPolicy, StepRunner, StragglerWatchdog, \
+    FaultInjector

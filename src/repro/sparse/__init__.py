@@ -1,0 +1,4 @@
+from repro.sparse.segment import (segment_sum, segment_mean, segment_max,
+                                  gather_scatter, degree_norm)
+from repro.sparse.embedding_bag import embedding_bag
+from repro.sparse.sampler import NeighborSampler

@@ -1,0 +1,38 @@
+"""EmbeddingBag: JAX has no native nn.EmbeddingBag -- built here from
+jnp.take + segment_sum (multi-hot bags with optional per-sample weights),
+as the recsys substrate requires."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_sum
+
+
+def embedding_bag(table, indices, offsets=None, *, weights=None, mode="sum"):
+    """table: (V, d); either
+         indices (B, L) fixed-size bags (padded with -1), or
+         flat indices (NNZ,) + offsets (B+1,) CSR-style ragged bags.
+    Returns (B, d)."""
+    if offsets is None:
+        B, L = indices.shape
+        valid = indices >= 0
+        emb = jnp.take(table, jnp.clip(indices, 0, table.shape[0] - 1), axis=0)
+        if weights is not None:
+            emb = emb * weights[..., None]
+        emb = jnp.where(valid[..., None], emb, 0)
+        out = emb.sum(axis=1)
+        if mode == "mean":
+            out = out / jnp.maximum(valid.sum(axis=1), 1)[:, None]
+        return out
+    B = offsets.shape[0] - 1
+    nnz = indices.shape[0]
+    seg = jnp.searchsorted(offsets[1:], jnp.arange(nnz, dtype=jnp.int32),
+                           side="right").astype(jnp.int32)
+    emb = jnp.take(table, jnp.clip(indices, 0, table.shape[0] - 1), axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    out = segment_sum(emb, seg, B)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.diff(offsets), 1)
+        out = out / cnt[:, None]
+    return out

@@ -1,0 +1,2 @@
+from repro.train.train_step import TrainConfig, make_train_step, TrainState
+from repro.train.serve_step import make_serve_step

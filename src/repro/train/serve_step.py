@@ -1,0 +1,17 @@
+"""Serving-side step factories: batched decode with a persistent KV cache.
+
+The dry-run lowers these for the decode_* / long_* shapes: the cache is an
+input/output (donated), one token is produced per call."""
+from __future__ import annotations
+
+from typing import Callable
+
+
+def make_serve_step(decode_fn: Callable):
+    """decode_fn(params, cache, tokens, pos) -> (next_tokens, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        nxt, cache = decode_fn(params, cache, tokens, pos)
+        return nxt, cache
+
+    return serve_step

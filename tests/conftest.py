@@ -1,0 +1,17 @@
+# NOTE: do NOT set XLA_FLAGS/device-count overrides here -- smoke tests and
+# benches must see the single real CPU device.  Multi-device integration tests
+# spawn subprocesses (see tests/dist/).
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,25 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (assignment requirement f)."""
+import pytest
+
+from repro.configs import ARCHS, get_arch
+
+ALL = sorted(ARCHS)
+
+
+def test_registry_has_all_assigned():
+    want = {"kimi-k2-1t-a32b", "qwen2-moe-a2.7b", "glm4-9b", "gemma2-2b",
+            "h2o-danube-1.8b", "nequip", "mace", "graphsage-reddit", "egnn",
+            "deepfm", "bfs-rmat"}
+    assert want <= set(ARCHS)
+
+
+def test_cells_count():
+    """40 assigned cells: 5 LM x 4 + 4 GNN x 4 + 1 recsys x 4."""
+    cells = sum(len(a.shapes) for a in ARCHS.values() if a.family != "bfs")
+    assert cells == 40
+
+
+@pytest.mark.parametrize("arch_id", ALL)
+def test_smoke(arch_id):
+    get_arch(arch_id).smoke()

@@ -1,0 +1,80 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Grid2D, bfs_reference_py, bfs_single, partition_2d,
+                        validate_bfs, count_component_edges)
+from repro.core.bfs2d import BFS2D
+from repro.core.types import LocalGraph2D
+from repro.graphgen import rmat_edges, build_csc
+from jax.sharding import AxisType
+
+
+def _graph(scale=8, ef=8, seed=0):
+    edges = rmat_edges(jax.random.key(seed), scale, ef)
+    n = 1 << scale
+    co, ri = build_csc(edges, n)
+    return edges, n, co, ri
+
+
+def test_bfs_single_matches_python():
+    edges, n, co, ri = _graph()
+    for root in (0, 7, 200):
+        lr, pr = bfs_reference_py(co, ri, root, n)
+        lvl, pred = bfs_single(co, ri, root)
+        assert (np.asarray(lvl) == lr).all()
+        validate_bfs(np.asarray(edges), np.asarray(lvl), np.asarray(pred), root)
+
+
+def test_bfs_single_ring():
+    n = 16
+    src = np.arange(n)
+    edges = jnp.asarray(np.stack([np.concatenate([src, (src + 1) % n]),
+                                  np.concatenate([(src + 1) % n, src])]),
+                        jnp.int32)
+    co, ri = build_csc(edges, n)
+    lvl, _ = bfs_single(co, ri, 0)
+    want = np.minimum(np.arange(n), n - np.arange(n))
+    assert (np.asarray(lvl) == want).all()
+
+
+def test_bfs_single_disconnected():
+    # two components: 0-1, 2-3
+    edges = jnp.asarray([[0, 1, 2, 3], [1, 0, 3, 2]], jnp.int32)
+    co, ri = build_csc(edges, 4)
+    lvl, _ = bfs_single(co, ri, 0)
+    assert np.asarray(lvl).tolist() == [0, 1, -1, -1]
+
+
+def test_validate_catches_corruption():
+    edges, n, co, ri = _graph()
+    lvl, pred = bfs_reference_py(co, ri, 3, n)
+    bad = lvl.copy()
+    vis = np.flatnonzero(bad > 0)
+    bad[vis[0]] += 1
+    with pytest.raises(AssertionError):
+        validate_bfs(np.asarray(edges), bad, pred, 3)
+
+
+def test_component_edge_count():
+    edges = jnp.asarray([[0, 1, 2, 3], [1, 0, 3, 2]], jnp.int32)
+    co, ri = build_csc(edges, 4)
+    lvl, _ = bfs_reference_py(co, ri, 0, 4)
+    assert count_component_edges(np.asarray(edges), lvl) == 1
+
+
+@pytest.mark.parametrize("fold_bitmap", [False, True])
+def test_bfs2d_single_cell_mesh(fold_bitmap):
+    edges, n, co, ri = _graph(scale=7, ef=6, seed=4)
+    mesh = jax.make_mesh((1, 1), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    grid = Grid2D.for_vertices(n, 1, 1)
+    lg = partition_2d(np.asarray(edges), grid)
+    bfs = BFS2D(grid, mesh, edge_chunk=512, fold_bitmap=fold_bitmap)
+    g = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                     jnp.asarray(lg.nnz))
+    out = bfs.run(g, 9)
+    ref, _ = bfs_reference_py(co, ri, 9, n)
+    assert (np.asarray(out.level)[:n] == ref).all()
+    validate_bfs(np.asarray(edges), np.asarray(out.level)[:n],
+                 np.asarray(out.pred)[:n], 9)

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graphgen import rmat_edges, build_csc, build_csr, degrees
+from repro.graphgen.build import build_csc_np
+
+
+def test_rmat_shape_and_range():
+    e = rmat_edges(jax.random.key(0), 10, 16)
+    n = 1 << 10
+    assert e.shape == (2, 2 * 16 * n)  # undirected doubling
+    assert e.dtype == jnp.int32
+    assert int(e.min()) >= 0 and int(e.max()) < n
+
+
+def test_rmat_deterministic():
+    a = rmat_edges(jax.random.key(3), 8, 8)
+    b = rmat_edges(jax.random.key(3), 8, 8)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_rmat_symmetric():
+    e = np.asarray(rmat_edges(jax.random.key(1), 8, 4))
+    half = e.shape[1] // 2
+    assert (e[0, :half] == e[1, half:]).all()
+    assert (e[1, :half] == e[0, half:]).all()
+
+
+def test_rmat_degree_skew():
+    """R-MAT graphs are heavy-tailed: max degree >> mean degree."""
+    n = 1 << 12
+    e = rmat_edges(jax.random.key(0), 12, 16)
+    deg = np.asarray(degrees(e[0], n))
+    assert deg.max() > 8 * deg.mean()
+
+
+def test_build_csc_roundtrip():
+    rng = np.random.default_rng(0)
+    n, E = 50, 400
+    edges = jnp.asarray(rng.integers(0, n, size=(2, E)), jnp.int32)
+    co, ri = build_csc(edges, n)
+    assert int(co[-1]) == E
+    # every edge recoverable
+    src = np.repeat(np.arange(n), np.diff(np.asarray(co)))
+    got = set(zip(src.tolist(), np.asarray(ri).tolist()))
+    want = set(zip(np.asarray(edges[0]).tolist(), np.asarray(edges[1]).tolist()))
+    assert got == want
+
+    co2, ri2 = build_csc_np(np.asarray(edges), n)
+    assert (np.asarray(co) == co2).all()
+    # same column contents (order within a column may differ across sorts)
+    for u in range(n):
+        a = sorted(np.asarray(ri)[int(co[u]):int(co[u + 1])].tolist())
+        b = sorted(ri2[co2[u]:co2[u + 1]].tolist())
+        assert a == b
+
+
+def test_build_csr_is_transpose():
+    rng = np.random.default_rng(1)
+    n, E = 30, 200
+    edges = jnp.asarray(rng.integers(0, n, size=(2, E)), jnp.int32)
+    ro, ci = build_csr(edges, n)
+    dst = np.repeat(np.arange(n), np.diff(np.asarray(ro)))
+    got = set(zip(np.asarray(ci).tolist(), dst.tolist()))
+    want = set(zip(np.asarray(edges[0]).tolist(), np.asarray(edges[1]).tolist()))
+    assert got == want

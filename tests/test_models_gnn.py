@@ -1,0 +1,137 @@
+"""GNN model tests incl. E(3)-equivariance property tests (the Cartesian
+l<=2 algebra makes rotation equivariance exact up to float error)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import e3
+from repro.models.gnn.equivariant import (EquivConfig, init_params, apply,
+                                          energy_and_forces)
+from repro.models.gnn import egnn, graphsage
+from repro.sparse import NeighborSampler, embedding_bag
+from repro.graphgen import rmat_edges, build_csr
+
+
+def _rot(key):
+    """Random rotation matrix via QR."""
+    a = jax.random.normal(key, (3, 3))
+    q, r = jnp.linalg.qr(a)
+    q = q * jnp.sign(jnp.diag(r))[None, :]
+    return q * jnp.linalg.det(q)  # det +1
+
+
+def _mol(key, n=12, cutoff=2.5):
+    pos = jax.random.normal(key, (n, 3)) * 1.2
+    d = jnp.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+    adj = (d < cutoff) & ~jnp.eye(n, dtype=bool)
+    src, dst = jnp.nonzero(adj, size=n * n, fill_value=0)
+    valid = adj[src, dst]
+    return pos, src.astype(jnp.int32), dst.astype(jnp.int32), valid
+
+
+@pytest.mark.parametrize("corr", [1, 3])  # 1=NequIP-style, 3=MACE-style
+def test_equivariant_energy_invariance(corr):
+    cfg = EquivConfig(name="t", n_layers=2, d_hidden=8, n_rbf=4, cutoff=2.5,
+                      correlation_order=corr)
+    key = jax.random.key(0)
+    params = init_params(cfg, key)
+    pos, src, dst, valid = _mol(jax.random.key(1))
+    spec = jax.random.randint(jax.random.key(2), (12,), 0, cfg.n_species)
+    e0, _ = apply(cfg, params, spec, pos, src, dst, valid)
+    for i in range(3):
+        R = _rot(jax.random.key(10 + i))
+        t = jax.random.normal(jax.random.key(20 + i), (3,))
+        e1, _ = apply(cfg, params, spec, pos @ R.T + t, src, dst, valid)
+        np.testing.assert_allclose(float(e0), float(e1), rtol=2e-4)
+
+
+def test_equivariant_force_covariance():
+    """F(Rx) = R F(x): forces rotate with the frame."""
+    cfg = EquivConfig(name="t", n_layers=2, d_hidden=8, n_rbf=4, cutoff=2.5,
+                      correlation_order=3)
+    params = init_params(cfg, jax.random.key(0))
+    pos, src, dst, valid = _mol(jax.random.key(1))
+    spec = jax.random.randint(jax.random.key(2), (12,), 0, cfg.n_species)
+    _, f0 = energy_and_forces(cfg, params, spec, pos, src, dst, valid)
+    R = _rot(jax.random.key(5))
+    _, f1 = energy_and_forces(cfg, params, spec, pos @ R.T, src, dst, valid)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0 @ R.T),
+                               rtol=5e-3, atol=1e-5)
+
+
+def test_traceless_sym_projects():
+    m = jax.random.normal(jax.random.key(0), (4, 3, 3))
+    t = e3.traceless_sym(m)
+    np.testing.assert_allclose(np.asarray(jnp.trace(t, axis1=-2, axis2=-1)),
+                               0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(
+        jnp.swapaxes(t, -1, -2)), atol=1e-6)
+
+
+def test_egnn_equivariance():
+    cfg = egnn.EGNNConfig(name="t", n_layers=3, d_hidden=16, d_in=4)
+    params = egnn.init_params(cfg, jax.random.key(0))
+    pos, src, dst, valid = _mol(jax.random.key(1))
+    feats = jax.random.normal(jax.random.key(2), (12, 4))
+    e0, h0, x0 = egnn.apply(cfg, params, feats, pos, src, dst, valid)
+    R = _rot(jax.random.key(3))
+    t = jnp.asarray([1., -2., 0.5])
+    e1, h1, x1 = egnn.apply(cfg, params, feats, pos @ R.T + t, src, dst, valid)
+    np.testing.assert_allclose(float(e0), float(e1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), rtol=1e-3,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x0 @ R.T + t),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_graphsage_fullgraph_and_grad():
+    n = 1 << 8
+    edges = rmat_edges(jax.random.key(0), 8, 4)
+    cfg = graphsage.SAGEConfig(name="t", n_layers=2, d_hidden=16, d_in=8,
+                               n_classes=5)
+    params = graphsage.init_params(cfg, jax.random.key(1))
+    feats = jax.random.normal(jax.random.key(2), (n, 8))
+    labels = jax.random.randint(jax.random.key(3), (n,), 0, 5)
+    loss = graphsage.loss_fn(cfg, params, feats, edges[0], edges[1], labels)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: graphsage.loss_fn(cfg, p, feats, edges[0],
+                                             edges[1], labels))(params)
+    assert float(jnp.abs(g["layers"][0]["w_neigh"]).sum()) > 0
+
+
+def test_graphsage_sampled_block():
+    n = 1 << 8
+    edges = np.asarray(rmat_edges(jax.random.key(0), 8, 4))
+    ro, ci = build_csr(jnp.asarray(edges), n)
+    sampler = NeighborSampler(np.asarray(ro), np.asarray(ci), seed=0)
+    seeds = np.arange(16)
+    block = sampler.sample_block(seeds, [5, 3])
+    assert block["nodes"][1].shape == (16 * 5,)
+    assert block["nodes"][2].shape == (16 * 5 * 3,)
+    cfg = graphsage.SAGEConfig(name="t", n_layers=2, d_hidden=16, d_in=8,
+                               n_classes=5)
+    params = graphsage.init_params(cfg, jax.random.key(1))
+    feats = jax.random.normal(jax.random.key(2), (n, 8))
+    bf = [feats[jnp.asarray(nd)] for nd in block["nodes"]]
+    logits = graphsage.apply_block(cfg, params, bf, [5, 3])
+    assert logits.shape == (16, 5)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@given(mode=st.sampled_from(["sum", "mean"]))
+@settings(max_examples=10, deadline=None)
+def test_embedding_bag_matches_manual(mode):
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, 50, size=(6, 5)), jnp.int32)
+    out = embedding_bag(table, idx, mode=mode)
+    for b in range(6):
+        sel = [int(i) for i in np.asarray(idx[b]) if i >= 0]
+        if not sel:
+            continue
+        man = np.asarray(table)[sel].sum(0)
+        if mode == "mean":
+            man = man / len(sel)
+        np.testing.assert_allclose(np.asarray(out[b]), man, rtol=1e-5)

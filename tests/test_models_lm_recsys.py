@@ -1,0 +1,112 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm as L
+from repro.models.recsys import deepfm as D
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return L.LMConfig(name="tiny", n_layers=4, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_head=16, d_ff=128, vocab=97,
+                      window_pattern=(8, 0), attn_softcap=50.,
+                      logit_softcap=30., post_norms=True, tie_embeddings=True,
+                      dtype=jnp.float32, remat=False)
+
+
+def test_lm_forward_shapes_nonan(dense_cfg):
+    p = L.init_params(dense_cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 97)
+    logits, aux = L.forward(dense_cfg, p, toks)
+    assert logits.shape == (2, 16, 97)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_lm_decode_matches_forward(dense_cfg):
+    p = L.init_params(dense_cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 97)
+    logits, _ = L.forward(dense_cfg, p, toks)
+    cache = L.init_cache(dense_cfg, 2, 32)
+    step = jax.jit(lambda c, t, i: L.decode_step(dense_cfg, p, c, t, i))
+    for t in range(16):
+        nxt, cache = step(cache, toks[:, t], jnp.int32(t))
+    assert (np.asarray(nxt) == np.asarray(jnp.argmax(logits[:, -1], -1))).all()
+
+
+def test_lm_swa_ring_buffer_decode():
+    """Pure-SWA model: cache smaller than the sequence; decode must still
+    match the (windowed) forward pass."""
+    cfg = L.LMConfig(name="swa", n_layers=2, d_model=32, n_heads=2,
+                     n_kv_heads=2, d_head=16, d_ff=64, vocab=31,
+                     window_pattern=(4,), dtype=jnp.float32, remat=False)
+    p = L.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 12), 0, 31)
+    logits, _ = L.forward(cfg, p, toks)
+    cache = L.init_cache(cfg, 1, 64)
+    assert cache["k"].shape[2] == 4  # ring buffer = window
+    for t in range(12):
+        nxt, cache = L.decode_step(cfg, p, cache, toks[:, t], jnp.int32(t))
+    assert (np.asarray(nxt) == np.asarray(jnp.argmax(logits[:, -1], -1))).all()
+
+
+def test_lm_moe_train_grads():
+    cfg = L.LMConfig(name="tmoe", n_layers=2, d_model=32, n_heads=2,
+                     n_kv_heads=2, d_head=16, d_ff=64, vocab=61,
+                     moe=L.MoESettings(n_experts=8, top_k=2, d_ff_expert=32,
+                                       n_shared=1),
+                     dtype=jnp.float32, remat=False)
+    p = L.init_params(cfg, jax.random.key(2))
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, 61)
+    g = jax.grad(lambda p: L.loss_fn(cfg, p, toks, toks))(p)
+    assert float(jnp.abs(g["mlp"]["w1"]).sum()) > 0
+    assert float(jnp.abs(g["mlp"]["router"]).sum()) > 0
+    assert float(jnp.abs(g["mlp"]["sw1"]).sum()) > 0
+
+
+def test_lm_param_count_sanity(dense_cfg):
+    p = L.init_params(dense_cfg, jax.random.key(0))
+    n = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(p))
+    norms = 2 * 4 * 64 + 2 * 4 * 64 + 64  # pre-norms + post-norms + ln_f
+    assert n == dense_cfg.param_count() + norms
+
+
+def test_deepfm_forward_and_loss():
+    cfg = D.DeepFMConfig(name="t", embed_dim=4, mlp=(16, 16),
+                         vocabs=(8, 8, 16, 32))
+    p = D.init_params(cfg, jax.random.key(0))
+    idx = jnp.asarray(np.random.default_rng(0).integers(
+        0, 8, size=(6, 4)), jnp.int32)
+    logits = D.forward(cfg, p, idx)
+    assert logits.shape == (6,)
+    y = jnp.asarray([0., 1., 0., 1., 1., 0.])
+    loss = D.loss_fn(cfg, p, idx, y)
+    g = jax.grad(lambda p: D.loss_fn(cfg, p, idx, y))(p)
+    assert np.isfinite(float(loss))
+    assert float(jnp.abs(g["table"]).sum()) > 0
+
+
+def test_deepfm_fm_matches_pairwise():
+    """FM identity: 0.5((Σv)² - Σv²) == Σ_{i<j} <v_i, v_j>."""
+    cfg = D.DeepFMConfig(name="t", embed_dim=3, mlp=(4,), vocabs=(5, 5, 5))
+    p = D.init_params(cfg, jax.random.key(0))
+    # zero out mlp + linear + bias to isolate the FM term
+    p["mlp"] = [jnp.zeros_like(w) for w in p["mlp"]]
+    p["linear"] = jnp.zeros_like(p["linear"])
+    idx = jnp.asarray([[1, 2, 3]], jnp.int32)
+    got = float(D.forward(cfg, p, idx)[0])
+    rows = np.asarray(idx[0]) + np.asarray(D.field_offsets(cfg))
+    v = np.asarray(p["table"])[rows]
+    want = sum(float(v[i] @ v[j]) for i in range(3) for j in range(i + 1, 3))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_deepfm_retrieval_scoring():
+    cfg = D.DeepFMConfig(name="t", embed_dim=4, mlp=(8,), vocabs=(8, 8, 16, 32))
+    p = D.init_params(cfg, jax.random.key(0))
+    user = jnp.asarray([1, 2], jnp.int32)
+    cands = jnp.asarray(np.random.default_rng(1).integers(
+        0, 16, size=(100, 2)), jnp.int32)
+    s = D.score_candidates(cfg, p, user, cands)
+    assert s.shape == (100,) and np.isfinite(np.asarray(s)).all()

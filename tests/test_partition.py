@@ -1,0 +1,84 @@
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Grid2D, partition_2d, partition_1d
+from repro.core.partition import (local_row, local_col, owner_of, row2col,
+                                  global_from_row, global_from_col,
+                                  partition_2d_csr)
+from repro.graphgen import rmat_edges
+
+
+@given(R=st.integers(1, 4), C=st.integers(1, 4), logS=st.integers(0, 4))
+@settings(max_examples=30, deadline=None)
+def test_index_maps_roundtrip(R, C, logS):
+    grid = Grid2D(R, C, R * C * (1 << logS))
+    g = np.arange(grid.n)
+    i, j = owner_of(g, grid)
+    assert ((0 <= i) & (i < R)).all() and ((0 <= j) & (j < C)).all()
+    lr = local_row(g, grid)
+    assert (global_from_row(lr, i, grid) == g).all()
+    lc = local_col(g, grid)
+    assert (global_from_col(lc, j, grid) == g).all()
+    # ROW2COL on the owner matches LOCAL_COL
+    assert (row2col(lr, i, j, grid) == lc).all()
+
+
+def test_partition_2d_properties():
+    """Paper sec 2.2 properties (i) and (ii)."""
+    edges = np.asarray(rmat_edges(jax.random.key(0), 9, 8))
+    grid = Grid2D.for_vertices(1 << 9, 2, 4)
+    lg = partition_2d(edges, grid)
+    assert int(lg.nnz.sum()) == edges.shape[1]
+    S, ncl = grid.S, grid.n_cols_local
+    # reconstruct and check each edge landed at the right processor
+    for i in range(grid.R):
+        for j in range(grid.C):
+            co, ri = lg.col_off[i, j], lg.row_idx[i, j]
+            nnz = int(lg.nnz[i, j])
+            src_lc = np.repeat(np.arange(ncl), np.diff(co))
+            v_lr = ri[:nnz]
+            g_u = global_from_col(src_lc, j, grid)            # property (i)
+            # every local row block m*S.. maps to a vertex owned in grid row i
+            m = v_lr // S
+            g_v = (m * grid.R + i) * S + v_lr % S             # property (ii)
+            oi, oj = owner_of(g_v, grid)
+            assert (oi == i).all(), "dst owner must be in same grid row"
+            assert (g_u // ncl == j).all(), "src col must be in column block"
+
+
+def test_partition_2d_csr_matches_csc():
+    edges = np.asarray(rmat_edges(jax.random.key(2), 8, 6))
+    grid = Grid2D.for_vertices(1 << 8, 2, 2)
+    lg = partition_2d(edges, grid)
+    csr = partition_2d_csr(edges, grid)
+    assert (csr["nnz"] == np.asarray(lg.nnz)).all()
+    for i in range(2):
+        for j in range(2):
+            nnz = int(lg.nnz[i, j])
+            src = np.repeat(np.arange(grid.n_cols_local),
+                            np.diff(lg.col_off[i, j]))
+            a = set(zip(src.tolist(), lg.row_idx[i, j][:nnz].tolist()))
+            dst = np.repeat(np.arange(grid.n_rows_local),
+                            np.diff(csr["row_off"][i, j]))
+            b = set(zip(csr["col_idx"][i, j][:nnz].tolist(), dst.tolist()))
+            assert a == b
+
+
+def test_partition_1d_modulo():
+    edges = np.asarray(rmat_edges(jax.random.key(1), 8, 4))
+    n, Pn = 1 << 8, 4
+    p = partition_1d(edges, n, Pn)
+    assert int(p["nnz"].sum()) == edges.shape[1]
+    for proc in range(Pn):
+        src_lc = np.repeat(np.arange(n // Pn), np.diff(p["col_off"][proc]))
+        g_u = src_lc * Pn + proc
+        assert (g_u % Pn == proc).all()
+
+
+def test_partition_overflow_raises():
+    edges = np.asarray(rmat_edges(jax.random.key(1), 8, 4))
+    grid = Grid2D.for_vertices(1 << 8, 2, 2)
+    with pytest.raises(ValueError):
+        partition_2d(edges, grid, pad_to=1)
