@@ -1,0 +1,29 @@
+"""Fold-codec head-to-head (DESIGN.md sec. 4; Romera & Froning 2017 analog):
+the SAME scale-14 searches under each fold wire format, reporting TEPS and
+measured bytes-per-edge, and asserting the outputs are bit-identical (the
+lvl_sum/pred_sum checksums must agree across the worker processes)."""
+from benchmarks.common import emit, run_worker
+
+R, C, SCALE, EF, ROOTS = 2, 2, 14, 16, 3
+CODECS = ("list", "bitmap", "delta")
+
+
+def main():
+    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
+             "mean_s", "levels", "fold", "fold_bytes_per_edge", "lvl_sum",
+             "pred_sum")]
+    sums = {}
+    for codec in CODECS:
+        out = run_worker("bfs_worker.py", "2d", R, C, SCALE, EF, ROOTS, codec)
+        row = tuple(out.strip().split(","))
+        rows.append(row)
+        sums[codec] = (row[11], row[12])            # (lvl_sum, pred_sum)
+    # emit BEFORE the equality gate: the rows are the diagnostic when it fires
+    emit(rows, "fold_codecs")
+    if len(set(sums.values())) != 1:
+        raise AssertionError(f"fold codecs disagree on levels/preds: {sums}")
+    print(f"# codecs agree: lvl_sum,pred_sum = {sums['list']}")
+
+
+if __name__ == "__main__":
+    main()

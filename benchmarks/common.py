@@ -1,6 +1,7 @@
-"""Shared benchmark helpers: timing, CSV emission, subprocess workers."""
+"""Shared benchmark helpers: timing, CSV/JSON emission, subprocess workers."""
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -18,6 +19,28 @@ def emit(rows, name):
             print(line)
             f.write(line + "\n")
     return path
+
+
+def emit_json(obj, name):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_csv(name):
+    """Rows of bench_out/<name>.csv as dicts (header = first row), or []."""
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        lines = [l.strip().split(",") for l in f if l.strip()]
+    if len(lines) < 2:
+        return []
+    hdr = lines[0]
+    return [dict(zip(hdr, row)) for row in lines[1:]]
 
 
 def timeit(fn, *args, warmup=1, iters=3):

@@ -1,36 +1,107 @@
 """Benchmark orchestrator: one module per paper table/figure.
-Each prints CSV rows (also written to bench_out/<name>.csv).
+Each prints CSV rows (also written to bench_out/<name>.csv); a final pass
+folds everything into machine-readable bench_out/BENCH_bfs.json so the perf
+trajectory (TEPS, bytes-per-edge per fold codec, per-phase times) is
+trackable across PRs.
 
   fig3   weak scaling (TEPS vs devices, scale/device fixed)
   fig4   strong scaling (fixed graph)
   fig5/6 compute-vs-transfer + four-phase breakdown
-  fig7   1D (original code) vs 2D comparison
+  fig7   1D baseline (degenerate 1xP grid of the shared engine) vs 2D
+  fold   list/bitmap/delta fold codec head-to-head (+ equality check)
   fig8/t2 atomic-style vs sort/compact expansion
   table3 real-world graph analogs
   kernels Pallas-kernel parity + oracle timings
 """
+import os
 import sys
 import time
 import traceback
 
+from benchmarks import common
+
+
+def _f(x):
+    try:
+        return float(x)
+    except (TypeError, ValueError):
+        return None
+
+
+def write_bench_json() -> None:
+    """Aggregate whatever CSVs exist into bench_out/BENCH_bfs.json."""
+    from benchmarks.common import emit_json, read_csv
+
+    def teps_rows(name):
+        return [
+            {"variant": r.get("variant"), "grid": f'{r.get("R")}x{r.get("C")}',
+             "scale": _f(r.get("scale")), "ef": _f(r.get("ef")),
+             "harmonic_TEPS": _f(r.get("harmonic_TEPS")),
+             "mean_s": _f(r.get("mean_s")), "levels": _f(r.get("levels")),
+             "fold": r.get("fold"),
+             "fold_bytes_per_edge": _f(r.get("fold_bytes_per_edge"))}
+            for r in read_csv(name)]
+
+    codecs = {}
+    for r in read_csv("fold_codecs"):
+        codecs[r["fold"]] = {
+            "harmonic_TEPS": _f(r.get("harmonic_TEPS")),
+            "bytes_per_edge": _f(r.get("fold_bytes_per_edge")),
+            "lvl_sum": r.get("lvl_sum"), "pred_sum": r.get("pred_sum"),
+            "scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}'}
+
+    phases = [
+        {"scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}',
+         "expand_s": _f(r.get("expand_s")), "scan_s": _f(r.get("scan_s")),
+         "fold_s": _f(r.get("fold_s")), "update_s": _f(r.get("update_s")),
+         "transfer_frac": _f(r.get("transfer_frac"))}
+        for r in read_csv("fig5_6_breakdown")]
+
+    out = {
+        "schema": "BENCH_bfs/v1",
+        "teps": {
+            "weak_scaling": teps_rows("fig3_weak_scaling"),
+            "strong_scaling": teps_rows("fig4_strong_scaling"),
+            "one_d_vs_two_d": teps_rows("fig7_1d_vs_2d"),
+        },
+        "fold_codecs": codecs,
+        # null (not true) when no comparison ran -- an absent suite must not
+        # read as a passed bit-exactness gate
+        "codecs_agree": (len({(v["lvl_sum"], v["pred_sum"])
+                              for v in codecs.values()}) == 1
+                         if codecs else None),
+        "phases": phases,
+    }
+    path = emit_json(out, "BENCH_bfs")
+    print(f"\nwrote {path}")
+
 
 def main() -> None:
     from benchmarks import (bfs_weak_scaling, bfs_strong_scaling,
-                            bfs_breakdown, bfs_1d_vs_2d,
+                            bfs_breakdown, bfs_1d_vs_2d, bfs_fold_codecs,
                             bfs_expansion_variants, bfs_realworld,
                             kernel_bench)
+    # (suite label, entry point, CSV name the suite emits)
     suites = [
-        ("fig3_weak_scaling", bfs_weak_scaling.main),
-        ("fig4_strong_scaling", bfs_strong_scaling.main),
-        ("fig5_6_breakdown", bfs_breakdown.main),
-        ("fig7_1d_vs_2d", bfs_1d_vs_2d.main),
-        ("table2_fig8_expansion", bfs_expansion_variants.main),
-        ("table3_realworld", bfs_realworld.main),
-        ("kernel_bench", kernel_bench.main),
+        ("fig3_weak_scaling", bfs_weak_scaling.main, "fig3_weak_scaling"),
+        ("fig4_strong_scaling", bfs_strong_scaling.main,
+         "fig4_strong_scaling"),
+        ("fig5_6_breakdown", bfs_breakdown.main, "fig5_6_breakdown"),
+        ("fig7_1d_vs_2d", bfs_1d_vs_2d.main, "fig7_1d_vs_2d"),
+        ("fold_codecs", bfs_fold_codecs.main, "fold_codecs"),
+        ("table2_fig8_expansion", bfs_expansion_variants.main,
+         "table2_fig8_expansion_variants"),
+        ("table3_realworld", bfs_realworld.main, "table3_realworld"),
+        ("kernel_bench", kernel_bench.main, "kernel_bench"),
     ]
     failures = 0
-    for name, fn in suites:
+    for name, fn, csv_name in suites:
         print(f"\n=== {name} ===")
+        # drop the previous run's CSV first: a failing suite must leave a
+        # GAP in BENCH_bfs.json, not silently contribute stale numbers
+        stale = os.path.join(common.OUT_DIR, f"{csv_name}.csv")
+        if os.path.exists(stale):
+            os.remove(stale)
         t0 = time.time()
         try:
             fn()
@@ -38,6 +109,7 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"--- {name} FAILED:\n{traceback.format_exc()[-1500:]}")
+    write_bench_json()
     if failures:
         sys.exit(1)
 

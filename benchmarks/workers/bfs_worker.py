@@ -1,9 +1,19 @@
 """Worker: run distributed BFS (2D / 1D / direction-optimised) on forced host
-devices and print CSV: variant,R,C,scale,ef,roots,harmonic_TEPS,mean_s,
-levels, plus per-phase breakdown columns when --phases.
+devices and print one CSV row:
+
+  variant,R,C,scale,ef,roots,harmonic_TEPS,mean_s,levels,fold,
+  fold_bytes_per_edge,lvl_sum,pred_sum
+
+fold_bytes_per_edge = measured fold-exchange traffic (codec wire bytes *
+devices * fold exchanges, summed over roots) / input edges in the searched
+components -- the paper's bytes-per-edge communication metric.  Blank for
+the `dir` variant: bottom-up levels exchange raw int32 parents instead of
+the fold codec and the per-level split is not visible host-side.  lvl_sum /
+pred_sum checksum the LAST root's output so benchmarks/bfs_fold_codecs.py
+can assert codec equivalence across separate worker processes.
 
 Usage: bfs_worker.py VARIANT R C SCALE EF N_ROOTS [fold]
-  VARIANT in {2d, 1d, dir}
+  VARIANT in {2d, 1d, dir};  fold in {list, bitmap, delta}
 """
 import os
 import sys
@@ -20,10 +30,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.dist.compat import make_mesh
 from repro.graphgen import rmat_edges
-from repro.core import Grid2D, partition_2d, partition_1d
+from repro.core import Grid2D, partition_2d
 from repro.core.partition import partition_2d_csr
 from repro.core.bfs2d import BFS2D
 from repro.core.bfs1d import BFS1D
@@ -35,27 +45,31 @@ n = 1 << SCALE
 edges = rmat_edges(jax.random.key(42), SCALE, EF)
 edges_np = np.asarray(edges)
 
+
+def as_graph(lg):
+    return LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                        jnp.asarray(lg.nnz))
+
+
 if VARIANT == "1d":
-    mesh = jax.make_mesh((R * C,), ("p",), axis_types=(AxisType.Auto,))
-    part = partition_1d(edges_np, n, R * C)
-    bfs = BFS1D(n, mesh, axes=("p",), edge_chunk=16384)
-    runner = lambda root: bfs.run(jnp.asarray(part["col_off"]),
-                                  jnp.asarray(part["row_idx"]), root)
+    mesh = make_mesh((R * C,), ("p",))
+    bfs = BFS1D(n, mesh, axes=("p",), edge_chunk=16384, fold_codec=FOLD)
+    graph = as_graph(partition_2d(edges_np, bfs.grid))
+    runner = lambda root: bfs.run(graph, root)
 else:
-    mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((R, C), ("r", "c"))
     grid = Grid2D.for_vertices(n, R, C)
-    lg = partition_2d(edges_np, grid)
-    graph = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
-                         jnp.asarray(lg.nnz))
+    graph = as_graph(partition_2d(edges_np, grid))
     if VARIANT == "dir":
         csr = {k: jnp.asarray(v) for k, v in
                partition_2d_csr(edges_np, grid).items()}
-        bfs = BFS2DDirection(grid, mesh, edge_chunk=16384)
+        bfs = BFS2DDirection(grid, mesh, edge_chunk=16384, fold_codec=FOLD)
         runner = lambda root: bfs.run(graph, csr, root)
     else:
-        bfs = BFS2D(grid, mesh, edge_chunk=16384,
-                    fold_bitmap=(FOLD == "bitmap"))
+        bfs = BFS2D(grid, mesh, edge_chunk=16384, fold_codec=FOLD)
         runner = lambda root: bfs.run(graph, root)
+
+fold_wire = bfs.engine.codec.wire_bytes(bfs.grid)   # per device per level
 
 rng = np.random.default_rng(0)
 # pick roots from non-isolated vertices
@@ -67,6 +81,7 @@ out = runner(int(roots[0]))  # compile warmup
 jax.block_until_ready(out.level)
 
 teps, times, levels = [], [], []
+fold_bytes, comp_edges = 0, 0
 for root in roots:
     t0 = time.perf_counter()
     out = runner(int(root))
@@ -76,6 +91,19 @@ for root in roots:
     teps.append(m / dt)
     times.append(dt)
     levels.append(int(out.n_levels))
+    # the engine exits with lvl = iterations + 1 -> n_levels - 1 folds/search
+    # (dir is excluded: its bottom-up levels bypass the fold codec entirely)
+    if VARIANT != "dir":
+        fold_bytes += fold_wire * bfs.grid.P * (int(out.n_levels) - 1)
+    comp_edges += m
 
+lvl_sum = int(np.asarray(out.level)[:n].astype(np.int64).sum())
+pred_sum = int(np.asarray(out.pred)[:n].astype(np.int64).sum())
+# direction-optimised levels that run bottom-up exchange raw int32 parents,
+# not the fold codec, and the split is not visible host-side -- leave the
+# bytes column blank rather than report a codec-scaled fiction
+bpe = ("" if VARIANT == "dir"
+       else f"{fold_bytes / max(comp_edges, 1):.3f}")
 print(f"{VARIANT},{R},{C},{SCALE},{EF},{N_ROOTS},"
-      f"{harmonic_mean(teps):.3e},{np.mean(times):.4f},{max(levels)}")
+      f"{harmonic_mean(teps):.3e},{np.mean(times):.4f},{max(levels)},"
+      f"{FOLD},{bpe},{lvl_sum},{pred_sum}")

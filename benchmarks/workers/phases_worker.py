@@ -17,15 +17,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.dist import compat
 from repro.graphgen import rmat_edges
 from repro.core import Grid2D, partition_2d
 from repro.core import frontier as F
 
 n = 1 << SCALE
 edges = rmat_edges(jax.random.key(42), SCALE, EF)
-mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((R, C), ("r", "c"))
 grid = Grid2D.for_vertices(n, R, C)
 lg = partition_2d(np.asarray(edges), grid)
 S = grid.S
@@ -34,8 +35,8 @@ dev = P(("r",), ("c",))
 
 
 def sm(f, in_specs, out_specs):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False))
+    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, check_vma=False))
 
 
 # phase 1: expand exchange (all_gather along rows)

@@ -2,8 +2,9 @@
 over an R x C device grid, Graph500-style -- 64 searches from random roots,
 validated output, harmonic-mean TEPS (paper sec. 4).
 
-    python examples/distributed_bfs.py [R] [C] [scale] [ef] [n_roots]
+    python examples/distributed_bfs.py [R] [C] [scale] [ef] [n_roots] [fold]
 
+fold in {list, bitmap, delta} picks the fold wire codec (DESIGN.md sec. 4).
 Runs on forced host devices (R*C); on a real TPU pod the same code runs with
 row_axes/col_axes bound to the pod mesh (see repro/launch/bfs_run.py).
 """
@@ -15,6 +16,7 @@ C = int(sys.argv[2]) if len(sys.argv) > 2 else 4
 SCALE = int(sys.argv[3]) if len(sys.argv) > 3 else 14
 EF = int(sys.argv[4]) if len(sys.argv) > 4 else 16
 N_ROOTS = int(sys.argv[5]) if len(sys.argv) > 5 else 64
+FOLD = sys.argv[6] if len(sys.argv) > 6 else "list"
 
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R * C}"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -24,8 +26,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.dist.compat import make_mesh
 from repro.graphgen import rmat_edges
 from repro.core import Grid2D, partition_2d, validate_bfs
 from repro.core.bfs2d import BFS2D
@@ -40,7 +42,7 @@ def main():
     edges_np = np.asarray(edges)
 
     t0 = time.perf_counter()
-    mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((R, C), ("r", "c"))
     grid = Grid2D.for_vertices(n, R, C)
     lg = partition_2d(edges_np, grid)
     graph = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
@@ -48,7 +50,7 @@ def main():
     print(f"2D partition in {time.perf_counter() - t0:.1f}s "
           f"(max {int(lg.nnz.max()):,} edges/device)")
 
-    bfs = BFS2D(grid, mesh, edge_chunk=16384)
+    bfs = BFS2D(grid, mesh, edge_chunk=16384, fold_codec=FOLD)
     deg = np.bincount(edges_np[0], minlength=n)
     roots = np.random.default_rng(7).choice(np.flatnonzero(deg > 0),
                                             N_ROOTS, replace=False)

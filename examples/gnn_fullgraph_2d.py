@@ -13,8 +13,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.dist.compat import make_mesh
 from repro.graphgen import rmat_edges
 from repro.core import Grid2D, partition_2d
 from repro.core.spmm2d import make_spmm2d
@@ -26,7 +26,7 @@ def main():
     R = C = 2
     scale, d_in, classes = 10, 16, 5
     n = 1 << scale
-    mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((R, C), ("r", "c"))
     grid = Grid2D.for_vertices(n, R, C)
     edges = rmat_edges(jax.random.key(0), scale, 8)
     lg = partition_2d(np.asarray(edges), grid)

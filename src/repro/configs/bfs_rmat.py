@@ -52,13 +52,13 @@ def build_bfs_dryrun(_cfg, shape, mesh, axes: MeshAxes):
 
 def smoke_bfs():
     import numpy as np
-    from jax.sharding import AxisType
+    from repro.dist.compat import make_mesh
     from repro.graphgen import rmat_edges, build_csc
     from repro.core import bfs_reference_py, partition_2d
     from repro.core.types import LocalGraph2D
     n = 1 << 7
     edges = rmat_edges(jax.random.key(0), 7, 6)
-    mesh = jax.make_mesh((1, 1), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("r", "c"))
     grid = Grid2D.for_vertices(n, 1, 1)
     lg = partition_2d(np.asarray(edges), grid)
     bfs = BFS2D(grid, mesh, edge_chunk=256)

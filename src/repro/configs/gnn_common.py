@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.common import DryrunSpec, MeshAxes
 from repro.core.types import Grid2D
+from repro.dist.compat import shard_map
 from repro.models.gnn import graphsage as GS
 from repro.models.gnn import egnn as EG
 from repro.models.gnn import equivariant as EQ
@@ -126,7 +127,7 @@ def build_sage_dryrun(cfg: GS.SAGEConfig, shape, mesh, axes: MeshAxes):
                 ll = jnp.take_along_axis(logits, lab[:, None], 1)[:, 0]
                 return jax.lax.pmean((lse - ll).mean(), (*dp, axes.tp))[None]
 
-            out = jax.shard_map(
+            out = shard_map(
                 body, mesh=mesh,
                 in_specs=(dev, dev, xspec, xspec),
                 out_specs=P((*dp, axes.tp)), check_vma=False)(co, ri, x, lab)

@@ -1,137 +1,50 @@
-"""The paper's ORIGINAL 1D code ([1]/[2]) as the comparison baseline.
+"""The paper's 1D comparison baseline as the DEGENERATE 1 x P grid.
 
-Vertices are assigned by the modulo rule (g -> processor g % P); every BFS
-level requires an all-to-all among ALL P processors (O(P) exchanges vs the 2D
-code's 2 x O(sqrt P)), and sender-side duplicate filtering needs a full-size
-integer map (n bits per device) -- the two scalability limits the 2D code
-removes (paper sec. 2.1).  Predecessors travel inline (u, v), as in [1].
+The original 1D code ([1]/[2]) has the two scalability limits the 2D code
+removes (paper sec. 2.1): every level is an all-to-all among ALL P
+processors (O(P) partner exchanges vs the 2D code's 2 x O(sqrt P)), and
+duplicate filtering needs a full-size map (O(n) per device).  Both fall out
+of the shared engine at the degenerate 1 x P topology with no separate
+driver code: the expand all_gather spans a single processor (identity), the
+fold all_to_all spans all P, and the local row space -- hence the visited
+bitmap -- is the whole vertex set.
+
+Differences from the seed's hand-rolled 1D driver: vertices are laid out in
+owner blocks (`partition_2d` on the 1 x P grid, block j = vertices
+[j*S, (j+1)*S)) rather than by the modulo rule, and parents are resolved by
+the engine's deferred exchange rather than travelling inline as (u, v)
+pairs.  Neither changes the communication structure the 1D-vs-2D comparison
+measures (benchmarks/bfs_1d_vs_2d.py): per level the fold still exchanges
+O(P) messages of 4*S+4 bytes and the final pred resolution is one more
+all-to-all, while the O(n) per-device map cost is unchanged.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.core import frontier as F
-from repro.core.types import BFSOutput
+from repro.core.types import LocalGraph2D, BFSOutput
+from repro.dist.engine import DistBFSEngine
+from repro.dist.topology import Topology
 
 
 class BFS1D:
+    """1D baseline: thin config of the shared engine on a 1 x P grid.
+
+    Partition the edge list with `partition_2d(edges, bfs.grid)` (the 1 x P
+    grid pads n up to a multiple of P); results come back as plain global
+    (n,) arrays.
+    """
+
     def __init__(self, n: int, mesh, axes=("p",), edge_chunk: int = 8192,
-                 max_levels: int = 64):
+                 max_levels: int = 64, fold_codec="list"):
         self.n = n
         self.mesh = mesh
-        self.axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
-        self.P = 1
-        for a in self.axes:
-            self.P *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
-        if n % self.P:
-            raise ValueError("pad n to a multiple of P")
-        self.ncl = n // self.P
-        self.edge_chunk = edge_chunk
-        self.max_levels = max_levels
-        self._run = jax.jit(self._build())
+        self.topology = Topology.one_d(n, mesh, axes)
+        self.grid = self.topology.grid
+        self.P = self.grid.C
+        self.ncl = self.grid.n_cols_local
+        self.engine = DistBFSEngine(
+            self.topology, fold_codec=fold_codec, edge_chunk=edge_chunk,
+            max_levels=max_levels)
+        self._run = self.engine._run
 
-    def _build(self):
-        n, Pn, ncl, axes = self.n, self.P, self.ncl, self.axes
-        ax = axes if len(axes) > 1 else axes[0]
-        chunk = self.edge_chunk
-
-        def device_fn(col_off, row_idx, root):
-            col_off, row_idx = col_off[0], row_idx[0]
-            p = jax.lax.axis_index(ax).astype(jnp.int32)
-            e_cap = row_idx.shape[0]
-
-            mine = (root % Pn) == p
-            level = jnp.full((ncl,), -1, jnp.int32)
-            pred = jnp.full((ncl,), -1, jnp.int32)
-            sent = jnp.zeros((n,), bool)         # the O(n) integer map of [1]
-            front = jnp.full((ncl,), -1, jnp.int32)
-            lc0 = root // Pn
-            level = jnp.where(mine, level.at[lc0].set(0), level)
-            pred = jnp.where(mine, pred.at[lc0].set(root), pred)
-            front = jnp.where(mine, front.at[0].set(lc0), front)
-            cnt = jnp.where(mine, 1, 0).astype(jnp.int32)
-
-            def level_step(state):
-                level, pred, sent, front, cnt, lvl, _, scanned = state
-                u_safe = jnp.clip(front, 0, ncl - 1)
-                deg = col_off[u_safe + 1] - col_off[u_safe]
-                deg = jnp.where(jnp.arange(ncl) < cnt, deg, 0)
-                cumul = F.exclusive_cumsum(deg)
-                total = cumul[cnt]
-
-                dst_v = jnp.full((Pn, ncl), -1, jnp.int32)
-                dst_u = jnp.full((Pn, ncl), -1, jnp.int32)
-                dst_cnt = jnp.zeros((Pn,), jnp.int32)
-
-                def body(s):
-                    start, sent, dst_v, dst_u, dst_cnt = s
-                    gids = start + jnp.arange(chunk, dtype=jnp.int32)
-                    k = jnp.clip(jnp.searchsorted(cumul, gids, side="right")
-                                 .astype(jnp.int32) - 1, 0, ncl - 1)
-                    u = u_safe[k]
-                    addr = col_off[u] + gids - cumul[k]
-                    valid = gids < total
-                    v = jnp.where(valid, row_idx[jnp.clip(addr, 0, e_cap - 1)], 0)
-                    new = valid & ~sent[v]
-                    win = F.winner_dedup(v, new, n)
-                    sent = sent.at[jnp.where(win, v, n)].set(True, mode="drop")
-                    ug = (u * Pn + p).astype(jnp.int32)   # global source id
-                    tgt = v % Pn
-                    dst_v, dc2 = F.bucket_append(dst_v, dst_cnt, v, tgt, win, Pn)
-                    dst_u, _ = F.bucket_append(dst_u, dst_cnt, ug, tgt, win, Pn)
-                    return start + chunk, sent, dst_v, dst_u, dc2
-
-                _, sent, dst_v, dst_u, dst_cnt = jax.lax.while_loop(
-                    lambda s: s[0] < total, body,
-                    (jnp.int32(0), sent, dst_v, dst_u, dst_cnt))
-
-                rv = jax.lax.all_to_all(dst_v, ax, 0, 0).reshape(Pn, ncl)
-                ru = jax.lax.all_to_all(dst_u, ax, 0, 0).reshape(Pn, ncl)
-                rc = jax.lax.all_to_all(dst_cnt, ax, 0, 0).reshape(Pn)
-
-                mask = jnp.arange(ncl)[None, :] < rc[:, None]
-                v = jnp.where(mask, rv, 0).reshape(-1)
-                u = ru.reshape(-1)
-                lc = v // Pn
-                elig = mask.reshape(-1) & (level[lc] < 0)
-                win = F.winner_dedup(lc, elig, ncl)
-                level = level.at[jnp.where(win, lc, ncl)].set(
-                    jnp.where(win, lvl, 0), mode="drop")
-                pred = pred.at[jnp.where(win, lc, ncl)].set(
-                    jnp.where(win, u, 0), mode="drop")
-                nf, nc = jnp.full((ncl,), -1, jnp.int32), jnp.int32(0)
-                b, c = F.bucket_append(nf[None], nc[None], lc,
-                                       jnp.zeros_like(lc), win, 1)
-                nf, nc = b[0], c[0]
-                tot = jax.lax.psum(nc, axes)
-                return (level, pred, sent, nf, nc, lvl + 1, tot,
-                        scanned + total)
-
-            init_tot = jax.lax.psum(cnt, axes)
-            state = (level, pred, sent, front, cnt, jnp.int32(1), init_tot,
-                     jnp.int32(0))
-            state = jax.lax.while_loop(
-                lambda s: (s[6] > 0) & (s[5] <= self.max_levels),
-                level_step, state)
-            level, pred = state[0], state[1]
-            lvl, scanned = state[5], state[7]
-            # output in owner-interleaved order: vertex g at (g%P, g//P)
-            return level[None], pred[None], lvl[None], scanned[None]
-
-        spec = P(self.axes)
-        return jax.shard_map(
-            device_fn, mesh=self.mesh,
-            in_specs=(spec, spec, P()),
-            out_specs=(spec, spec, spec, spec), check_vma=False)
-
-    def run(self, col_off, row_idx, root) -> BFSOutput:
-        level, pred, lvls, _ = self._run(col_off, row_idx, jnp.int32(root))
-        # de-interleave: device-major blocks -> global ids g = p + P*k
-        level = level.reshape(self.P, self.ncl).T.reshape(-1)
-        # ^ level comes back as (P*ncl,) device-major; entry (p, k) is vertex
-        #   k*P + p, so transpose restores global order.
-        pred = pred.reshape(self.P, self.ncl).T.reshape(-1)
-        return BFSOutput(level=jnp.asarray(level), pred=jnp.asarray(pred),
-                         n_levels=lvls.max())
+    def run(self, graph: LocalGraph2D, root) -> BFSOutput:
+        return self.engine.run(graph, root)

@@ -1,4 +1,4 @@
-"""Distributed BFS with 2D partitioning (paper Alg. 2) via jax.shard_map.
+"""Distributed BFS with 2D partitioning (paper Alg. 2) on the shared engine.
 
 Mesh mapping (DESIGN.md sec. 5): the processor grid's ROWS span `row_axes`
 (e.g. ("pod", "data")) and its COLUMNS span `col_axes` (e.g. ("model",)).
@@ -9,153 +9,18 @@ Mesh mapping (DESIGN.md sec. 5): the processor grid's ROWS span `row_axes`
 So one BFS level costs 2 x O(sqrt(P)) partner exchanges instead of the 1D
 code's O(P) (paper sec. 2.2).
 
-Communication carries 32-bit LOCAL indices only (paper sec. 3.3); parents are
-resolved once, at the end, with a single all_to_all of the senders' pred
-arrays (the paper's deferred-predecessor scheme, sec. 3.5).
+The level loop, init and deferred-predecessor resolution live in
+`repro.dist.engine`; what goes on the fold wire is a pluggable codec
+(`repro.dist.exchange`, DESIGN.md sec. 4): the paper's 32-bit local indices
+("list", sec. 3.3), a 1-bit block bitmap ("bitmap"), or sorted 16-bit deltas
+("delta", Romera & Froning 2017).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Sequence
+from repro.core.types import Grid2D, LocalGraph2D, BFSOutput
+from repro.dist.engine import DistBFSEngine
+from repro.dist.topology import Topology
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.core import frontier as F
-from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
-
-
-def _axes(a) -> tuple:
-    return tuple(a) if isinstance(a, (tuple, list)) else (a,)
-
-
-def append_padded(buf, cnt, vals, valid):
-    """Append vals[valid] to a padded (cap,) buffer at position cnt."""
-    b, c = F.bucket_append(buf[None, :], cnt[None],
-                           vals, jnp.zeros_like(vals), valid, 1)
-    return b[0], c[0]
-
-
-# ----------------------------------------------------------------------------
-# Per-device level step (runs inside shard_map)
-# ----------------------------------------------------------------------------
-
-def _level_step(graph: LocalGraph2D, st: BFSState, *, grid: Grid2D,
-                row_axes, col_axes, edge_chunk: int, expand_fn=None,
-                fold_bitmap: bool = False, dedup: str = "scatter"):
-    i = jax.lax.axis_index(row_axes if len(row_axes) > 1 else row_axes[0])
-    j = jax.lax.axis_index(col_axes if len(col_axes) > 1 else col_axes[0])
-    i = i.astype(jnp.int32)
-    j = j.astype(jnp.int32)
-    S, C = grid.S, grid.C
-
-    # ---- expand exchange: gather frontiers within the processor-column ----
-    af_blocks = jax.lax.all_gather(st.front, row_axes, tiled=False)   # (R, S)
-    af_cnts = jax.lax.all_gather(st.front_cnt, row_axes, tiled=False)  # (R,)
-    af_blocks = af_blocks.reshape(grid.R, S)
-    af_cnts = af_cnts.reshape(grid.R)
-    all_front, front_total = F.compact_blocks(af_blocks, af_cnts)  # (n/C,)
-
-    # ---- frontier expansion (local CSC column scan) ----
-    ex = F.expand_frontier(
-        graph.col_off, graph.row_idx, st.visited, st.level, st.pred,
-        all_front, front_total, st.lvl, grid=grid, i=i, j=j,
-        edge_chunk=edge_chunk, expand_fn=expand_fn, dedup=dedup)
-
-    # ---- move own-column vertices straight to the frontier (lines 15-16) ---
-    own_rows = jnp.take(ex.dst, j, axis=0)          # (S,) local rows, block j
-    own_cnt = jnp.take(ex.dst_cnt, j)
-    own_cols = (i * S + (own_rows - j * S)).astype(jnp.int32)  # ROW2COL
-    own_valid = jnp.arange(S, dtype=jnp.int32) < own_cnt
-    dst = ex.dst.at[j].set(-1)
-    dst_cnt = ex.dst_cnt.at[j].set(0)
-
-    # ---- fold exchange: route discoveries to their owners (same grid row) --
-    ca = col_axes if len(col_axes) > 1 else col_axes[0]
-    if fold_bitmap:
-        # beyond-paper: send a 1-bit-per-vertex block bitmap instead of 32-bit
-        # vertex lists (32x traffic reduction at identical semantics; see
-        # EXPERIMENTS.md "fold compression").  dst rows hold local-row ids of
-        # block m, i.e. offsets m*S + t: send bit t to column m.
-        valid = dst >= 0
-        rowsel = jnp.where(valid, jnp.arange(C, dtype=jnp.int32)[:, None], C)
-        onehot = jnp.zeros((C, S), bool).at[
-            rowsel.reshape(-1), jnp.where(valid, dst % S, 0).reshape(-1)
-        ].set(True, mode="drop")
-        words = jax.lax.all_to_all(F.pack_bitmap(onehot), ca, 0, 0).reshape(C, -1)
-        recv_mask = F.unpack_bitmap(words, S)         # [m, t]: from sender m
-        # received offsets t are MY owned block -> local row j*S + t
-        rows = j * S + jnp.arange(S, dtype=jnp.int32)[None, :]
-        int_verts = jax.vmap(lambda r, m: append_padded(
-            jnp.full((S,), -1, jnp.int32), jnp.int32(0), r, m)[0])(
-                jnp.broadcast_to(rows, (C, S)), recv_mask)
-        int_cnt = recv_mask.sum(axis=1, dtype=jnp.int32)
-    else:
-        int_verts = jax.lax.all_to_all(dst, ca, 0, 0).reshape(C, S)
-        int_cnt = jax.lax.all_to_all(dst_cnt, ca, 0, 0).reshape(C)
-
-    # ---- frontier update (paper sec. 3.5) ----
-    up = F.update_frontier(int_verts, int_cnt, ex.visited, ex.level, ex.pred,
-                           st.lvl, grid=grid, i=i, j=j)
-
-    nf = jnp.full((S,), -1, jnp.int32)
-    nc = jnp.int32(0)
-    nf, nc = append_padded(nf, nc, own_cols, own_valid)
-    up_valid = jnp.arange(S, dtype=jnp.int32) < up.new_cnt
-    nf, nc = append_padded(nf, nc, up.new_front, up_valid)
-
-    new_state = BFSState(level=up.level, pred=up.pred, visited=up.visited,
-                         front=nf, front_cnt=nc, lvl=st.lvl + 1)
-    total = jax.lax.psum(nc, row_axes + col_axes)
-    return new_state, total, ex.edges_scanned
-
-
-def _init_state(root, *, grid: Grid2D, i, j):
-    S, C = grid.S, grid.C
-    nrl = grid.n_rows_local
-    b = root // S
-    oi, oj = b % grid.R, b // grid.R
-    mine = (oi == i) & (oj == j)
-    lr = (root // S // grid.R) * S + root % S
-    lc = root % grid.n_cols_local
-    level = jnp.full((nrl,), -1, jnp.int32)
-    pred = jnp.full((nrl,), -1, jnp.int32)
-    visited = jnp.zeros((nrl,), bool)
-    front = jnp.full((S,), -1, jnp.int32)
-    level = jnp.where(mine, level.at[lr].set(0), level)
-    pred = jnp.where(mine, pred.at[lr].set(root), pred)
-    visited = jnp.where(mine, visited.at[lr].set(True), visited)
-    front = jnp.where(mine, front.at[0].set(lc), front)
-    cnt = jnp.where(mine, jnp.int32(1), jnp.int32(0))
-    return BFSState(level=level, pred=pred, visited=visited, front=front,
-                    front_cnt=cnt, lvl=jnp.int32(1))
-
-
-def _resolve_preds(pred, *, grid: Grid2D, j, col_axes):
-    """Final deferred-predecessor exchange (paper sec. 3.5 / contribution [2]).
-
-    One all_to_all of the pred array (viewed as C blocks of S) within each
-    grid row delivers, for every owned vertex, the parent recorded by the
-    processor-column that folded it."""
-    C, S = grid.C, grid.S
-    ca = col_axes if len(col_axes) > 1 else col_axes[0]
-    pb = pred.reshape(C, S)
-    recv = jax.lax.all_to_all(pb, ca, 0, 0).reshape(C, S)
-    own = jnp.take(pb, j, axis=0)                     # (S,) my owned block
-    deferred = own < -1
-    sender = jnp.clip(-own - 2, 0, C - 1)
-    from_sender = jnp.take_along_axis(recv, sender[None, :], axis=0)[0]
-    return jnp.where(deferred, from_sender, own)
-
-
-def _owned_level(level, *, grid: Grid2D, j):
-    return jax.lax.dynamic_slice_in_dim(level, j * grid.S, grid.S)
-
-
-# ----------------------------------------------------------------------------
-# Public drivers
-# ----------------------------------------------------------------------------
 
 class BFS2D:
     """Distributed 2D BFS bound to a mesh.
@@ -163,70 +28,25 @@ class BFS2D:
     Arrays for the graph carry leading (R, C) device axes (as produced by
     `partition_2d`); results come back as global (n,) arrays laid out in
     vertex-block order (b = j*R + i), i.e. plain global vertex ids.
+
+    fold_codec selects the fold wire format ("list" | "bitmap" | "delta");
+    `fold_bitmap=True` is the legacy spelling of fold_codec="bitmap".
     """
 
     def __init__(self, grid: Grid2D, mesh, row_axes=("r",), col_axes=("c",),
                  edge_chunk: int = 8192, expand_fn=None,
                  fold_bitmap: bool = False, max_levels: int = 64,
-                 dedup: str = "scatter"):
+                 dedup: str = "scatter", fold_codec=None):
+        if fold_codec is None:
+            fold_codec = "bitmap" if fold_bitmap else "list"
         self.grid = grid
         self.mesh = mesh
-        self.row_axes = _axes(row_axes)
-        self.col_axes = _axes(col_axes)
-        self.edge_chunk = edge_chunk
-        self.expand_fn = expand_fn
-        self.fold_bitmap = fold_bitmap
-        self.max_levels = max_levels
-        self.dedup = dedup
-        dev_spec = P(self.row_axes, self.col_axes)
-        self._in_graph = LocalGraph2D(col_off=dev_spec, row_idx=dev_spec,
-                                      nnz=dev_spec)
-        # global outputs in vertex-block order: block b = j*R + i
-        self._out_global = P((*self.col_axes, *self.row_axes))
-        self._run = jax.jit(self._build_run())
-
-    # -- whole-search program (lax.while_loop over levels; single lowering) --
-    def _build_run(self):
-        grid = self.grid
-        row_axes, col_axes = self.row_axes, self.col_axes
-
-        def device_fn(col_off, row_idx, nnz, root):
-            col_off, row_idx = col_off[0, 0], row_idx[0, 0]
-            graph = LocalGraph2D(col_off=col_off, row_idx=row_idx, nnz=nnz[0, 0])
-            i = jax.lax.axis_index(row_axes if len(row_axes) > 1 else row_axes[0]).astype(jnp.int32)
-            j = jax.lax.axis_index(col_axes if len(col_axes) > 1 else col_axes[0]).astype(jnp.int32)
-            st = _init_state(root, grid=grid, i=i, j=j)
-
-            def cond(carry):
-                st, total, scanned = carry
-                return (total > 0) & (st.lvl <= self.max_levels)
-
-            def body(carry):
-                st, _, scanned = carry
-                st2, total, edges = _level_step(
-                    graph, st, grid=grid, row_axes=row_axes,
-                    col_axes=col_axes, edge_chunk=self.edge_chunk,
-                    expand_fn=self.expand_fn, fold_bitmap=self.fold_bitmap,
-                    dedup=self.dedup)
-                return st2, total, scanned + edges
-
-            init_total = jax.lax.psum(st.front_cnt, row_axes + col_axes)
-            st, _, scanned = jax.lax.while_loop(
-                cond, body, (st, init_total, jnp.int32(0)))
-
-            pred = _resolve_preds(st.pred, grid=grid, j=j, col_axes=col_axes)
-            level = _owned_level(st.level, grid=grid, j=j)
-            return level[None, None], pred[None, None], st.lvl[None, None], scanned[None, None]
-
-        dev = P(self.row_axes, self.col_axes)
-        return jax.shard_map(
-            device_fn, mesh=self.mesh,
-            in_specs=(dev, dev, dev, P()),
-            out_specs=(self._out_global, self._out_global, dev, dev),
-            check_vma=False)
+        self.topology = Topology(grid, mesh, row_axes=row_axes,
+                                 col_axes=col_axes)
+        self.engine = DistBFSEngine(
+            self.topology, fold_codec=fold_codec, edge_chunk=edge_chunk,
+            max_levels=max_levels, expand_fn=expand_fn, dedup=dedup)
+        self._run = self.engine._run   # (col_off, row_idx, nnz, root) -> outs
 
     def run(self, graph: LocalGraph2D, root) -> BFSOutput:
-        level, pred, lvls, scanned = self._run(
-            graph.col_off, graph.row_idx, graph.nnz, jnp.int32(root))
-        return BFSOutput(level=level.reshape(-1), pred=pred.reshape(-1),
-                         n_levels=lvls.max())
+        return self.engine.run(graph, root)

@@ -12,29 +12,33 @@ it.  We add a bottom-up step that composes with the 2D decomposition:
 Per-level direction choice follows Beamer's heuristic on the global frontier
 size.  TEPS accounting still uses input edges in the component (Graph500),
 matching the paper's note that bottom-up "does not traverse all edges".
+
+The driver is a thin config of `repro.dist.engine`: a `step_factory` that
+wraps the engine's own top-down step in a `lax.cond` against the bottom-up
+step below.  Top-down levels therefore inherit the engine's fold codec.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import frontier as F
-from repro.core.bfs2d import _axes, _level_step, _init_state, _resolve_preds, \
-    _owned_level, append_padded
 from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
+from repro.dist.engine import DistBFSEngine, canonical_front
+from repro.dist.topology import Topology
 
 I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
 
 
-def _bottomup_step(csr_row_off, csr_col_idx, st: BFSState, *, grid: Grid2D,
-                   row_axes, col_axes, i, j):
+def _bottomup_step(csr_row_off, csr_col_idx, st: BFSState, *, topo: Topology,
+                   i, j):
+    grid = topo.grid
     S, C, ncl, nrl = grid.S, grid.C, grid.n_cols_local, grid.n_rows_local
     e_cap = csr_col_idx.shape[0]
 
     # expand: gather frontier, build a column bitmap for this column block
-    af_blocks = jax.lax.all_gather(st.front, row_axes, tiled=False).reshape(grid.R, S)
-    af_cnts = jax.lax.all_gather(st.front_cnt, row_axes, tiled=False).reshape(grid.R)
+    af_blocks = topo.row_gather(st.front).reshape(grid.R, S)
+    af_cnts = topo.row_gather(st.front_cnt).reshape(grid.R)
     msk = jnp.arange(S, dtype=jnp.int32)[None, :] < af_cnts[:, None]
     fmask = jnp.zeros((ncl,), bool).at[
         jnp.where(msk, af_blocks, ncl).reshape(-1)].set(True, mode="drop")
@@ -51,14 +55,14 @@ def _bottomup_step(csr_row_off, csr_col_idx, st: BFSState, *, grid: Grid2D,
     found = (best < I32_MAX) & row_unvis
     # encode GLOBAL parent id; fold = min-reduce within the processor-row
     parent_g = jnp.where(found, j * ncl + best, I32_MAX).reshape(C, S)
-    ca = col_axes if len(col_axes) > 1 else col_axes[0]
-    recv = jax.lax.all_to_all(parent_g, ca, 0, 0).reshape(C, S)
+    recv = topo.col_all_to_all(parent_g).reshape(C, S)
     best_owned = recv.min(axis=0)                    # (S,) my owned block
     rows_owned = j * S + jnp.arange(S, dtype=jnp.int32)
     vis_owned = st.visited[rows_owned]
     new = (best_owned < I32_MAX) & ~vis_owned
 
-    visited = st.visited.at[jnp.where(new, rows_owned, nrl)].set(True, mode="drop")
+    visited = st.visited.at[jnp.where(new, rows_owned, nrl)].set(
+        True, mode="drop")
     level = st.level.at[jnp.where(new, rows_owned, nrl)].set(
         jnp.where(new, st.lvl, 0), mode="drop")
     pred = st.pred.at[jnp.where(new, rows_owned, nrl)].set(
@@ -66,13 +70,14 @@ def _bottomup_step(csr_row_off, csr_col_idx, st: BFSState, *, grid: Grid2D,
 
     lc = i * S + jnp.arange(S, dtype=jnp.int32)      # ROW2COL of owned rows
     nf = jnp.full((S,), -1, jnp.int32)
-    nf, nc = append_padded(nf, jnp.int32(0), lc, new)
+    nf, nc = F.append_padded(nf, jnp.int32(0), lc, new)
+    nf, nc = canonical_front(nf, nc)
 
     st2 = BFSState(level=level, pred=pred, visited=visited, front=nf,
                    front_cnt=nc, lvl=st.lvl + 1)
-    total = jax.lax.psum(nc, row_axes + col_axes)
+    total = topo.psum_all(nc)
     edges_scanned = jnp.sum(jnp.where(valid & row_unvis[edge_row], 1, 0),
-                            dtype=jnp.int32)
+                            dtype=jnp.uint32)
     return st2, total, edges_scanned
 
 
@@ -81,57 +86,30 @@ class BFS2DDirection:
 
     def __init__(self, grid: Grid2D, mesh, row_axes=("r",), col_axes=("c",),
                  edge_chunk: int = 8192, alpha: int = 24,
-                 max_levels: int = 64):
+                 max_levels: int = 64, fold_codec="list"):
         self.grid, self.mesh = grid, mesh
-        self.row_axes, self.col_axes = _axes(row_axes), _axes(col_axes)
-        self.edge_chunk, self.alpha, self.max_levels = edge_chunk, alpha, max_levels
-        self._run = jax.jit(self._build())
+        self.alpha = alpha
+        self.topology = Topology(grid, mesh, row_axes=row_axes,
+                                 col_axes=col_axes)
+        topo = self.topology
 
-    def _build(self):
-        grid, alpha = self.grid, self.alpha
-        row_axes, col_axes = self.row_axes, self.col_axes
+        def step_factory(engine, graph, extra, i, j, topdown):
+            row_off, col_idx = extra
 
-        def device_fn(col_off, row_idx, nnz, row_off, col_idx, root):
-            graph = LocalGraph2D(col_off=col_off[0, 0], row_idx=row_idx[0, 0],
-                                 nnz=nnz[0, 0])
-            row_off_, col_idx_ = row_off[0, 0], col_idx[0, 0]
-            i = jax.lax.axis_index(row_axes if len(row_axes) > 1 else row_axes[0]).astype(jnp.int32)
-            j = jax.lax.axis_index(col_axes if len(col_axes) > 1 else col_axes[0]).astype(jnp.int32)
-            st = _init_state(root, grid=grid, i=i, j=j)
-
-            def body(carry):
-                st, total, _ = carry
-
-                def topdown(st):
-                    return _level_step(graph, st, grid=grid, row_axes=row_axes,
-                                       col_axes=col_axes,
-                                       edge_chunk=self.edge_chunk)
-
+            def step(st, prev_total):
                 def bottomup(st):
-                    return _bottomup_step(row_off_, col_idx_, st, grid=grid,
-                                          row_axes=row_axes, col_axes=col_axes,
+                    return _bottomup_step(row_off, col_idx, st, topo=topo,
                                           i=i, j=j)
 
-                use_bu = total > (grid.n // alpha)
+                use_bu = prev_total > (grid.n // alpha)
                 return jax.lax.cond(use_bu, bottomup, topdown, st)
 
-            init_total = jax.lax.psum(st.front_cnt, row_axes + col_axes)
-            st, _, _ = jax.lax.while_loop(
-                lambda c: (c[1] > 0) & (c[0].lvl <= self.max_levels),
-                body, (st, init_total, jnp.int32(0)))
-            pred = _resolve_preds(st.pred, grid=grid, j=j, col_axes=col_axes)
-            level = _owned_level(st.level, grid=grid, j=j)
-            return level[None, None], pred[None, None], st.lvl[None, None]
+            return step
 
-        dev = P(self.row_axes, self.col_axes)
-        out_g = P((*self.col_axes, *self.row_axes))
-        return jax.shard_map(device_fn, mesh=self.mesh,
-                             in_specs=(dev,) * 5 + (P(),),
-                             out_specs=(out_g, out_g, dev), check_vma=False)
+        self.engine = DistBFSEngine(
+            topo, fold_codec=fold_codec, edge_chunk=edge_chunk,
+            max_levels=max_levels, step_factory=step_factory, n_extra=2)
+        self._run = self.engine._run
 
     def run(self, graph: LocalGraph2D, csr: dict, root) -> BFSOutput:
-        level, pred, lvls = self._run(graph.col_off, graph.row_idx, graph.nnz,
-                                      csr["row_off"], csr["col_idx"],
-                                      jnp.int32(root))
-        return BFSOutput(level=level.reshape(-1), pred=pred.reshape(-1),
-                         n_levels=lvls.max())
+        return self.engine.run(graph, root, csr["row_off"], csr["col_idx"])

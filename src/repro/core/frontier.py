@@ -98,6 +98,13 @@ def bucket_append(dst, dst_cnt, v, tgt, take, n_buckets: int):
     return dst, dst_cnt + jnp.minimum(add, cap - dst_cnt)
 
 
+def append_padded(buf, cnt, vals, valid):
+    """Append vals[valid] to a padded (cap,) buffer at position cnt."""
+    b, c = bucket_append(buf[None, :], cnt[None], vals,
+                         jnp.zeros_like(vals), valid, 1)
+    return b[0], c[0]
+
+
 def pack_bitmap(mask):
     """(..., S) bool -> (..., ceil(S/32)) uint32 little-endian bit packing."""
     S = mask.shape[-1]
@@ -123,7 +130,8 @@ class ExpandResult(NamedTuple):
     pred: jax.Array
     dst: jax.Array        # (C, S) local-row ids grouped by owner column
     dst_cnt: jax.Array    # (C,)
-    edges_scanned: jax.Array
+    edges_scanned: jax.Array  # uint32 -- callers accumulate across levels
+                              # with engine.wide_add (int32 wraps at scale 26)
 
 
 def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
@@ -190,7 +198,10 @@ def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
     init = (jnp.int32(0), visited, level, pred, dst, dst_cnt)
     _, visited, level, pred, dst, dst_cnt = jax.lax.while_loop(
         chunk_cond, chunk_body, init)
-    return ExpandResult(visited, level, pred, dst, dst_cnt, total)
+    # per-level count reported unsigned: one level's local scan is bounded by
+    # the int32-indexable local nnz, but the SUM across levels/devices is not
+    return ExpandResult(visited, level, pred, dst, dst_cnt,
+                        total.astype(jnp.uint32))
 
 
 class UpdateResult(NamedTuple):

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.types import Grid2D, LocalGraph2D
+from repro.dist.compat import shard_map
 
 
 def _axes(a):
@@ -70,6 +71,6 @@ def make_spmm2d(grid: Grid2D, mesh, row_axes=("r",), col_axes=("c",)):
                           col_axes=col_axes)
         return y
 
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=(dev, dev, dev, xspec),
-                       out_specs=xspec, check_vma=False)
+    sm = shard_map(fn, mesh=mesh, in_specs=(dev, dev, dev, xspec),
+                   out_specs=xspec, check_vma=False)
     return jax.jit(sm)

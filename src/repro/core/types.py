@@ -115,3 +115,5 @@ class BFSOutput:
     level: jax.Array   # (n,) int32
     pred: jax.Array    # (n,) int32, global parent ids
     n_levels: jax.Array
+    edges_scanned: Any = None  # exact Python int (64-bit safe), or None
+                               # when the producer does not account edges

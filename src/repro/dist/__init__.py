@@ -1,0 +1,12 @@
+"""Distributed-engine layer shared by every BFS driver (DESIGN.md sec. 6).
+
+Layering:
+  compat    -- JAX version shim (shard_map / make_mesh / AxisType)
+  topology  -- mesh + processor-grid geometry (1D = degenerate 1 x P grid)
+  exchange  -- expand/fold collectives with pluggable fold wire codecs
+  engine    -- the level loop / init / deferred-pred resolution / accounting
+"""
+from repro.dist.compat import shard_map, make_mesh, axis_types_kwargs
+from repro.dist.topology import Topology
+from repro.dist.exchange import FOLD_CODECS, get_fold_codec
+from repro.dist.engine import DistBFSEngine

@@ -1,0 +1,193 @@
+"""Expand/fold exchanges with pluggable fold wire formats (DESIGN.md sec. 4).
+
+The fold exchange routes every newly-discovered vertex to its owner column.
+WHICH vertices travel is fixed by the algorithm; HOW they are encoded on the
+wire is an independent, swappable concern (Buluc & Madduri 2011 separate the
+exchange pattern from its payload; Romera & Froning 2017 compress it).  Three
+codecs, per fold partner (S = owned block size):
+
+  list    (S,) int32 local-row ids + count        4*S + 4   bytes
+  bitmap  1 bit per owned vertex                  4*ceil(S/32) bytes
+  delta   sort + delta-encode + 16-bit narrowing  2*S + 4   bytes
+
+Delivery order per sender differs by codec (`list` keeps discovery order,
+`bitmap`/`delta` deliver ascending) -- outputs are nonetheless bit-identical
+across codecs because (a) a vertex appears at most once per sender, and the
+update winner is the MINIMUM sender regardless of position within a message,
+and (b) the engine keeps frontiers in canonical ascending order
+(`engine.canonical_front`), fixing the next level's scan order.  Do not rely
+on per-sender ordering in a decoder.  `delta` requires S <= 65536 so every
+gap fits in a uint16; larger blocks would need an escape word, which this
+repro does not implement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as F
+from repro.core.types import Grid2D
+
+
+def expand_exchange(front, front_cnt, *, topo):
+    """Gather the frontiers of the processor-column (paper line 13).
+
+    Returns (all_front (n_cols_local,), front_total) -- valid entries first,
+    grid-row order preserved.
+    """
+    R, S = topo.grid.R, topo.grid.S
+    af = topo.row_gather(front).reshape(R, S)
+    ac = topo.row_gather(front_cnt).reshape(R)
+    return F.compact_blocks(af, ac)
+
+
+def resolve_preds(pred, *, topo, j):
+    """Final deferred-predecessor exchange (paper sec. 3.5 / contribution [2]).
+
+    One all_to_all of the pred array (viewed as C blocks of S) within each
+    grid row delivers, for every owned vertex, the parent recorded by the
+    processor-column that folded it."""
+    C, S = topo.grid.C, topo.grid.S
+    pb = pred.reshape(C, S)
+    recv = topo.col_all_to_all(pb).reshape(C, S)
+    own = jnp.take(pb, j, axis=0)                     # (S,) my owned block
+    deferred = own < -1
+    sender = jnp.clip(-own - 2, 0, C - 1)
+    from_sender = jnp.take_along_axis(recv, sender[None, :], axis=0)[0]
+    return jnp.where(deferred, from_sender, own)
+
+
+# ----------------------------------------------------------------------------
+# Fold codecs
+# ----------------------------------------------------------------------------
+
+class FoldCodec:
+    """Strategy for the fold exchange's wire format.
+
+    fold() maps per-owner-column discovery buckets to received owned rows:
+      dst:     (C, S) int32 local-row ids (bucket m holds rows of block m,
+               i.e. ids m*S + t), padded -1, packed at the front;
+      dst_cnt: (C,) int32;
+    returns (int_verts (C, S) int32 -- MY owned rows j*S + t, one row per
+    sender, padded -1 -- and int_cnt (C,)).  Order WITHIN a sender's row is
+    codec-specific (see module docstring); consumers must not rely on it.
+    """
+    name = "?"
+
+    def wire_bytes(self, grid: Grid2D) -> int:
+        """Bytes this device SENDS on one fold exchange (payload + counts)."""
+        raise NotImplementedError
+
+    def fold(self, dst, dst_cnt, *, topo, j):
+        raise NotImplementedError
+
+
+class ListFold(FoldCodec):
+    """32-bit local indices, the paper's own wire format (sec. 3.3)."""
+    name = "list"
+
+    def wire_bytes(self, grid: Grid2D) -> int:
+        return grid.C * (4 * grid.S + 4)
+
+    def fold(self, dst, dst_cnt, *, topo, j):
+        C, S = topo.grid.C, topo.grid.S
+        int_verts = topo.col_all_to_all(dst).reshape(C, S)
+        int_cnt = topo.col_all_to_all(dst_cnt).reshape(C)
+        return int_verts, int_cnt
+
+
+class BitmapFold(FoldCodec):
+    """1-bit-per-vertex block bitmap: 32x below `list` at identical
+    semantics (beyond-paper; see EXPERIMENTS.md "fold compression")."""
+    name = "bitmap"
+
+    def wire_bytes(self, grid: Grid2D) -> int:
+        return grid.C * 4 * ((grid.S + 31) // 32)
+
+    @staticmethod
+    def encode(dst, dst_cnt, S: int):
+        """(C, S) id buckets -> (C, ceil(S/32)) uint32 bit words."""
+        C = dst.shape[0]
+        valid = dst >= 0
+        rowsel = jnp.where(valid, jnp.arange(C, dtype=jnp.int32)[:, None], C)
+        onehot = jnp.zeros((C, S), bool).at[
+            rowsel.reshape(-1), jnp.where(valid, dst % S, 0).reshape(-1)
+        ].set(True, mode="drop")
+        return F.pack_bitmap(onehot)
+
+    @staticmethod
+    def decode(words, j, S: int):
+        """(C, W) received words -> ascending owned rows j*S + t per sender."""
+        recv_mask = F.unpack_bitmap(words, S)          # [m, t]: from sender m
+        C = recv_mask.shape[0]
+        rows = jnp.broadcast_to(
+            j * S + jnp.arange(S, dtype=jnp.int32)[None, :], (C, S))
+        int_verts = jax.vmap(lambda r, m: F.append_padded(
+            jnp.full((S,), -1, jnp.int32), jnp.int32(0), r, m)[0])(
+                rows, recv_mask)
+        return int_verts, recv_mask.sum(axis=1, dtype=jnp.int32)
+
+    def fold(self, dst, dst_cnt, *, topo, j):
+        C, S = topo.grid.C, topo.grid.S
+        words = topo.col_all_to_all(self.encode(dst, dst_cnt, S))
+        return self.decode(words.reshape(C, -1), j, S)
+
+
+class DeltaFold(FoldCodec):
+    """Sort + delta + 16-bit narrowing (Romera & Froning 2017, sec. III):
+    within one fold message all ids share the destination block, so after
+    sorting, consecutive gaps are < S and fit a uint16 -- half the bytes of
+    `list` independent of frontier density (unlike `bitmap`, which wins only
+    once more than 1/16 of a block is discovered in one level)."""
+    name = "delta"
+
+    def __init__(self, grid: Grid2D):
+        if grid.S > (1 << 16):
+            raise ValueError(
+                f"delta fold needs S <= 65536 (16-bit gaps), got S={grid.S}")
+
+    def wire_bytes(self, grid: Grid2D) -> int:
+        return grid.C * (2 * grid.S + 4)
+
+    @staticmethod
+    def encode(dst, dst_cnt, S: int):
+        """(C, S) id buckets -> (C, S) uint16 ascending first-order gaps
+        (slot 0 is the absolute first offset)."""
+        C = dst.shape[0]
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < dst_cnt[:, None]
+        t = jnp.where(valid, dst % S, F.I32_MAX)
+        ts = jnp.sort(t, axis=1)                  # valid entries sort first
+        prev = jnp.concatenate(
+            [jnp.zeros((C, 1), jnp.int32), ts[:, :-1]], axis=1)
+        return jnp.where(valid, ts - prev, 0).astype(jnp.uint16)
+
+    @staticmethod
+    def decode(gaps, cnt, j, S: int):
+        """(C, S) uint16 gaps + (C,) counts -> owned rows j*S + t."""
+        vals = jnp.cumsum(gaps.astype(jnp.int32), axis=1)
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < cnt[:, None]
+        return jnp.where(valid, j * S + vals, -1), cnt
+
+    def fold(self, dst, dst_cnt, *, topo, j):
+        C, S = topo.grid.C, topo.grid.S
+        gaps = topo.col_all_to_all(self.encode(dst, dst_cnt, S)).reshape(C, S)
+        cnt = topo.col_all_to_all(dst_cnt).reshape(C)
+        return self.decode(gaps, cnt, j, S)
+
+
+FOLD_CODECS = {"list": ListFold, "bitmap": BitmapFold, "delta": DeltaFold}
+
+
+def get_fold_codec(spec, grid: Grid2D) -> FoldCodec:
+    """Resolve "list" | "bitmap" | "delta" | FoldCodec instance."""
+    if isinstance(spec, FoldCodec):
+        return spec
+    try:
+        cls = FOLD_CODECS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown fold codec {spec!r}; choose from {sorted(FOLD_CODECS)}")
+    try:
+        return cls(grid)
+    except TypeError:
+        return cls()

@@ -1,0 +1,129 @@
+"""Processor-grid topology: mesh, axes, device coordinates (DESIGN.md sec. 5).
+
+A `Topology` binds a `Grid2D` (the paper's R x C processor grid) to a JAX
+mesh: the grid's ROWS span `row_axes` (e.g. ("r",) or ("pod", "data")) and
+its COLUMNS span `col_axes` (e.g. ("c",) or ("model",)).  All collectives the
+engine needs are expressed against it:
+
+  expand (paper line 13) = all_gather along the row axes  -> `row_gather`
+  fold   (paper line 17) = all_to_all along the col axes  -> `col_all_to_all`
+
+The paper's original 1D code is the DEGENERATE 1 x P grid (`Topology.one_d`):
+the expand gather spans a single processor (identity) while the fold
+all_to_all spans all P -- which is exactly the O(P)-exchanges /
+O(n)-map-per-device structure the 2D decomposition removes (paper sec. 2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import Grid2D
+from repro.dist import compat
+
+
+def _axes(a) -> tuple:
+    if a is None:
+        return ()
+    return tuple(a) if isinstance(a, (tuple, list)) else (a,)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Static binding of a processor grid to mesh axes."""
+    grid: Grid2D
+    mesh: object
+    row_axes: tuple = ("r",)
+    col_axes: tuple = ("c",)
+
+    def __post_init__(self):
+        object.__setattr__(self, "row_axes", _axes(self.row_axes))
+        object.__setattr__(self, "col_axes", _axes(self.col_axes))
+        sizes = mesh_axis_sizes(self.mesh)
+        R = C = 1
+        for a in self.row_axes:
+            R *= sizes[a]
+        for a in self.col_axes:
+            C *= sizes[a]
+        if (R, C) != (self.grid.R, self.grid.C):
+            raise ValueError(
+                f"mesh axes give a {R}x{C} grid but Grid2D is "
+                f"{self.grid.R}x{self.grid.C} (row_axes={self.row_axes}, "
+                f"col_axes={self.col_axes})")
+
+    @classmethod
+    def one_d(cls, n: int, mesh, axes=("p",)) -> "Topology":
+        """The 1D baseline as the degenerate 1 x P grid (n padded to P)."""
+        axes = _axes(axes)
+        sizes = mesh_axis_sizes(mesh)
+        Pn = 1
+        for a in axes:
+            Pn *= sizes[a]
+        return cls(Grid2D.for_vertices(n, 1, Pn), mesh, row_axes=(),
+                   col_axes=axes)
+
+    # ------------------------------------------------------------------
+    # build-time (outside shard_map)
+    # ------------------------------------------------------------------
+
+    @property
+    def dev_spec(self) -> P:
+        """Spec of (R, C, ...) per-device arrays (leading grid dims)."""
+        return P(self.row_axes or None, self.col_axes or None)
+
+    @property
+    def out_block_spec(self) -> P:
+        """Spec assembling per-device (1, 1, S) blocks into the global
+        vertex-block order b = j*R + i (column-major over the grid)."""
+        return P(tuple(self.col_axes + self.row_axes))
+
+    def shard_map(self, fn, in_specs, out_specs):
+        return compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_vma=False)
+
+    # ------------------------------------------------------------------
+    # trace-time (inside shard_map)
+    # ------------------------------------------------------------------
+
+    @property
+    def all_axes(self) -> tuple:
+        return self.row_axes + self.col_axes
+
+    @property
+    def col_collective(self):
+        """axis_name argument for collectives within the processor-row."""
+        return self.col_axes if len(self.col_axes) > 1 else self.col_axes[0]
+
+    @property
+    def row_collective(self):
+        return self.row_axes if len(self.row_axes) > 1 else self.row_axes[0]
+
+    def device_coords(self):
+        """(i, j) grid coordinates of the calling device, as traced int32."""
+        i = (jax.lax.axis_index(self.row_collective).astype(jnp.int32)
+             if self.row_axes else jnp.int32(0))
+        j = (jax.lax.axis_index(self.col_collective).astype(jnp.int32)
+             if self.col_axes else jnp.int32(0))
+        return i, j
+
+    def psum_all(self, x):
+        """Sum over the whole grid (row + col axes)."""
+        return jax.lax.psum(x, self.all_axes)
+
+    def row_gather(self, x):
+        """all_gather within the processor-column -> leading R axis.
+        Identity (R=1) on the degenerate 1D topology."""
+        if not self.row_axes:
+            return x[None]
+        return jax.lax.all_gather(x, self.row_axes, tiled=False)
+
+    def col_all_to_all(self, x):
+        """all_to_all within the processor-row over leading axis C."""
+        return jax.lax.all_to_all(x, self.col_collective, 0, 0)

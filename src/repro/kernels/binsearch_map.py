@@ -31,6 +31,11 @@ I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
 
 def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
     gid = gids_ref[...]
+    # the cumul block sits whole in VMEM; read it ONCE into a value so the
+    # while loops below stay ref-free (JAX 0.4.x interpret mode cannot
+    # discharge ref reads inside a while cond; on TPU the dynamic_slices
+    # lower to the same VMEM accesses pl.load would)
+    cumul = cumul_ref[...]
     g0 = gid[0]
     gmax = gid[-1]
 
@@ -42,7 +47,7 @@ def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
     def bbody(s):
         lo, hi = s
         mid = (lo + hi) // 2
-        cm = pl.load(cumul_ref, (pl.ds(mid, 1),))[0]
+        cm = jax.lax.dynamic_slice(cumul, (mid,), (1,))[0]
         lo2 = jnp.where(cm <= g0, mid, lo)
         hi2 = jnp.where(cm <= g0, hi, mid)
         return lo2, hi2
@@ -53,14 +58,14 @@ def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
     # --- 2. windowed broadcast-compare count over (k0, ...] ---------------
     def wcond(s):
         start, _ = s
-        probe = pl.load(
-            cumul_ref, (pl.ds(jnp.minimum(start, n_cumul - 1), 1),))[0]
+        probe = jax.lax.dynamic_slice(
+            cumul, (jnp.minimum(start, n_cumul - 1),), (1,))[0]
         return (start < n_cumul) & (probe <= gmax)
 
     def wbody(s):
         start, count = s
         base = jnp.minimum(start, n_cumul - window)
-        win = pl.load(cumul_ref, (pl.ds(base, window),))
+        win = jax.lax.dynamic_slice(cumul, (base,), (window,))
         idx_ok = base + jax.lax.iota(jnp.int32, window) >= start
         hits = (win[None, :] <= gid[:, None]) & idx_ok[None, :]
         return start + window, count + jnp.sum(

@@ -18,7 +18,8 @@ def main():
     ap.add_argument("--scale", type=int, default=14)
     ap.add_argument("--ef", type=int, default=16)
     ap.add_argument("--roots", type=int, default=64)
-    ap.add_argument("--fold", default="list", choices=["list", "bitmap"])
+    ap.add_argument("--fold", default="list",
+                    choices=["list", "bitmap", "delta"])
     ap.add_argument("--direction", action="store_true")
     ap.add_argument("--validate", type=int, default=4)
     args = ap.parse_args()
@@ -31,8 +32,8 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType
 
+    from repro.dist.compat import make_mesh
     from repro.graphgen import rmat_edges
     from repro.core import Grid2D, partition_2d, validate_bfs
     from repro.core.partition import partition_2d_csr
@@ -45,7 +46,7 @@ def main():
     n = 1 << args.scale
     edges = rmat_edges(jax.random.key(1), args.scale, args.ef)
     edges_np = np.asarray(edges)
-    mesh = jax.make_mesh((R, C), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((R, C), ("r", "c"))
     grid = Grid2D.for_vertices(n, R, C)
     lg = partition_2d(edges_np, grid)
     graph = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
@@ -53,11 +54,11 @@ def main():
     if args.direction:
         csr = {k: jnp.asarray(v) for k, v in
                partition_2d_csr(edges_np, grid).items()}
-        bfs = BFS2DDirection(grid, mesh, edge_chunk=16384)
+        bfs = BFS2DDirection(grid, mesh, edge_chunk=16384,
+                             fold_codec=args.fold)
         run = lambda r: bfs.run(graph, csr, r)
     else:
-        bfs = BFS2D(grid, mesh, edge_chunk=16384,
-                    fold_bitmap=(args.fold == "bitmap"))
+        bfs = BFS2D(grid, mesh, edge_chunk=16384, fold_codec=args.fold)
         run = lambda r: bfs.run(graph, r)
 
     deg = np.bincount(edges_np[0], minlength=n)

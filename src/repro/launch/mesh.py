@@ -11,7 +11,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Works under --xla_force_host_platform_device_count=512 for either mesh
     (the single-pod mesh takes the first 256 placeholder devices)."""
     import jax
-    from jax.sharding import AxisType
+    from repro.dist.compat import make_mesh
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -23,11 +23,8 @@ def make_production_mesh(*, multi_pod: bool = False):
             "(set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "BEFORE importing jax -- dryrun.py does this)")
     if len(devs) == need:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
-    from jax.sharding import Mesh
-    return Mesh(np.asarray(devs[:need]).reshape(shape), axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+        return make_mesh(shape, axes)
+    return make_mesh(shape, axes, devices=devs[:need])
 
 
 def mesh_axes(mesh):

@@ -245,11 +245,20 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict: JAX 0.4.x returns a
+    one-element list of dicts, >= 0.5 the dict itself."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyze(compiled, *, model_flops: float | None = None,
             n_chips: int = 1) -> Roofline:
     text = compiled.as_text()
     la = analyze_hlo(text)                      # loop-aware (trip-weighted)
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     flops = max(la["flops"], float(cost.get("flops", 0.0)))
     hbm = max(la["bytes"], float(cost.get("bytes accessed", 0.0)))
     det = la["wire"]

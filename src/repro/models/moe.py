@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.frontier import bucket_append
+from repro.dist.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,7 +193,7 @@ def moe_apply(x, mp, cfg, mesh: Optional[MoEShard] = None):
     # check_vma=True: the replication checker is what makes the transpose
     # (backward pass) insert the psums for the replicated router and the
     # (pod, data)-replicated expert weights.
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mesh.mesh,
         in_specs=(tk, P(None, None), w13, w13, w2s),
         out_specs=(tk, P()), check_vma=True)(

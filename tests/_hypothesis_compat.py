@@ -1,0 +1,21 @@
+"""Soft dependency on hypothesis: property tests SKIP (rather than the whole
+module failing collection) where it is not installed -- this container has no
+network access; CI installs it and runs them for real."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    class _StrategyStub:
+        """Accepts any strategy construction; the test is skipped anyway."""
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (CI runs property tests)")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f

@@ -1,0 +1,59 @@
+"""Subprocess elastic-BFS check: lose devices mid-service, shrink the grid,
+re-partition from the edge list, and keep answering searches correctly.
+
+The BFS partition is a pure function of (edge list, R, C) -- elasticity for
+the paper's workload is re-partition + re-bind to a smaller mesh (see
+repro/ckpt/elastic.py).  Also exercises reshard_state's axis-dropping on the
+search outputs.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.ckpt.elastic import reshard_state, shrink_grid
+from repro.core import Grid2D, partition_2d, bfs_reference_py, validate_bfs
+from repro.core.bfs2d import BFS2D
+from repro.core.types import LocalGraph2D
+from repro.dist.compat import make_mesh
+from repro.graphgen import rmat_edges, build_csc
+
+SCALE, EF, ROOT = 9, 8, 3
+n = 1 << SCALE
+edges = rmat_edges(jax.random.key(0), SCALE, EF)
+edges_np = np.asarray(edges)
+co, ri = build_csc(edges, n)
+ref, _ = bfs_reference_py(co, ri, ROOT, n)
+
+
+def search(R, C, devices=None):
+    mesh = make_mesh((R, C), ("r", "c"), devices=devices)
+    grid = Grid2D.for_vertices(n, R, C)
+    lg = partition_2d(edges_np, grid)
+    graph = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                         jnp.asarray(lg.nnz))
+    out = BFS2D(grid, mesh, edge_chunk=2048).run(graph, ROOT)
+    lvl = np.asarray(out.level)[:n]
+    assert (lvl == ref).all(), f"{R}x{C}: levels mismatch"
+    validate_bfs(edges_np, lvl, np.asarray(out.pred)[:n], ROOT)
+    return mesh, out
+
+
+mesh8, out8 = search(2, 4)                       # full 2x4 service
+
+failed = 2                                       # "lose" two devices
+R2, C2 = shrink_grid(2, 4, failed)
+assert R2 * C2 <= 8 - failed
+mesh6, out6 = search(R2, C2, devices=jax.devices()[:R2 * C2])
+
+# prior outputs re-placed onto the shrunk mesh (missing axes dropped)
+re = reshard_state({"level": np.asarray(out8.level)},
+                   {"level": P(("missing",))}, mesh6)
+assert (np.asarray(re["level"]) == np.asarray(out8.level)).all()
+print("OK")

@@ -7,8 +7,8 @@ from repro.core import (Grid2D, bfs_reference_py, bfs_single, partition_2d,
                         validate_bfs, count_component_edges)
 from repro.core.bfs2d import BFS2D
 from repro.core.types import LocalGraph2D
+from repro.dist.compat import make_mesh
 from repro.graphgen import rmat_edges, build_csc
-from jax.sharding import AxisType
 
 
 def _graph(scale=8, ef=8, seed=0):
@@ -49,12 +49,14 @@ def test_bfs_single_disconnected():
 
 def test_validate_catches_corruption():
     edges, n, co, ri = _graph()
-    lvl, pred = bfs_reference_py(co, ri, 3, n)
+    # root must have a non-trivial component so there is a level to corrupt
+    root = int(np.flatnonzero(np.diff(np.asarray(co)) > 0)[0])
+    lvl, pred = bfs_reference_py(co, ri, root, n)
     bad = lvl.copy()
     vis = np.flatnonzero(bad > 0)
     bad[vis[0]] += 1
     with pytest.raises(AssertionError):
-        validate_bfs(np.asarray(edges), bad, pred, 3)
+        validate_bfs(np.asarray(edges), bad, pred, root)
 
 
 def test_component_edge_count():
@@ -64,13 +66,13 @@ def test_component_edge_count():
     assert count_component_edges(np.asarray(edges), lvl) == 1
 
 
-@pytest.mark.parametrize("fold_bitmap", [False, True])
-def test_bfs2d_single_cell_mesh(fold_bitmap):
+@pytest.mark.parametrize("fold_codec", ["list", "bitmap", "delta"])
+def test_bfs2d_single_cell_mesh(fold_codec):
     edges, n, co, ri = _graph(scale=7, ef=6, seed=4)
-    mesh = jax.make_mesh((1, 1), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("r", "c"))
     grid = Grid2D.for_vertices(n, 1, 1)
     lg = partition_2d(np.asarray(edges), grid)
-    bfs = BFS2D(grid, mesh, edge_chunk=512, fold_bitmap=fold_bitmap)
+    bfs = BFS2D(grid, mesh, edge_chunk=512, fold_codec=fold_codec)
     g = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
                      jnp.asarray(lg.nnz))
     out = bfs.run(g, 9)
@@ -78,3 +80,13 @@ def test_bfs2d_single_cell_mesh(fold_bitmap):
     assert (np.asarray(out.level)[:n] == ref).all()
     validate_bfs(np.asarray(edges), np.asarray(out.level)[:n],
                  np.asarray(out.pred)[:n], 9)
+    assert out.edges_scanned > 0
+
+
+def test_bfs2d_legacy_fold_bitmap_kwarg():
+    """fold_bitmap=True must keep selecting the bitmap codec."""
+    edges, n, co, ri = _graph(scale=7, ef=6, seed=4)
+    mesh = make_mesh((1, 1), ("r", "c"))
+    grid = Grid2D.for_vertices(n, 1, 1)
+    bfs = BFS2D(grid, mesh, edge_chunk=512, fold_bitmap=True)
+    assert bfs.engine.codec.name == "bitmap"

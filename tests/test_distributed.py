@@ -34,5 +34,10 @@ def test_bfs2d_grid_4x2_bitmap_fold():
 
 
 @pytest.mark.slow
+def test_bfs2d_grid_2x2_delta_fold():
+    _run("run_bfs2d.py", 2, 2, 9, 8, "delta")
+
+
+@pytest.mark.slow
 def test_dist_suite_1d_direction_spmm():
     _run("run_dist_suite.py", 2, 4)

@@ -1,0 +1,130 @@
+"""Fold wire-format coverage (DESIGN.md sec. 4).
+
+  * pack/unpack bitmap round-trip at non-multiple-of-32 block sizes;
+  * delta encode/decode round-trip (pure, no mesh);
+  * level/pred equality across fold_codec in {list, bitmap, delta} on the
+    same R-MAT graph (multi-device equality runs in tests/dist/);
+  * wire-size ordering: bitmap < delta < list for one fold exchange;
+  * the compat shim is the only module touching the version-specific
+    shard_map / AxisType jax API surface.
+"""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frontier as F
+from repro.core import Grid2D, partition_2d, bfs_reference_py, validate_bfs
+from repro.core.bfs2d import BFS2D
+from repro.core.types import LocalGraph2D
+from repro.dist import exchange as X
+from repro.dist.compat import make_mesh
+from repro.graphgen import rmat_edges, build_csc
+
+
+@pytest.mark.parametrize("S", [1, 7, 31, 32, 33, 63, 64, 65, 96, 127])
+def test_pack_bitmap_roundtrip_odd_sizes(S):
+    rng = np.random.default_rng(S)
+    m = rng.random((4, S)) < 0.4
+    packed = F.pack_bitmap(jnp.asarray(m))
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (4, (S + 31) // 32)
+    got = np.asarray(F.unpack_bitmap(packed, S))
+    assert got.shape == m.shape
+    assert (got == m).all()
+
+
+def test_pack_bitmap_pad_bits_are_zero():
+    m = jnp.ones((1, 33), bool)                  # 31 pad bits in word 2
+    packed = np.asarray(F.pack_bitmap(m))
+    assert packed[0, 0] == 0xFFFFFFFF and packed[0, 1] == 1
+
+
+def test_delta_codec_pure_roundtrip():
+    """encode -> decode recovers each bucket's id set, sorted ascending."""
+    S, C, j = 64, 4, 2
+    rng = np.random.default_rng(0)
+    dst = np.full((C, S), -1, np.int32)
+    cnts = []
+    for m in range(C):
+        k = rng.integers(0, S + 1)
+        t = rng.choice(S, size=k, replace=False)
+        dst[m, :k] = m * S + t                   # unsorted local-row ids
+        cnts.append(k)
+    cnt = jnp.asarray(cnts, jnp.int32)
+    gaps = X.DeltaFold.encode(jnp.asarray(dst), cnt, S)
+    assert gaps.dtype == jnp.uint16
+    # pretend every bucket was received by column j (sender-agnostic wire)
+    verts, out_cnt = X.DeltaFold.decode(gaps, cnt, jnp.int32(j), S)
+    verts = np.asarray(verts)
+    for m in range(C):
+        want = np.sort(dst[m, :cnts[m]] % S) + j * S
+        assert (verts[m, :cnts[m]] == want).all()
+        assert (verts[m, cnts[m]:] == -1).all()
+    assert (np.asarray(out_cnt) == np.asarray(cnt)).all()
+
+
+def test_delta_codec_rejects_wide_blocks():
+    with pytest.raises(ValueError):
+        X.get_fold_codec("delta", Grid2D(1, 1, 1 << 17))
+
+
+def test_wire_bytes_ordering():
+    grid = Grid2D(2, 4, 1 << 12)
+    b = {name: X.get_fold_codec(name, grid).wire_bytes(grid)
+         for name in X.FOLD_CODECS}
+    assert b["bitmap"] < b["delta"] < b["list"]
+    assert b["delta"] <= b["list"] // 2 + 4 * grid.C   # 16- vs 32-bit payload
+
+
+def test_fold_codecs_identical_levels_and_preds():
+    """Acceptance: delta == list (== bitmap) on an R-MAT graph, bit-exact."""
+    scale, ef, root = 10, 8, 3
+    edges = rmat_edges(jax.random.key(1), scale, ef)
+    n = 1 << scale
+    co, ri = build_csc(edges, n)
+    ref, _ = bfs_reference_py(co, ri, root, n)
+    mesh = make_mesh((1, 1), ("r", "c"))
+    grid = Grid2D.for_vertices(n, 1, 1)
+    lg = partition_2d(np.asarray(edges), grid)
+    g = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                     jnp.asarray(lg.nnz))
+    outs = {}
+    for codec in ("list", "bitmap", "delta"):
+        out = BFS2D(grid, mesh, edge_chunk=4096, fold_codec=codec).run(g, root)
+        assert (np.asarray(out.level)[:n] == ref).all(), codec
+        validate_bfs(np.asarray(edges), np.asarray(out.level)[:n],
+                     np.asarray(out.pred)[:n], root)
+        outs[codec] = out
+    for codec in ("bitmap", "delta"):
+        assert (np.asarray(outs[codec].level) ==
+                np.asarray(outs["list"].level)).all(), codec
+        assert (np.asarray(outs[codec].pred) ==
+                np.asarray(outs["list"].pred)).all(), codec
+        assert outs[codec].edges_scanned == outs["list"].edges_scanned
+
+
+def test_compat_is_only_direct_importer():
+    """No module outside dist/compat.py may touch the version-specific API."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    bad = re.compile(r"jax\.shard_map|jax\.experimental\.shard_map"
+                     r"|from jax\.sharding import [^\n]*AxisType"
+                     r"|jax\.sharding\.AxisType")
+    offenders = []
+    for base, _, files in os.walk(root):
+        if any(part in base for part in
+               (".git", ".pytest_cache", "__pycache__", "bench_out")):
+            continue
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(base, fn)
+            if path.endswith(os.path.join("dist", "compat.py")):
+                continue
+            with open(path) as f:
+                if bad.search(f.read()):
+                    offenders.append(os.path.relpath(path, root))
+    assert not offenders, f"direct jax API use outside compat: {offenders}"

@@ -1,6 +1,8 @@
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import frontier as F
 

@@ -65,17 +65,18 @@ def test_moe_quant_dispatch_close_to_exact():
 
 
 def test_spmm2d_edge_weights_single_cell():
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.core.spmm2d import spmm2d_device
     from repro.core import Grid2D, partition_2d
     from repro.core.types import LocalGraph2D
+    from repro.dist.compat import make_mesh, shard_map
     from repro.graphgen import rmat_edges
 
     n = 1 << 7
     edges = np.asarray(rmat_edges(jax.random.key(0), 7, 4))
     grid = Grid2D.for_vertices(n, 1, 1)
     lg = partition_2d(edges, grid)
-    mesh = jax.make_mesh((1, 1), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("r", "c"))
     x = jax.random.normal(jax.random.key(1), (grid.n, 4))
     w = jnp.arange(lg.row_idx.shape[-1], dtype=jnp.float32) % 3
 
@@ -85,7 +86,7 @@ def test_spmm2d_edge_weights_single_cell():
                              col_axes=("c",), edge_weight=w)
 
     dev = P(("r",), ("c",))
-    y = jax.jit(jax.shard_map(
+    y = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(dev, dev, dev, P(), P()),
         out_specs=P(), check_vma=False))(
             jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.models.gnn import e3
 from repro.models.gnn.equivariant import (EquivConfig, init_params, apply,

@@ -1,7 +1,8 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Grid2D, partition_2d, partition_1d
 from repro.core.partition import (local_row, local_col, owner_of, row2col,

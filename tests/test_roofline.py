@@ -3,8 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.roofline import (analyze_hlo, parse_collective_bytes,
-                                   _shape_bytes, _group_size)
+from repro.launch.roofline import (analyze_hlo, cost_analysis_dict,
+                                   parse_collective_bytes, _shape_bytes,
+                                   _group_size)
 
 
 def test_shape_bytes():
@@ -41,14 +42,14 @@ def test_loop_aware_flops_matches_unrolled():
     want = 2 * 64**3 * L
     assert abs(la["flops"] - want) / want < 0.01
     # XLA's own counter sees the body once -> must be ~L x smaller
-    assert c.cost_analysis()["flops"] < la["flops"]
+    assert cost_analysis_dict(c)["flops"] < la["flops"]
 
 
 def test_loop_aware_collectives_weighted():
     """A psum inside a scan must count trip_count times."""
-    import os
-    from jax.sharding import AxisType, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("d",))
 
     def f(x, w):
         def body(c, wi):
@@ -58,8 +59,8 @@ def test_loop_aware_collectives_weighted():
         return x
 
     L = 5
-    sm = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
-                       check_vma=False)
+    sm = shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                   check_vma=False)
     comp = jax.jit(sm).lower(
         jax.ShapeDtypeStruct((32, 32), jnp.float32),
         jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)).compile()

@@ -116,7 +116,8 @@ def test_checkpoint_atomic_no_tmp_left(tmp_path):
 
 
 def test_elastic_reshard_drops_missing_axes():
-    mesh = jax.make_mesh((1,), ("data",))
+    from repro.dist.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     tree = {"w": np.ones((4, 4), np.float32)}
     spec = {"w": P(("pod", "data"), "model")}  # pod/model don't exist now
     out = reshard_state(tree, spec, mesh)
