@@ -8,8 +8,8 @@ SCALE, EF, ROOTS = 14, 16, 3
 
 def main():
     rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-             "mean_s", "levels", "fold", "fold_bytes_per_edge", "lvl_sum",
-             "pred_sum")]
+             "mean_s", "levels", "fold", "fold_bytes_per_edge",
+             "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")]
     for variant, (r, c) in [("1d", (1, 8)), ("2d", (2, 4)),
                             ("1d", (1, 4)), ("2d", (2, 2))]:
         out = run_worker("bfs_worker.py", variant, r, c, SCALE, EF, ROOTS)

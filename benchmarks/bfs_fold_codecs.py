@@ -9,15 +9,17 @@ CODECS = ("list", "bitmap", "delta")
 
 
 def main():
-    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-             "mean_s", "levels", "fold", "fold_bytes_per_edge", "lvl_sum",
-             "pred_sum")]
+    header = ("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
+              "mean_s", "levels", "fold", "fold_bytes_per_edge",
+              "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")
+    rows = [header]
     sums = {}
     for codec in CODECS:
         out = run_worker("bfs_worker.py", "2d", R, C, SCALE, EF, ROOTS, codec)
         row = tuple(out.strip().split(","))
         rows.append(row)
-        sums[codec] = (row[11], row[12])            # (lvl_sum, pred_sum)
+        d = dict(zip(header, row))
+        sums[codec] = (d["lvl_sum"], d["pred_sum"])
     # emit BEFORE the equality gate: the rows are the diagnostic when it fires
     emit(rows, "fold_codecs")
     if len(set(sums.values())) != 1:

@@ -8,8 +8,8 @@ SCALE, EF, ROOTS = 15, 16, 4
 
 def main():
     rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-             "mean_s", "levels", "fold", "fold_bytes_per_edge", "lvl_sum",
-             "pred_sum")]
+             "mean_s", "levels", "fold", "fold_bytes_per_edge",
+             "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")]
     for r, c in GRIDS:
         out = run_worker("bfs_worker.py", "2d", r, c, SCALE, EF, ROOTS)
         rows.append(tuple(out.strip().split(",")))

@@ -39,7 +39,11 @@ def write_bench_json() -> None:
              "harmonic_TEPS": _f(r.get("harmonic_TEPS")),
              "mean_s": _f(r.get("mean_s")), "levels": _f(r.get("levels")),
              "fold": r.get("fold"),
-             "fold_bytes_per_edge": _f(r.get("fold_bytes_per_edge"))}
+             "fold_bytes_per_edge": _f(r.get("fold_bytes_per_edge")),
+             # the session API's amortised view: all roots in ONE compiled
+             # program (GraphSession.bfs(roots_batch))
+             "batched_sweep_s": _f(r.get("batched_sweep_s")),
+             "amortised_TEPS": _f(r.get("amortised_TEPS"))}
             for r in read_csv(name)]
 
     codecs = {}
@@ -47,6 +51,8 @@ def write_bench_json() -> None:
         codecs[r["fold"]] = {
             "harmonic_TEPS": _f(r.get("harmonic_TEPS")),
             "bytes_per_edge": _f(r.get("fold_bytes_per_edge")),
+            "batched_sweep_s": _f(r.get("batched_sweep_s")),
+            "amortised_TEPS": _f(r.get("amortised_TEPS")),
             "lvl_sum": r.get("lvl_sum"), "pred_sum": r.get("pred_sum"),
             "scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}'}
 
@@ -58,7 +64,7 @@ def write_bench_json() -> None:
         for r in read_csv("fig5_6_breakdown")]
 
     out = {
-        "schema": "BENCH_bfs/v1",
+        "schema": "BENCH_bfs/v2",   # v2: + batched_sweep_s / amortised_TEPS
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),

@@ -1,0 +1,13 @@
+"""Public session API (DESIGN.md sec. 7): plan once, query many.
+
+    from repro.api import BFSConfig, DistGraph
+
+    graph = DistGraph.from_edges(edges, BFSConfig(grid=(2, 4)))
+    session = graph.session()
+    out = session.bfs(roots)        # scalar root, or a batch in ONE program
+"""
+from repro.api.config import BFSConfig, resolve_fold_codec
+from repro.api.session import DistGraph, GraphSession, build_engine
+
+__all__ = ["BFSConfig", "DistGraph", "GraphSession", "build_engine",
+           "resolve_fold_codec"]

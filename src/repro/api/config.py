@@ -1,0 +1,102 @@
+"""BFSConfig: the ONE config object of the session API (DESIGN.md sec. 7).
+
+Every knob that used to be scattered across the `BFS1D` / `BFS2D` /
+`BFS2DDirection` constructors collapses here; direction optimisation is a
+flag (`direction=True`), not a separate driver class.  The config is frozen
+and hashable so it can key engine and AOT-executable caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+from repro.core.types import Grid2D
+
+
+def resolve_fold_codec(fold_codec=None, fold_bitmap=None):
+    """Route the legacy `fold_bitmap` kwarg into the `fold_codec` spelling.
+
+    `fold_bitmap` is deprecated: passing it (either value) warns and, when no
+    explicit fold_codec is given, maps True -> "bitmap" / False -> "list".
+    """
+    if fold_bitmap is not None:
+        warnings.warn(
+            "fold_bitmap is deprecated; spell the wire format as "
+            "BFSConfig(fold_codec='bitmap') (or fold_codec='bitmap' on the "
+            "driver shims)", DeprecationWarning, stacklevel=3)
+        if fold_codec is None:
+            fold_codec = "bitmap" if fold_bitmap else "list"
+    return "list" if fold_codec is None else fold_codec
+
+
+@dataclasses.dataclass(frozen=True)
+class BFSConfig:
+    """All knobs of a BFS query plan.
+
+    grid:        Grid2D | (R, C) | "RxC" | None.  None derives 1 x D from the
+                 bound mesh (or all local devices) at planning time.
+    fold_codec:  "list" | "bitmap" | "delta" | FoldCodec instance -- the fold
+                 wire format (DESIGN.md sec. 4).
+    edge_chunk:  CSC scan chunk size of the expand phase.
+    dedup:       winner-selection method ("scatter" | "sort").
+    max_levels:  level-loop bound.
+    direction:   enable Beamer direction optimisation (plans the CSR twin
+                 partition and switches per level on frontier size).
+    alpha:       direction heuristic threshold (bottom-up when the global
+                 frontier exceeds n / alpha).
+    row_axes /
+    col_axes:    mesh axes the processor grid's rows/columns span.
+    expand_fn:   optional kernel override for the CSC scan (Pallas path).
+    """
+    grid: Any = None
+    fold_codec: Any = "list"
+    edge_chunk: int = 8192
+    dedup: str = "scatter"
+    max_levels: int = 64
+    direction: bool = False
+    alpha: int = 24
+    row_axes: tuple = ("r",)
+    col_axes: tuple = ("c",)
+    expand_fn: Any = None
+
+    def __post_init__(self):
+        for f in ("row_axes", "col_axes"):
+            v = getattr(self, f)
+            if v is not None and not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(v))
+
+    @property
+    def codec_name(self) -> str:
+        fc = self.fold_codec
+        return fc if isinstance(fc, str) else getattr(fc, "name", repr(fc))
+
+    @property
+    def engine_key(self) -> tuple:
+        """What makes two configs share one DistBFSEngine (and hence one
+        AOT-compile cache line, together with graph shape and batch size)."""
+        return (self.codec_name, self.direction, self.edge_chunk, self.dedup,
+                self.max_levels, self.alpha, self.row_axes, self.col_axes,
+                self.expand_fn)
+
+    def resolve_grid(self, n: int, mesh=None) -> Grid2D:
+        """Concretise the `grid` spelling against n vertices (padding up)."""
+        g = self.grid
+        if isinstance(g, Grid2D):
+            return g
+        if g is None:
+            if mesh is not None:
+                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+                R = C = 1
+                for a in (self.row_axes or ()):
+                    R *= sizes[a]
+                for a in (self.col_axes or ()):
+                    C *= sizes[a]
+            else:
+                import jax
+                R, C = 1, jax.device_count()
+        elif isinstance(g, str):
+            R, C = (int(x) for x in g.lower().split("x"))
+        else:
+            R, C = g
+        return Grid2D.for_vertices(n, R, C)

@@ -1,0 +1,186 @@
+"""Two-phase session API: plan/residency vs query (DESIGN.md sec. 7).
+
+Phase 1 -- `DistGraph.from_edges(edges, config)` does everything that is
+per-GRAPH and per-LAYOUT: grid resolution, topology/mesh binding, the CSC
+partition (and the CSR twin only when direction optimisation is on), and
+device placement.  The result is a resident graph that answers many queries.
+
+Phase 2 -- `GraphSession.bfs(roots)` runs searches against the resident
+graph.  A scalar root returns one `BFSOutput`; a batch of roots executes as
+ONE compiled program (the engine's level loop under `lax.map` over the roots
+axis) and returns batched outputs.  Executables are AOT-compiled with
+`jit(...).lower().compile()` and cached on the DistGraph keyed by
+(engine key = codec/direction/..., graph array shapes, batch size), so a
+Graph500-style 64-root sweep traces the level loop exactly once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import BFSConfig
+from repro.core.direction import direction_step_factory
+from repro.core.partition import partition_2d, partition_2d_csr
+from repro.core.types import BFSOutput, LocalGraph2D
+from repro.dist.engine import DistBFSEngine
+from repro.dist.topology import Topology
+
+
+def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
+    """One engine per (topology, engine_key): the level-loop program with the
+    config's codec/chunking/direction baked in, independent of graph DATA."""
+    step_factory, n_extra = None, 0
+    if config.direction:
+        step_factory = direction_step_factory(topology, config.alpha)
+        n_extra = 2
+    return DistBFSEngine(
+        topology, fold_codec=config.fold_codec, edge_chunk=config.edge_chunk,
+        max_levels=config.max_levels, expand_fn=config.expand_fn,
+        dedup=config.dedup, step_factory=step_factory, n_extra=n_extra)
+
+
+class DistGraph:
+    """A resident, partitioned graph: plan once, query many.
+
+    Holds the device-placed CSC blocks (and CSR twin when planned), the
+    topology, and the engine + AOT-executable caches every `GraphSession`
+    over this graph shares.
+    """
+
+    def __init__(self, topology: Topology, csc: LocalGraph2D, *, csr=None,
+                 edges=None, n: int | None = None, config: BFSConfig = None):
+        self.topology = topology
+        self.grid = topology.grid
+        self.mesh = topology.mesh
+        self.csc = csc
+        self.csr = csr
+        self.n = int(n) if n is not None else topology.grid.n
+        self.config = config if config is not None else BFSConfig()
+        # host edge copy retained ONLY while it may still be needed to plan
+        # the CSR twin lazily (dropped once CSR exists; see release_edges)
+        self._edges = edges if csr is None else None
+        self._engines = {}           # engine_key -> DistBFSEngine
+        self._compiled = {}          # (engine_key, shapes, B) -> executable
+
+    @classmethod
+    def from_edges(cls, edges, config: BFSConfig = None, *, mesh=None,
+                   n: int | None = None) -> "DistGraph":
+        """Plan a graph into residency: partition + place on the mesh.
+
+        edges: (2, E) [src, dst] array (host or device).  n defaults to
+        max vertex id + 1; the grid pads it up to a multiple of R*C.
+        """
+        config = config if config is not None else BFSConfig()
+        edges_np = np.asarray(edges)
+        if n is None:
+            n = int(edges_np.max()) + 1 if edges_np.size else 1
+        grid = config.resolve_grid(n, mesh)
+        topology = Topology.for_grid(grid, mesh, config.row_axes,
+                                     config.col_axes)
+        lg = partition_2d(edges_np, grid)
+        csc = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                           jnp.asarray(lg.nnz))
+        csr = None
+        if config.direction:         # CSR twin only when bottom-up can run
+            csr = {k: jnp.asarray(v)
+                   for k, v in partition_2d_csr(edges_np, grid).items()}
+        return cls(topology, csc, csr=csr, edges=edges_np, n=n,
+                   config=config)   # edges kept only while csr is None
+
+    def ensure_csr(self):
+        """Plan the CSR twin on demand (a later direction=True session)."""
+        if self.csr is None:
+            if self._edges is None:
+                raise ValueError(
+                    "direction=True needs the CSR twin, but this DistGraph "
+                    "was built without edges; pass csr= or use from_edges")
+            self.csr = {k: jnp.asarray(v)
+                        for k, v in partition_2d_csr(self._edges,
+                                                     self.grid).items()}
+            self._edges = None       # both layouts resident -> edges done
+        return self.csr
+
+    def release_edges(self):
+        """Drop the retained host edge copy (long-lived serving graphs that
+        will never open a direction=True session)."""
+        self._edges = None
+
+    def engine_for(self, config: BFSConfig) -> DistBFSEngine:
+        key = config.engine_key
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = build_engine(self.topology, config)
+            self._engines[key] = eng
+        return eng
+
+    def session(self, config: BFSConfig = None) -> "GraphSession":
+        """Open a query session (defaults to the planning config)."""
+        return GraphSession(self, config if config is not None
+                            else self.config)
+
+
+class GraphSession:
+    """Query phase: many BFS searches over one resident DistGraph."""
+
+    def __init__(self, graph: DistGraph, config: BFSConfig = None, *,
+                 engine: DistBFSEngine = None):
+        self.graph = graph
+        self.config = config if config is not None else graph.config
+        if self.config.grid is not None:
+            want = self.config.resolve_grid(graph.n, graph.mesh)
+            if want != graph.grid:
+                raise ValueError(
+                    f"session config asks for a {want.R}x{want.C} grid but "
+                    f"the resident graph is planned {graph.grid.R}x"
+                    f"{graph.grid.C}; re-plan with DistGraph.from_edges")
+        if self.config.direction:
+            graph.ensure_csr()
+        self.engine = engine if engine is not None \
+            else graph.engine_for(self.config)
+
+    @property
+    def _extra(self) -> tuple:
+        if self.config.direction:
+            csr = self.graph.csr
+            return (csr["row_off"], csr["col_idx"])
+        return ()
+
+    def _compiled_for(self, B: int):
+        """AOT executable for a (B,)-roots sweep, cached on the DistGraph
+        keyed by (engine key, graph array shapes, B)."""
+        g = self.graph.csc
+        key = (self.config.engine_key, g.col_off.shape, g.row_idx.shape, B)
+        compiled = self.graph._compiled.get(key)
+        if compiled is None:
+            roots_aval = jax.ShapeDtypeStruct((B,), jnp.int32)
+            compiled = self.engine._run_batch.lower(
+                g.col_off, g.row_idx, g.nnz, *self._extra,
+                roots_aval).compile()
+            self.graph._compiled[key] = compiled
+        return compiled
+
+    def bfs(self, roots) -> BFSOutput:
+        """Search from a scalar root or a (B,) batch of roots.
+
+        Scalar: global (n,) level/pred (vertex-block order = plain global
+        vertex ids, padded to the grid), scalar n_levels, exact int
+        edges_scanned.  Batch: (B, n) level/pred, (B,) n_levels, tuple of B
+        edges_scanned -- bit-identical to running the roots one by one.
+        """
+        scalar = np.ndim(roots) == 0
+        roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
+        if roots_arr.ndim != 1:
+            raise ValueError(f"roots must be a scalar or 1D batch, got "
+                             f"shape {roots_arr.shape}")
+        B = roots_arr.shape[0]
+        g = self.graph.csc
+        outs = self._compiled_for(B)(
+            g.col_off, g.row_idx, g.nnz, *self._extra, roots_arr)
+        out = self.engine.assemble_batch(outs, B)
+        if scalar:
+            return BFSOutput(level=out.level[0], pred=out.pred[0],
+                             n_levels=out.n_levels[0],
+                             edges_scanned=out.edges_scanned[0])
+        return out

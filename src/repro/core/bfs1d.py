@@ -21,30 +21,50 @@ all-to-all, while the O(n) per-device map cost is unchanged.
 from __future__ import annotations
 
 from repro.core.types import LocalGraph2D, BFSOutput
-from repro.dist.engine import DistBFSEngine
 from repro.dist.topology import Topology
 
 
 class BFS1D:
-    """1D baseline: thin config of the shared engine on a 1 x P grid.
+    """DEPRECATED shim: the 1 x P degenerate grid through the session API.
 
     Partition the edge list with `partition_2d(edges, bfs.grid)` (the 1 x P
     grid pads n up to a multiple of P); results come back as plain global
-    (n,) arrays.
+    (n,) arrays.  New code should build a `BFSConfig(grid=(1, P),
+    row_axes=(), col_axes=axes)` session instead.
     """
 
     def __init__(self, n: int, mesh, axes=("p",), edge_chunk: int = 8192,
                  max_levels: int = 64, fold_codec="list"):
+        import warnings
+
+        from repro.api.config import BFSConfig
+        from repro.api.session import build_engine
+
+        warnings.warn(
+            "BFS1D is deprecated; use repro.api.DistGraph/GraphSession with "
+            "BFSConfig(grid=(1, P), row_axes=(), col_axes=axes)",
+            DeprecationWarning, stacklevel=2)
         self.n = n
         self.mesh = mesh
         self.topology = Topology.one_d(n, mesh, axes)
         self.grid = self.topology.grid
         self.P = self.grid.C
         self.ncl = self.grid.n_cols_local
-        self.engine = DistBFSEngine(
-            self.topology, fold_codec=fold_codec, edge_chunk=edge_chunk,
-            max_levels=max_levels)
+        self.config = BFSConfig(
+            grid=self.grid, fold_codec=fold_codec, edge_chunk=edge_chunk,
+            max_levels=max_levels, row_axes=self.topology.row_axes,
+            col_axes=self.topology.col_axes)
+        self.engine = build_engine(self.topology, self.config)
         self._run = self.engine._run
+        self._compiled = {}            # aval-keyed AOT cache, shared across
+                                       # every graph run through this shim
+
+    def _session(self, graph: LocalGraph2D):
+        from repro.api.session import DistGraph, GraphSession
+
+        dg = DistGraph(self.topology, graph, config=self.config)
+        dg._compiled = self._compiled  # executables are data-independent
+        return GraphSession(dg, self.config, engine=self.engine)
 
     def run(self, graph: LocalGraph2D, root) -> BFSOutput:
-        return self.engine.run(graph, root)
+        return self._session(graph).bfs(root)

@@ -18,35 +18,55 @@ The level loop, init and deferred-predecessor resolution live in
 from __future__ import annotations
 
 from repro.core.types import Grid2D, LocalGraph2D, BFSOutput
-from repro.dist.engine import DistBFSEngine
 from repro.dist.topology import Topology
 
 
 class BFS2D:
-    """Distributed 2D BFS bound to a mesh.
+    """DEPRECATED shim over the session API (repro.api).
 
-    Arrays for the graph carry leading (R, C) device axes (as produced by
-    `partition_2d`); results come back as global (n,) arrays laid out in
-    vertex-block order (b = j*R + i), i.e. plain global vertex ids.
+    Equivalent to `DistGraph(...).session()` with `BFSConfig(...)`; kept so
+    pre-session callers keep passing.  Arrays for the graph carry leading
+    (R, C) device axes (as produced by `partition_2d`); results come back as
+    global (n,) arrays laid out in vertex-block order (b = j*R + i), i.e.
+    plain global vertex ids.
 
     fold_codec selects the fold wire format ("list" | "bitmap" | "delta");
-    `fold_bitmap=True` is the legacy spelling of fold_codec="bitmap".
+    `fold_bitmap=True` is the deprecated legacy spelling of
+    fold_codec="bitmap".
     """
 
     def __init__(self, grid: Grid2D, mesh, row_axes=("r",), col_axes=("c",),
                  edge_chunk: int = 8192, expand_fn=None,
-                 fold_bitmap: bool = False, max_levels: int = 64,
+                 fold_bitmap: bool = None, max_levels: int = 64,
                  dedup: str = "scatter", fold_codec=None):
-        if fold_codec is None:
-            fold_codec = "bitmap" if fold_bitmap else "list"
+        import warnings
+
+        from repro.api.config import BFSConfig, resolve_fold_codec
+        from repro.api.session import build_engine
+
+        warnings.warn(
+            "BFS2D is deprecated; use repro.api.DistGraph.from_edges(...)"
+            ".session() instead", DeprecationWarning, stacklevel=2)
+        fold_codec = resolve_fold_codec(fold_codec, fold_bitmap)
+        self.config = BFSConfig(
+            grid=grid, fold_codec=fold_codec, edge_chunk=edge_chunk,
+            dedup=dedup, max_levels=max_levels, expand_fn=expand_fn,
+            row_axes=tuple(row_axes), col_axes=tuple(col_axes))
         self.grid = grid
         self.mesh = mesh
         self.topology = Topology(grid, mesh, row_axes=row_axes,
                                  col_axes=col_axes)
-        self.engine = DistBFSEngine(
-            self.topology, fold_codec=fold_codec, edge_chunk=edge_chunk,
-            max_levels=max_levels, expand_fn=expand_fn, dedup=dedup)
+        self.engine = build_engine(self.topology, self.config)
         self._run = self.engine._run   # (col_off, row_idx, nnz, root) -> outs
+        self._compiled = {}            # aval-keyed AOT cache, shared across
+                                       # every graph run through this shim
+
+    def _session(self, graph: LocalGraph2D):
+        from repro.api.session import DistGraph, GraphSession
+
+        dg = DistGraph(self.topology, graph, config=self.config)
+        dg._compiled = self._compiled  # executables are data-independent
+        return GraphSession(dg, self.config, engine=self.engine)
 
     def run(self, graph: LocalGraph2D, root) -> BFSOutput:
-        return self.engine.run(graph, root)
+        return self._session(graph).bfs(root)

@@ -81,35 +81,68 @@ def _bottomup_step(csr_row_off, csr_col_idx, st: BFSState, *, topo: Topology,
     return st2, total, edges_scanned
 
 
+def direction_step_factory(topo: Topology, alpha: int = 24):
+    """Engine `step_factory` wrapping the top-down step in Beamer's per-level
+    direction choice (bottom-up once the global frontier exceeds n/alpha).
+
+    The two extra per-device arrays are the CSR twin (row_off, col_idx)."""
+    grid = topo.grid
+
+    def step_factory(engine, graph, extra, i, j, topdown):
+        row_off, col_idx = extra
+
+        def step(st, prev_total):
+            def bottomup(st):
+                return _bottomup_step(row_off, col_idx, st, topo=topo,
+                                      i=i, j=j)
+
+            use_bu = prev_total > (grid.n // alpha)
+            return jax.lax.cond(use_bu, bottomup, topdown, st)
+
+        return step
+
+    return step_factory
+
+
 class BFS2DDirection:
-    """Direction-optimising distributed BFS (drop-in for BFS2D.run)."""
+    """DEPRECATED shim over the session API (drop-in for BFS2D.run).
+
+    Equivalent to `BFSConfig(direction=True)` on a `GraphSession`; kept so
+    pre-session callers keep working.  Use
+    `repro.api.DistGraph.from_edges(edges, BFSConfig(direction=True))`.
+    """
 
     def __init__(self, grid: Grid2D, mesh, row_axes=("r",), col_axes=("c",),
                  edge_chunk: int = 8192, alpha: int = 24,
                  max_levels: int = 64, fold_codec="list"):
+        import warnings
+
+        from repro.api.config import BFSConfig
+        from repro.api.session import build_engine
+
+        warnings.warn(
+            "BFS2DDirection is deprecated; use repro.api.DistGraph/"
+            "GraphSession with BFSConfig(direction=True)",
+            DeprecationWarning, stacklevel=2)
         self.grid, self.mesh = grid, mesh
         self.alpha = alpha
+        self.config = BFSConfig(
+            grid=grid, fold_codec=fold_codec, edge_chunk=edge_chunk,
+            max_levels=max_levels, direction=True, alpha=alpha,
+            row_axes=tuple(row_axes), col_axes=tuple(col_axes))
         self.topology = Topology(grid, mesh, row_axes=row_axes,
                                  col_axes=col_axes)
-        topo = self.topology
-
-        def step_factory(engine, graph, extra, i, j, topdown):
-            row_off, col_idx = extra
-
-            def step(st, prev_total):
-                def bottomup(st):
-                    return _bottomup_step(row_off, col_idx, st, topo=topo,
-                                          i=i, j=j)
-
-                use_bu = prev_total > (grid.n // alpha)
-                return jax.lax.cond(use_bu, bottomup, topdown, st)
-
-            return step
-
-        self.engine = DistBFSEngine(
-            topo, fold_codec=fold_codec, edge_chunk=edge_chunk,
-            max_levels=max_levels, step_factory=step_factory, n_extra=2)
+        self.engine = build_engine(self.topology, self.config)
         self._run = self.engine._run
+        self._compiled = {}            # aval-keyed AOT cache, shared across
+                                       # every graph run through this shim
+
+    def _session(self, graph: LocalGraph2D, csr: dict):
+        from repro.api.session import DistGraph, GraphSession
+
+        dg = DistGraph(self.topology, graph, csr=csr, config=self.config)
+        dg._compiled = self._compiled  # executables are data-independent
+        return GraphSession(dg, self.config, engine=self.engine)
 
     def run(self, graph: LocalGraph2D, csr: dict, root) -> BFSOutput:
-        return self.engine.run(graph, root, csr["row_off"], csr["col_idx"])
+        return self._session(graph, csr).bfs(root)

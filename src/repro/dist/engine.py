@@ -125,7 +125,11 @@ class DistBFSEngine:
         self.dedup = dedup
         self.step_factory = step_factory
         self.n_extra = n_extra
+        # traces of the level loop (scalar or batched); jit/AOT cache hits do
+        # not retrace, so tests can assert a 64-root sweep compiles once
+        self.trace_count = 0
         self._run = jax.jit(self._build())
+        self._run_batch = jax.jit(self._build(batched=True))
 
     # -- one top-down level (paper Alg. 2 lines 12-18) -----------------------
     def topdown_step(self, graph: LocalGraph2D, st: BFSState, *, i, j):
@@ -170,49 +174,73 @@ class DistBFSEngine:
         return st2, topo.psum_all(nc), ex.edges_scanned
 
     # -- whole-search program (lax.while_loop over levels) -------------------
-    def _build(self):
+    def _build(self, batched: bool = False):
+        """Device program for one root (scalar) or a (B,) roots axis.
+
+        The batched program runs the whole level loop per root under
+        `lax.map` (a scan: per-root work stays proportional to that root's
+        levels, unlike vmap which would pad every root to the slowest), so a
+        multi-root sweep is ONE compiled executable.
+        """
         topo, grid = self.topo, self.grid
 
         def device_fn(col_off, row_idx, nnz, *rest):
-            extra, root = rest[:-1], rest[-1]
+            extra, roots = rest[:-1], rest[-1]
             graph = LocalGraph2D(col_off=col_off[0, 0], row_idx=row_idx[0, 0],
                                  nnz=nnz[0, 0])
             extra = tuple(e[0, 0] for e in extra)
             i, j = topo.device_coords()
-            st = init_state(root, grid=grid, i=i, j=j)
 
-            topdown = functools.partial(self.topdown_step, graph, i=i, j=j)
-            if self.step_factory is None:
-                step = lambda st, prev_total: topdown(st)
+            def search(root):
+                st = init_state(root, grid=grid, i=i, j=j)
+
+                topdown = functools.partial(self.topdown_step, graph, i=i,
+                                            j=j)
+                if self.step_factory is None:
+                    step = lambda st, prev_total: topdown(st)
+                else:
+                    step = self.step_factory(self, graph, extra, i, j,
+                                             topdown)
+
+                def cond(carry):
+                    st, total, hi, lo = carry
+                    return (total > 0) & (st.lvl <= self.max_levels)
+
+                def body(carry):
+                    st, total, hi, lo = carry
+                    st2, total2, scanned = step(st, total)
+                    hi, lo = wide_add(hi, lo, scanned)
+                    return st2, total2, hi, lo
+
+                init_total = topo.psum_all(st.front_cnt)
+                st, _, hi, lo = jax.lax.while_loop(
+                    cond, body,
+                    (st, init_total, jnp.uint32(0), jnp.uint32(0)))
+
+                pred = X.resolve_preds(st.pred, topo=topo, j=j)
+                level = owned_level(st.level, grid=grid, j=j)
+                return level, pred, st.lvl, hi, lo
+
+            if batched:
+                level, pred, lvl, hi, lo = jax.lax.map(search, roots)
             else:
-                step = self.step_factory(self, graph, extra, i, j, topdown)
-
-            def cond(carry):
-                st, total, hi, lo = carry
-                return (total > 0) & (st.lvl <= self.max_levels)
-
-            def body(carry):
-                st, total, hi, lo = carry
-                st2, total2, scanned = step(st, total)
-                hi, lo = wide_add(hi, lo, scanned)
-                return st2, total2, hi, lo
-
-            init_total = topo.psum_all(st.front_cnt)
-            st, _, hi, lo = jax.lax.while_loop(
-                cond, body,
-                (st, init_total, jnp.uint32(0), jnp.uint32(0)))
-
-            pred = X.resolve_preds(st.pred, topo=topo, j=j)
-            level = owned_level(st.level, grid=grid, j=j)
-            return (level[None, None], pred[None, None], st.lvl[None, None],
+                level, pred, lvl, hi, lo = search(roots)
+            return (level[None, None], pred[None, None], lvl[None, None],
                     hi[None, None], lo[None, None])
 
         dev = topo.dev_spec
         out_g = topo.out_block_spec
-        return topo.shard_map(
+        mapped = topo.shard_map(
             device_fn,
             in_specs=(dev,) * (3 + self.n_extra) + (P(),),
             out_specs=(out_g, out_g, dev, dev, dev))
+
+        def counted(*args):
+            # runs at TRACE time only (jit / .lower()); cache hits skip it
+            self.trace_count += 1
+            return mapped(*args)
+
+        return counted
 
     def run(self, graph: LocalGraph2D, root, *extra) -> BFSOutput:
         """Search from `root`; extra = the step_factory's per-device arrays.
@@ -224,3 +252,16 @@ class DistBFSEngine:
             graph.col_off, graph.row_idx, graph.nnz, *extra, jnp.int32(root))
         return BFSOutput(level=level.reshape(-1), pred=pred.reshape(-1),
                          n_levels=lvls.max(), edges_scanned=wide_total(hi, lo))
+
+    def assemble_batch(self, outs, B: int) -> BFSOutput:
+        """Gathered batched device outputs -> global (B, n) BFSOutput."""
+        level, pred, lvls, hi, lo = outs
+        Pn, S = self.grid.P, self.grid.S
+        level = jnp.swapaxes(level.reshape(Pn, B, S), 0, 1).reshape(B, -1)
+        pred = jnp.swapaxes(pred.reshape(Pn, B, S), 0, 1).reshape(B, -1)
+        n_levels = lvls.reshape(-1, B).max(axis=0)
+        hi_s = np.asarray(hi).astype(np.int64).reshape(-1, B).sum(axis=0)
+        lo_s = np.asarray(lo).astype(np.int64).reshape(-1, B).sum(axis=0)
+        scanned = tuple((int(h) << 32) + int(l) for h, l in zip(hi_s, lo_s))
+        return BFSOutput(level=level, pred=pred, n_levels=n_levels,
+                         edges_scanned=scanned)

@@ -59,6 +59,38 @@ class Topology:
                 f"col_axes={self.col_axes})")
 
     @classmethod
+    def for_grid(cls, grid: Grid2D, mesh=None, row_axes=("r",),
+                 col_axes=("c",)) -> "Topology":
+        """Bind a grid to `mesh`, or build a mesh honouring the given axes.
+
+        This is the session API's planning entry point: with no mesh it
+        creates a mesh whose axes are the REQUESTED row/col axis names (one
+        per grid dimension; an empty axes tuple needs that dimension to be
+        1, e.g. the degenerate 1 x P topology with row_axes=()); with a mesh
+        it binds the given axes exactly like the constructor.
+        """
+        if mesh is None:
+            row_axes, col_axes = _axes(row_axes), _axes(col_axes)
+            if len(row_axes) > 1 or len(col_axes) > 1:
+                raise ValueError(
+                    "pass a mesh when grid rows/cols span multiple axes "
+                    f"(row_axes={row_axes}, col_axes={col_axes})")
+            names, sizes = [], []
+            for axes, size, what in ((row_axes, grid.R, "rows"),
+                                     (col_axes, grid.C, "cols")):
+                if axes:
+                    names.append(axes[0])
+                    sizes.append(size)
+                elif size != 1:
+                    raise ValueError(
+                        f"grid {what}={size} but no mesh axes span them")
+            if not names:                       # 1 x 1 grid, no axes asked
+                names, sizes = ["r", "c"], [1, 1]
+                row_axes, col_axes = ("r",), ("c",)
+            mesh = compat.make_mesh(tuple(sizes), tuple(names))
+        return cls(grid, mesh, row_axes=row_axes, col_axes=col_axes)
+
+    @classmethod
     def one_d(cls, n: int, mesh, axes=("p",)) -> "Topology":
         """The 1D baseline as the degenerate 1 x P grid (n padded to P)."""
         axes = _axes(axes)

@@ -1,0 +1,245 @@
+"""Session API coverage (DESIGN.md sec. 7).
+
+  * scalar + batched `GraphSession.bfs` vs the python reference;
+  * batched-vs-sequential bit-exactness (levels AND preds AND edge counts)
+    across all three fold codecs, and for direction optimisation;
+  * AOT trace discipline: a 64-root sweep traces/compiles the level loop at
+    most once per (codec, direction) pair, and repeat sweeps hit the cache;
+  * planning: CSR twin only partitioned when direction is on (lazily on a
+    later direction session);
+  * config spellings + the deprecated `fold_bitmap` kwarg and driver shims.
+
+Multi-device session checks run in tests/dist/run_session.py.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import BFSConfig, DistGraph, GraphSession
+from repro.core import (Grid2D, bfs_reference_py, partition_2d, validate_bfs)
+from repro.core.types import LocalGraph2D
+from repro.dist.compat import make_mesh
+from repro.graphgen import rmat_edges, build_csc
+
+SCALE, EF = 8, 8
+N = 1 << SCALE
+
+
+@pytest.fixture(scope="module")
+def graph_data():
+    edges = rmat_edges(jax.random.key(0), SCALE, EF)
+    edges_np = np.asarray(edges)
+    co, ri = build_csc(edges, N)
+    deg = np.bincount(edges_np[0], minlength=N)
+    roots = np.random.default_rng(1).choice(np.flatnonzero(deg > 0), 64,
+                                            replace=False)
+    return edges_np, co, ri, roots
+
+
+def _session(edges_np, codec="list", direction=False):
+    cfg = BFSConfig(grid=(1, 1), fold_codec=codec, edge_chunk=512,
+                    direction=direction)
+    return DistGraph.from_edges(edges_np, cfg, n=N).session()
+
+
+def test_scalar_bfs_matches_reference(graph_data):
+    edges_np, co, ri, roots = graph_data
+    sess = _session(edges_np)
+    root = int(roots[0])
+    out = sess.bfs(root)
+    ref, _ = bfs_reference_py(co, ri, root, N)
+    assert (np.asarray(out.level)[:N] == ref).all()
+    validate_bfs(edges_np, np.asarray(out.level)[:N],
+                 np.asarray(out.pred)[:N], root)
+    assert isinstance(out.edges_scanned, int) and out.edges_scanned > 0
+
+
+@pytest.mark.parametrize("codec", ["list", "bitmap", "delta"])
+def test_batched_bitexact_vs_sequential(graph_data, codec):
+    """session.bfs(batch) levels AND preds identical to looping session.bfs
+    per root, for every fold codec."""
+    edges_np, co, ri, roots = graph_data
+    sess = _session(edges_np, codec=codec)
+    batch = roots[:8]
+    bout = sess.bfs(batch)
+    assert bout.level.shape == (8, sess.graph.grid.n)
+    for b, root in enumerate(batch):
+        sout = sess.bfs(int(root))
+        assert (np.asarray(bout.level[b]) == np.asarray(sout.level)).all()
+        assert (np.asarray(bout.pred[b]) == np.asarray(sout.pred)).all()
+        assert int(bout.n_levels[b]) == int(sout.n_levels)
+        assert bout.edges_scanned[b] == sout.edges_scanned
+        ref, _ = bfs_reference_py(co, ri, int(root), N)
+        assert (np.asarray(bout.level[b])[:N] == ref).all()
+
+
+def test_batched_bitexact_direction(graph_data):
+    edges_np, co, ri, roots = graph_data
+    sess = _session(edges_np, direction=True)
+    batch = roots[:6]
+    bout = sess.bfs(batch)
+    for b, root in enumerate(batch):
+        sout = sess.bfs(int(root))
+        assert (np.asarray(bout.level[b]) == np.asarray(sout.level)).all()
+        assert (np.asarray(bout.pred[b]) == np.asarray(sout.pred)).all()
+        ref, _ = bfs_reference_py(co, ri, int(root), N)
+        assert (np.asarray(bout.level[b])[:N] == ref).all()
+        validate_bfs(edges_np, np.asarray(bout.level[b])[:N],
+                     np.asarray(bout.pred[b])[:N], int(root))
+
+
+@pytest.mark.parametrize("codec,direction",
+                         [("list", False), ("bitmap", False),
+                          ("delta", False), ("list", True)])
+def test_64_root_sweep_traces_once(graph_data, codec, direction):
+    """Acceptance: a 64-root sweep traces/compiles the level loop at most
+    once per (codec, direction) pair; repeat sweeps are cache hits."""
+    edges_np, _, _, roots = graph_data
+    sess = _session(edges_np, codec=codec, direction=direction)
+    assert sess.engine.trace_count == 0
+    out1 = sess.bfs(roots)
+    assert sess.engine.trace_count == 1, "sweep must trace exactly once"
+    out2 = sess.bfs(roots[::-1].copy())
+    assert sess.engine.trace_count == 1, "second sweep must hit the cache"
+    assert (np.asarray(out1.level[0]) == np.asarray(out2.level[63])).all()
+
+
+def test_compiled_cache_shared_across_sessions(graph_data):
+    edges_np, _, _, roots = graph_data
+    cfg = BFSConfig(grid=(1, 1), fold_codec="list", edge_chunk=512)
+    graph = DistGraph.from_edges(edges_np, cfg, n=N)
+    s1, s2 = graph.session(), graph.session()
+    assert s1.engine is s2.engine, "same engine_key must share the engine"
+    s1.bfs(roots[:4])
+    s2.bfs(roots[:4])
+    assert s1.engine.trace_count == 1, "sessions must share the AOT cache"
+
+
+def test_csr_only_planned_when_direction_on(graph_data):
+    edges_np, co, ri, roots = graph_data
+    graph = DistGraph.from_edges(
+        edges_np, BFSConfig(grid=(1, 1), edge_chunk=512), n=N)
+    assert graph.csr is None, "CSR twin must not be built for top-down only"
+    # a later direction session plans it lazily from the retained edges
+    dsess = graph.session(BFSConfig(grid=(1, 1), edge_chunk=512,
+                                    direction=True))
+    assert graph.csr is not None
+    root = int(roots[0])
+    ref, _ = bfs_reference_py(co, ri, root, N)
+    assert (np.asarray(dsess.bfs(root).level)[:N] == ref).all()
+
+
+def test_csr_required_when_graph_has_no_edges(graph_data):
+    edges_np, _, _, _ = graph_data
+    grid = Grid2D.for_vertices(N, 1, 1)
+    lg = partition_2d(edges_np, grid)
+    csc = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                       jnp.asarray(lg.nnz))
+    from repro.dist.topology import Topology
+    graph = DistGraph(Topology.for_grid(grid), csc)
+    with pytest.raises(ValueError, match="CSR"):
+        graph.session(BFSConfig(direction=True))
+
+
+def test_csr_planning_releases_host_edges(graph_data):
+    """The retained host edge copy exists only to plan the CSR twin lazily:
+    gone once CSR is resident (eagerly or lazily) or on release_edges()."""
+    edges_np = graph_data[0]
+    eager = DistGraph.from_edges(
+        edges_np, BFSConfig(grid=(1, 1), edge_chunk=512, direction=True),
+        n=N)
+    assert eager.csr is not None and eager._edges is None
+    lazy = DistGraph.from_edges(
+        edges_np, BFSConfig(grid=(1, 1), edge_chunk=512), n=N)
+    assert lazy._edges is not None
+    lazy.ensure_csr()
+    assert lazy.csr is not None and lazy._edges is None
+    rel = DistGraph.from_edges(
+        edges_np, BFSConfig(grid=(1, 1), edge_chunk=512), n=N)
+    rel.release_edges()
+    with pytest.raises(ValueError, match="CSR"):
+        rel.session(BFSConfig(direction=True))
+
+
+def test_session_rejects_mismatched_grid(graph_data):
+    edges_np = graph_data[0]
+    graph = DistGraph.from_edges(
+        edges_np, BFSConfig(grid=(1, 1), edge_chunk=512), n=N)
+    with pytest.raises(ValueError, match="re-plan"):
+        graph.session(BFSConfig(grid=(2, 2)))
+    graph.session(BFSConfig())     # grid=None defers to the resident plan
+
+
+def test_for_grid_honors_requested_axes(graph_data):
+    """Planning without a mesh must build the mesh over the REQUESTED axis
+    names (e.g. the degenerate 1 x P spelling with row_axes=())."""
+    from repro.dist.topology import Topology
+
+    edges_np = graph_data[0]
+    g = DistGraph.from_edges(
+        edges_np,
+        BFSConfig(grid=(1, 1), row_axes=(), col_axes=("p",), edge_chunk=512),
+        n=N)
+    assert g.topology.row_axes == () and g.topology.col_axes == ("p",)
+    assert g.mesh.axis_names == ("p",)
+    out = g.session().bfs(3)
+    assert out.level.shape == (g.grid.n,)
+    with pytest.raises(ValueError, match="multiple axes"):
+        Topology.for_grid(Grid2D.for_vertices(N, 1, 1),
+                          row_axes=("a", "b"), col_axes=("c",))
+
+
+def test_config_grid_spellings(graph_data):
+    edges_np, _, _, _ = graph_data
+    for spec in [Grid2D.for_vertices(N, 1, 1), (1, 1), "1x1", None]:
+        cfg = BFSConfig(grid=spec)
+        assert cfg.resolve_grid(N) == Grid2D.for_vertices(N, 1, 1), spec
+
+
+def test_config_is_hashable_cache_key():
+    a = BFSConfig(fold_codec="delta", direction=True)
+    b = BFSConfig(fold_codec="delta", direction=True)
+    assert a == b and hash(a) == hash(b)
+    assert a.engine_key == b.engine_key
+    assert a.engine_key != BFSConfig(fold_codec="delta").engine_key
+
+
+def test_fold_bitmap_kwarg_deprecated(graph_data):
+    from repro.api.config import resolve_fold_codec
+    from repro.core.bfs2d import BFS2D
+
+    with pytest.warns(DeprecationWarning, match="fold_bitmap"):
+        assert resolve_fold_codec(None, True) == "bitmap"
+    with pytest.warns(DeprecationWarning, match="fold_bitmap"):
+        assert resolve_fold_codec(None, False) == "list"
+
+    edges_np = graph_data[0]
+    grid = Grid2D.for_vertices(N, 1, 1)
+    mesh = make_mesh((1, 1), ("r", "c"))
+    with pytest.warns(DeprecationWarning):
+        bfs = BFS2D(grid, mesh, edge_chunk=512, fold_bitmap=True)
+    assert bfs.engine.codec.name == "bitmap"   # behaviour kept
+
+
+def test_driver_shims_deprecated_but_working(graph_data):
+    """BFS2D shim warns, runs through the session, and matches it."""
+    from repro.core.bfs2d import BFS2D
+
+    edges_np, co, ri, roots = graph_data
+    root = int(roots[0])
+    grid = Grid2D.for_vertices(N, 1, 1)
+    mesh = make_mesh((1, 1), ("r", "c"))
+    lg = partition_2d(edges_np, grid)
+    g = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
+                     jnp.asarray(lg.nnz))
+    with pytest.warns(DeprecationWarning, match="BFS2D"):
+        bfs = BFS2D(grid, mesh, edge_chunk=512)
+    out = bfs.run(g, root)
+    ref, _ = bfs_reference_py(co, ri, root, N)
+    assert (np.asarray(out.level)[:N] == ref).all()
+    assert bfs.engine.trace_count == 1
+    bfs.run(g, root + 0)   # same session + program, no retrace
+    assert bfs.engine.trace_count == 1

@@ -41,3 +41,8 @@ def test_bfs2d_grid_2x2_delta_fold():
 @pytest.mark.slow
 def test_dist_suite_1d_direction_spmm():
     _run("run_dist_suite.py", 2, 4)
+
+
+@pytest.mark.slow
+def test_session_api_grid_2x2():
+    _run("run_session.py", 2, 2)
