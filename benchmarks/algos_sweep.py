@@ -1,0 +1,89 @@
+"""Frontier-program sweep: CC / SSSP / multi-source BFS wall time and
+traversal rate per fold codec (DESIGN.md sec. 8), emitted as
+bench_out/algos_sweep.csv + bench_out/BENCH_algos.json so the subsystem's
+perf trajectory is trackable across PRs alongside BENCH_bfs.
+
+edges/s uses each program's own exact `edges_scanned` accounting (64-bit
+safe) over the best-of-iters wall time -- a traversal rate in the program's
+native work unit, NOT Graph500 TEPS (which counts input component edges and
+applies to BFS only).  A cross-codec checksum per algorithm asserts the wire
+formats stay bit-identical.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, emit, emit_json
+
+SCALE, EF = 13, 8
+CODECS = ("list", "bitmap", "delta")
+ITERS = 3
+
+
+def _time(fn, field, iters=ITERS):
+    """Best-of-iters wall time of fn(); field(out) forces the result."""
+    field(fn())                          # warm/compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        field(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    import jax
+
+    from repro.api import BFSConfig, DistGraph
+    from repro.graphgen import rmat_edges
+
+    n = 1 << SCALE
+    edges = np.asarray(rmat_edges(jax.random.key(11), SCALE, EF))
+    w = np.random.default_rng(0).integers(1, 256, size=edges.shape[1]) \
+        .astype(np.uint8)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(edge_chunk=16384), n=n, weights=w)
+    sess = graph.session()
+    deg = np.bincount(edges[0], minlength=n)
+    roots = np.random.default_rng(1).choice(np.flatnonzero(deg > 0), 8,
+                                            replace=False)
+    sources = roots[:4]
+
+    algos = {
+        "cc": (lambda codec: sess.connected_components(fold_codec=codec),
+               lambda o: np.asarray(o.labels)),
+        "sssp": (lambda codec: sess.sssp(int(roots[0]), fold_codec=codec),
+                 lambda o: np.asarray(o.dist)),
+        "multi_bfs": (lambda codec: sess.multi_bfs(sources,
+                                                   fold_codec=codec),
+                      lambda o: np.asarray(o.src)),
+    }
+
+    rows = [("algo", "codec", "scale", "ef", "wall_s", "edges_scanned",
+             "edges_per_s", "checksum")]
+    result = {}
+    for name, (run, field) in algos.items():
+        sums = {}
+        for codec in CODECS:
+            out = run(codec)
+            wall = _time(lambda: run(codec), field)
+            scanned = int(out.edges_scanned)
+            checksum = int(field(out).astype(np.int64).sum())
+            sums[codec] = checksum
+            rows.append((name, codec, SCALE, EF, f"{wall:.4f}", scanned,
+                         f"{scanned / wall:.3e}", checksum))
+            result.setdefault(name, {})[codec] = {
+                "wall_s": wall, "edges_scanned": scanned,
+                "edges_per_s": scanned / wall}
+        if len(set(sums.values())) != 1:
+            raise AssertionError(f"{name}: codecs disagree: {sums}")
+        result[name]["codecs_agree"] = True
+
+    emit(rows, "algos_sweep")
+    path = emit_json({"schema": "BENCH_algos/v1", "scale": SCALE, "ef": EF,
+                      "algos": result}, "BENCH_algos")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

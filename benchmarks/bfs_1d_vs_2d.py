@@ -1,15 +1,13 @@
 """Fig. 7 analog: the paper's ORIGINAL 1D modulo-partition code vs the 2D
 code on the same graphs + devices.  Reports measured TEPS/time and (the
 paper's key claim) the communication-volume ratio."""
-from benchmarks.common import emit, run_worker
+from benchmarks.common import BFS_WORKER_HEADER, emit, run_worker
 
 SCALE, EF, ROOTS = 14, 16, 3
 
 
 def main():
-    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-             "mean_s", "levels", "fold", "fold_bytes_per_edge",
-             "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")]
+    rows = [BFS_WORKER_HEADER]
     for variant, (r, c) in [("1d", (1, 8)), ("2d", (2, 4)),
                             ("1d", (1, 4)), ("2d", (2, 2))]:
         out = run_worker("bfs_worker.py", variant, r, c, SCALE, EF, ROOTS)

@@ -2,16 +2,14 @@
 the SAME scale-14 searches under each fold wire format, reporting TEPS and
 measured bytes-per-edge, and asserting the outputs are bit-identical (the
 lvl_sum/pred_sum checksums must agree across the worker processes)."""
-from benchmarks.common import emit, run_worker
+from benchmarks.common import BFS_WORKER_HEADER, emit, run_worker
 
 R, C, SCALE, EF, ROOTS = 2, 2, 14, 16, 3
 CODECS = ("list", "bitmap", "delta")
 
 
 def main():
-    header = ("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-              "mean_s", "levels", "fold", "fold_bytes_per_edge",
-              "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")
+    header = BFS_WORKER_HEADER
     rows = [header]
     sums = {}
     for codec in CODECS:

@@ -1,15 +1,13 @@
 """Fig. 4 analog: strong scaling on a fixed graph (reduced: scale 15, the
 paper uses 25), devices 1..8."""
-from benchmarks.common import emit, run_worker
+from benchmarks.common import BFS_WORKER_HEADER, emit, run_worker
 
 GRIDS = [(1, 1), (1, 2), (2, 2), (2, 4)]
 SCALE, EF, ROOTS = 15, 16, 4
 
 
 def main():
-    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-             "mean_s", "levels", "fold", "fold_bytes_per_edge",
-             "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")]
+    rows = [BFS_WORKER_HEADER]
     for r, c in GRIDS:
         out = run_worker("bfs_worker.py", "2d", r, c, SCALE, EF, ROOTS)
         rows.append(tuple(out.strip().split(",")))

@@ -1,6 +1,6 @@
 """Fig. 3 analog: weak scaling -- scale grows with device count (reduced:
 scale 13 + log2 P at edge factor 16, devices 1..8 forced host devices)."""
-from benchmarks.common import emit, run_worker
+from benchmarks.common import BFS_WORKER_HEADER, emit, run_worker
 
 GRIDS = [(1, 1), (1, 2), (2, 2), (2, 4)]
 BASE_SCALE = 13
@@ -9,9 +9,7 @@ ROOTS = 4
 
 
 def main():
-    rows = [("variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS",
-             "mean_s", "levels", "fold", "fold_bytes_per_edge",
-             "batched_sweep_s", "amortised_TEPS", "lvl_sum", "pred_sum")]
+    rows = [BFS_WORKER_HEADER]
     for i, (r, c) in enumerate(GRIDS):
         out = run_worker("bfs_worker.py", "2d", r, c, BASE_SCALE + i, EF,
                          ROOTS)

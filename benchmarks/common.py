@@ -9,6 +9,17 @@ import time
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "bench_out")
 
+# One header for every suite driving workers/bfs_worker.py -- the worker's
+# print order and the suites' CSVs must agree, so it lives here once.
+# batched_harmonic_TEPS: harmonic mean over roots of
+#   component_edges(root) / (sweep_s / n_roots)
+# -- the same count_component_edges numerator as the per-root harmonic_TEPS
+# column, applied to the amortised per-root time of the batched sweep.
+BFS_WORKER_HEADER = (
+    "variant", "R", "C", "scale", "ef", "roots", "harmonic_TEPS", "mean_s",
+    "levels", "fold", "fold_bytes_per_edge", "batched_sweep_s",
+    "amortised_TEPS", "batched_harmonic_TEPS", "lvl_sum", "pred_sum")
+
 
 def emit(rows, name):
     os.makedirs(OUT_DIR, exist_ok=True)

@@ -41,9 +41,12 @@ def write_bench_json() -> None:
              "fold": r.get("fold"),
              "fold_bytes_per_edge": _f(r.get("fold_bytes_per_edge")),
              # the session API's amortised view: all roots in ONE compiled
-             # program (GraphSession.bfs(roots_batch))
+             # program (GraphSession.bfs(roots_batch)); batched_harmonic is
+             # the harmonic mean over the SAME count_component_edges
+             # numerators as harmonic_TEPS, over sweep_s / n_roots
              "batched_sweep_s": _f(r.get("batched_sweep_s")),
-             "amortised_TEPS": _f(r.get("amortised_TEPS"))}
+             "amortised_TEPS": _f(r.get("amortised_TEPS")),
+             "batched_harmonic_TEPS": _f(r.get("batched_harmonic_TEPS"))}
             for r in read_csv(name)]
 
     codecs = {}
@@ -53,6 +56,7 @@ def write_bench_json() -> None:
             "bytes_per_edge": _f(r.get("fold_bytes_per_edge")),
             "batched_sweep_s": _f(r.get("batched_sweep_s")),
             "amortised_TEPS": _f(r.get("amortised_TEPS")),
+            "batched_harmonic_TEPS": _f(r.get("batched_harmonic_TEPS")),
             "lvl_sum": r.get("lvl_sum"), "pred_sum": r.get("pred_sum"),
             "scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}'}
 
@@ -64,7 +68,9 @@ def write_bench_json() -> None:
         for r in read_csv("fig5_6_breakdown")]
 
     out = {
-        "schema": "BENCH_bfs/v2",   # v2: + batched_sweep_s / amortised_TEPS
+        "schema": "BENCH_bfs/v3",   # v3: + batched_harmonic_TEPS (harmonic
+                                    # mean with count_component_edges
+                                    # numerators for the batched sweep too)
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),
@@ -86,9 +92,10 @@ def main() -> None:
     from benchmarks import (bfs_weak_scaling, bfs_strong_scaling,
                             bfs_breakdown, bfs_1d_vs_2d, bfs_fold_codecs,
                             bfs_expansion_variants, bfs_realworld,
-                            kernel_bench)
+                            algos_sweep, kernel_bench)
     # (suite label, entry point, CSV name the suite emits)
     suites = [
+        ("algos_sweep", algos_sweep.main, "algos_sweep"),
         ("fig3_weak_scaling", bfs_weak_scaling.main, "fig3_weak_scaling"),
         ("fig4_strong_scaling", bfs_strong_scaling.main,
          "fig4_strong_scaling"),

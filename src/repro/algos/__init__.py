@@ -1,0 +1,45 @@
+"""Frontier-program subsystem: distributed graph algorithms beyond BFS on
+the shared engine (DESIGN.md sec. 8).
+
+    from repro.algos import FrontierEngine, ConnectedComponentsProgram
+
+    eng = FrontierEngine(topology, ConnectedComponentsProgram(),
+                         fold_codec="bitmap")
+    out = eng.run(csc, jnp.int32(0))          # -> CCOutput
+
+Most callers go through the session instead: `GraphSession
+.connected_components()`, `.sssp(root)`, `.multi_bfs(sources)`
+(repro.api.session), which add residency, engine reuse and the AOT
+executable cache.
+"""
+# Import order matters: program/engine first (no repro.dist dependency at
+# import time), then the programs (whose repro.dist imports may re-enter a
+# partially initialized repro.dist while its __init__ imports dist.engine).
+from repro.algos.program import (
+    FrontierProgram, ValueState, I32_MAX, scan_relax, pack_blocks,
+    scatter_min_received, owned_to_front)
+from repro.algos.engine import FrontierEngine, wide_add, wide_total
+from repro.algos.bfs import BFSLevelsProgram
+from repro.algos.cc import CCOutput, ConnectedComponentsProgram
+from repro.algos.sssp import SSSPOutput, SSSPProgram
+from repro.algos.multi_bfs import (
+    MultiBFSOutput, MultiBFSState, MultiSourceBFSProgram)
+from repro.algos.reference import (
+    cc_reference, sssp_reference, multi_bfs_reference, k_hop_neighborhood)
+
+PROGRAMS = {
+    "bfs": BFSLevelsProgram,
+    "cc": ConnectedComponentsProgram,
+    "sssp": SSSPProgram,
+    "multi_bfs": MultiSourceBFSProgram,
+}
+
+__all__ = [
+    "FrontierProgram", "FrontierEngine", "ValueState", "I32_MAX",
+    "scan_relax", "pack_blocks", "scatter_min_received", "owned_to_front",
+    "wide_add", "wide_total", "BFSLevelsProgram",
+    "ConnectedComponentsProgram", "CCOutput", "SSSPProgram", "SSSPOutput",
+    "MultiSourceBFSProgram", "MultiBFSOutput", "MultiBFSState",
+    "cc_reference", "sssp_reference", "multi_bfs_reference",
+    "k_hop_neighborhood", "PROGRAMS",
+]

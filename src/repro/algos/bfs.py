@@ -1,0 +1,180 @@
+"""BFS levels/preds as a `FrontierProgram` (DESIGN.md sec. 6 + 8).
+
+This is the paper's algorithm -- expand exchange, CSC scan, fold, frontier
+update, deferred-predecessor resolution -- expressed as ONE instance of the
+generalized driver.  The monoid is first-visit-wins (the visited bitmap is
+the suppression cache, the fold payload is the vertex set itself), which is
+why plain set codecs suffice on the wire.  `repro.dist.engine.DistBFSEngine`
+wraps this program to keep the historical constructor; outputs are
+bit-identical to the pre-subsystem engine (same ops, same order).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos.program import FrontierProgram
+from repro.core import frontier as F
+from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
+from repro.dist import exchange as X
+
+
+# ----------------------------------------------------------------------------
+# Level-loop building blocks (shared with the direction-optimised step)
+# ----------------------------------------------------------------------------
+
+def init_state(root, *, grid: Grid2D, i, j) -> BFSState:
+    S = grid.S
+    nrl = grid.n_rows_local
+    b = root // S
+    oi, oj = b % grid.R, b // grid.R
+    mine = (oi == i) & (oj == j)
+    lr = (root // S // grid.R) * S + root % S
+    lc = root % grid.n_cols_local
+    level = jnp.full((nrl,), -1, jnp.int32)
+    pred = jnp.full((nrl,), -1, jnp.int32)
+    visited = jnp.zeros((nrl,), bool)
+    front = jnp.full((S,), -1, jnp.int32)
+    level = jnp.where(mine, level.at[lr].set(0), level)
+    pred = jnp.where(mine, pred.at[lr].set(root), pred)
+    visited = jnp.where(mine, visited.at[lr].set(True), visited)
+    front = jnp.where(mine, front.at[0].set(lc), front)
+    cnt = jnp.where(mine, jnp.int32(1), jnp.int32(0))
+    return BFSState(level=level, pred=pred, visited=visited, front=front,
+                    front_cnt=cnt, lvl=jnp.int32(1))
+
+
+def owned_level(level, *, grid: Grid2D, j):
+    return jax.lax.dynamic_slice_in_dim(level, j * grid.S, grid.S)
+
+
+def canonical_front(front, cnt):
+    """Sort the padded frontier ascending (pad -1 stays at the back).
+
+    The frontier's order fixes the edge-scan order of the NEXT level, which
+    fixes which parent wins each first-visit race -- so keeping it canonical
+    makes levels AND predecessors bit-identical across fold codecs (whose
+    natural delivery orders differ)."""
+    key = jnp.where(front < 0, F.I32_MAX, front)
+    s = jnp.sort(key)
+    return jnp.where(s == F.I32_MAX, -1, s), cnt
+
+
+def topdown_step(engine, graph: LocalGraph2D, st: BFSState, *, i, j):
+    """One top-down level (paper Alg. 2 lines 12-18)."""
+    topo, grid = engine.topo, engine.grid
+    S = grid.S
+
+    # expand exchange: gather frontiers within the processor-column
+    all_front, front_total = X.expand_exchange(
+        st.front, st.front_cnt, topo=topo)
+
+    # frontier expansion (local CSC column scan)
+    ex = F.expand_frontier(
+        graph.col_off, graph.row_idx, st.visited, st.level, st.pred,
+        all_front, front_total, st.lvl, grid=grid, i=i, j=j,
+        edge_chunk=engine.edge_chunk, expand_fn=engine.expand_fn,
+        dedup=engine.dedup)
+
+    # own-column vertices go straight to the frontier (lines 15-16)
+    own_rows = jnp.take(ex.dst, j, axis=0)      # (S,) local rows, block j
+    own_cnt = jnp.take(ex.dst_cnt, j)
+    own_cols = (i * S + (own_rows - j * S)).astype(jnp.int32)  # ROW2COL
+    own_valid = jnp.arange(S, dtype=jnp.int32) < own_cnt
+    dst = ex.dst.at[j].set(-1)
+    dst_cnt = ex.dst_cnt.at[j].set(0)
+
+    # fold exchange: route discoveries to their owners (same grid row)
+    int_verts, int_cnt = engine.codec.fold(dst, dst_cnt, topo=topo, j=j)
+
+    # frontier update (paper sec. 3.5)
+    up = F.update_frontier(int_verts, int_cnt, ex.visited, ex.level,
+                           ex.pred, st.lvl, grid=grid, i=i, j=j)
+
+    nf = jnp.full((S,), -1, jnp.int32)
+    nc = jnp.int32(0)
+    nf, nc = F.append_padded(nf, nc, own_cols, own_valid)
+    up_valid = jnp.arange(S, dtype=jnp.int32) < up.new_cnt
+    nf, nc = F.append_padded(nf, nc, up.new_front, up_valid)
+    nf, nc = canonical_front(nf, nc)
+
+    st2 = BFSState(level=up.level, pred=up.pred, visited=up.visited,
+                   front=nf, front_cnt=nc, lvl=st.lvl + 1)
+    return st2, topo.psum_all(nc), ex.edges_scanned
+
+
+# ----------------------------------------------------------------------------
+# The program
+# ----------------------------------------------------------------------------
+
+class BFSLevelsProgram(FrontierProgram):
+    """The paper's BFS (levels + deferred predecessors) on the driver.
+
+    step_factory: optional `(engine, graph, extra, i, j, topdown) -> step`
+                  hook replacing the default top-down per-level step (the
+                  direction-optimising driver injects its `lax.cond` here).
+    n_extra:      extra per-device graph arrays the step consumes (the CSR
+                  twin for bottom-up).
+    """
+    name = "bfs"
+    codec_hint = "list"
+
+    def __init__(self, step_factory=None, n_extra: int = 0):
+        self.step_factory = step_factory
+        self.n_extra = n_extra
+
+    @property
+    def key(self) -> tuple:
+        return (self.name, self.step_factory, self.n_extra)
+
+    def init(self, engine, graph, extra, root, i, j):
+        return init_state(root, grid=engine.grid, i=i, j=j)
+
+    def make_step(self, engine, graph, extra, i, j):
+        topdown = functools.partial(topdown_step, engine, graph, i=i, j=j)
+        if self.step_factory is None:
+            return lambda st, prev_total: topdown(st)
+        return self.step_factory(engine, graph, extra, i, j, topdown)
+
+    def keep_going(self, engine, st, total):
+        return (total > 0) & (st.lvl <= engine.max_levels)
+
+    def init_total(self, engine, st):
+        return engine.topo.psum_all(st.front_cnt)
+
+    def finalize(self, engine, st, i, j):
+        pred = X.resolve_preds(st.pred, topo=engine.topo, j=j)
+        level = owned_level(st.level, grid=engine.grid, j=j)
+        return level, pred, st.lvl
+
+    def out_specs(self, engine):
+        out_g = engine.topo.out_block_spec
+        return (out_g, out_g, engine.topo.dev_spec)
+
+    def assemble(self, engine, outs, B) -> BFSOutput:
+        """Gathered device outputs -> global BFSOutput.
+
+        Scalar (B=None): (n,) level/pred in vertex-block order (b = j*R + i,
+        i.e. plain global vertex ids) + the exact 64-bit scanned-edge count.
+        Batched: (B, n) level/pred, (B,) n_levels, tuple of B counts.
+        """
+        from repro.algos.engine import wide_total
+
+        level, pred, lvls, hi, lo = outs
+        if B is None:
+            return BFSOutput(level=level.reshape(-1), pred=pred.reshape(-1),
+                             n_levels=lvls.max(),
+                             edges_scanned=wide_total(hi, lo))
+        Pn, S = engine.grid.P, engine.grid.S
+        level = jnp.swapaxes(level.reshape(Pn, B, S), 0, 1).reshape(B, -1)
+        pred = jnp.swapaxes(pred.reshape(Pn, B, S), 0, 1).reshape(B, -1)
+        n_levels = lvls.reshape(-1, B).max(axis=0)
+        hi_s = np.asarray(hi).astype(np.int64).reshape(-1, B).sum(axis=0)
+        lo_s = np.asarray(lo).astype(np.int64).reshape(-1, B).sum(axis=0)
+        scanned = tuple((int(h) << 32) + int(l) for h, l in zip(hi_s, lo_s))
+        return BFSOutput(level=level, pred=pred, n_levels=n_levels,
+                         edges_scanned=scanned)

@@ -1,0 +1,160 @@
+"""The generalized frontier-program driver (DESIGN.md sec. 8).
+
+`FrontierEngine` is the `lax.while_loop` level loop extracted from the BFS
+engine: init -> loop(step until converged) -> finalize, compiled ONCE per
+(program, topology) as a single shard_map'd device program, with the same
+64-bit (hi, lo)-uint32 edge accounting and the same scalar/batched (`lax.map`
+over a leading arg axis) entry points the BFS engine always had.  What the
+loop computes is a `FrontierProgram` (repro.algos.program): BFS levels/preds
+is ONE instance (repro.algos.bfs); connected components, SSSP and
+multi-source BFS are others.
+
+Buluc & Madduri cast the BFS level loop as a semiring matrix-vector product
+over the 2D partition; this module is that observation as code -- the
+partition, the expand/fold collectives and the wire codecs are
+algorithm-agnostic, only the per-vertex state monoid and the per-level step
+change.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import LocalGraph2D
+
+# NOTE: no module-level repro.dist imports here.  `repro.dist.engine` imports
+# this module, and `repro.dist/__init__` imports `repro.dist.engine`, so a
+# top-level `from repro.dist import ...` would re-enter a partially
+# initialized package whenever repro.algos is imported first.  The one
+# runtime dependency (the fold-codec registry) is imported inside __init__.
+
+
+# ----------------------------------------------------------------------------
+# Wide (64-bit) accumulation without jax_enable_x64
+# ----------------------------------------------------------------------------
+
+def wide_add(hi, lo, delta):
+    """(hi, lo) uint32 pair += delta (any non-negative integer dtype)."""
+    new_lo = lo + delta.astype(jnp.uint32)
+    return hi + (new_lo < lo).astype(jnp.uint32), new_lo
+
+
+def wide_total(hi, lo) -> int:
+    """Sum per-device (hi, lo) pairs into one exact Python int."""
+    hi = np.asarray(hi).astype(np.int64)
+    lo = np.asarray(lo).astype(np.int64)
+    return (int(hi.sum()) << 32) + int(lo.sum())
+
+
+# ----------------------------------------------------------------------------
+# The driver
+# ----------------------------------------------------------------------------
+
+class FrontierEngine:
+    """Whole-search program for one `FrontierProgram` over a Topology.
+
+    Parameters
+    ----------
+    topo:       Topology binding the processor grid to mesh axes.
+    program:    the FrontierProgram to drive.
+    fold_codec: "list" | "bitmap" | "delta" | FoldCodec instance | None
+                (None defers to `program.codec_hint`).
+    edge_chunk: CSC scan chunk size of the expand phase.
+    max_levels: loop bound fed to `program.keep_going`.
+    expand_fn:  optional kernel override for the CSC scan (Pallas path).
+    dedup:      winner-selection method for set-valued folds.
+    """
+
+    def __init__(self, topo, program, *, fold_codec=None,
+                 edge_chunk: int = 8192, max_levels: int = 64,
+                 expand_fn=None, dedup: str = "scatter"):
+        from repro.dist.exchange import get_fold_codec
+
+        self.topo = topo
+        self.grid = topo.grid
+        self.program = program
+        spec = fold_codec if fold_codec is not None else program.codec_hint
+        self.codec = get_fold_codec(spec, topo.grid)
+        self.edge_chunk = edge_chunk
+        self.max_levels = max_levels
+        self.expand_fn = expand_fn
+        self.dedup = dedup
+        # traces of the level loop (scalar or batched); jit/AOT cache hits do
+        # not retrace, so tests can assert a 64-root sweep compiles once
+        self.trace_count = 0
+        self._run = jax.jit(self._build())
+        self._run_batch = jax.jit(self._build(batched=True))
+
+    # -- whole-search program (lax.while_loop over levels) -------------------
+    def _build(self, batched: bool = False):
+        """Device program for one search arg (scalar) or a leading arg axis.
+
+        The batched program runs the whole level loop per arg under
+        `lax.map` (a scan: per-search work stays proportional to that
+        search's levels, unlike vmap which would pad every search to the
+        slowest), so a multi-root sweep is ONE compiled executable.
+        """
+        topo, prog = self.topo, self.program
+
+        def device_fn(col_off, row_idx, nnz, *rest):
+            extra, arg = rest[:-1], rest[-1]
+            graph = LocalGraph2D(col_off=col_off[0, 0], row_idx=row_idx[0, 0],
+                                 nnz=nnz[0, 0])
+            extra = tuple(e[0, 0] for e in extra)
+            i, j = topo.device_coords()
+
+            def search(a):
+                st = prog.init(self, graph, extra, a, i, j)
+                step = prog.make_step(self, graph, extra, i, j)
+
+                def cond(carry):
+                    st, total, hi, lo = carry
+                    return prog.keep_going(self, st, total)
+
+                def body(carry):
+                    st, total, hi, lo = carry
+                    st2, total2, scanned = step(st, total)
+                    hi, lo = wide_add(hi, lo, scanned)
+                    return st2, total2, hi, lo
+
+                init_total = prog.init_total(self, st)
+                st, _, hi, lo = jax.lax.while_loop(
+                    cond, body,
+                    (st, init_total, jnp.uint32(0), jnp.uint32(0)))
+                return tuple(prog.finalize(self, st, i, j)) + (hi, lo)
+
+            if batched:
+                outs = jax.lax.map(search, arg)
+            else:
+                outs = search(arg)
+            return tuple(o[None, None] for o in outs)
+
+        dev = topo.dev_spec
+        mapped = topo.shard_map(
+            device_fn,
+            in_specs=(dev,) * (3 + prog.n_extra) + (P(),),
+            out_specs=tuple(prog.out_specs(self)) + (dev, dev))
+
+        def counted(*args):
+            # runs at TRACE time only (jit / .lower()); cache hits skip it
+            self.trace_count += 1
+            return mapped(*args)
+
+        return counted
+
+    def run(self, graph: LocalGraph2D, arg, *extra):
+        """One search; extra = the program's per-device graph arrays.
+
+        `arg` is the program's search argument (a root, a sources vector, a
+        dummy scalar for argument-free programs like CC)."""
+        outs = self._run(graph.col_off, graph.row_idx, graph.nnz, *extra, arg)
+        return self.program.assemble(self, outs, None)
+
+    def run_batch(self, graph: LocalGraph2D, args, *extra):
+        """A leading-axis batch of searches as ONE compiled program."""
+        outs = self._run_batch(graph.col_off, graph.row_idx, graph.nnz,
+                               *extra, args)
+        return self.program.assemble(self, outs, int(args.shape[0]))

@@ -1,0 +1,259 @@
+"""The `FrontierProgram` contract + shared value-propagation blocks
+(DESIGN.md sec. 8).
+
+A frontier program is a distributed graph algorithm expressed against the
+2D-partitioned engine: per-vertex state that evolves under a commutative,
+idempotent combine (a monoid -- min over labels for connected components,
+min over distances for SSSP, first-wave-wins source ids for multi-source
+BFS), a per-level `step` that expands the current frontier and folds an
+outgoing payload to the owners, and a convergence predicate.  The engine
+(`repro.algos.engine.FrontierEngine`) supplies the loop, the collectives and
+the accounting; the fold wire format is the codec layer of
+`repro.dist.exchange` (`codec_hint` picks a default, callers may override).
+
+The helpers below implement the common "value propagation" level shape used
+by CC / SSSP / multi-source BFS:
+
+  gather frontier + payload  ->  chunked CSC scan min-combining relaxed
+  payloads into a dense per-local-row candidate array  ->  pack improved
+  rows into canonical per-owner buckets  ->  value-carrying fold
+  (`FoldCodec.fold_values`)  ->  scatter-min merge into owned state  ->
+  rebuild the frontier from changed owned rows.
+
+Everything is min-combined, so results are independent of delivery order --
+the reason every fold codec produces bit-identical outputs by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as F
+from repro.core.types import Grid2D, _dc
+
+I32_MAX = F.I32_MAX
+
+
+# ----------------------------------------------------------------------------
+# The contract
+# ----------------------------------------------------------------------------
+
+class FrontierProgram:
+    """What a distributed frontier algorithm implements.
+
+    Attributes
+    ----------
+    name:       short program id; part of every engine/AOT cache key.
+    codec_hint: fold wire format used when the caller does not pin one.
+    n_extra:    number of extra per-device (R, C, ...) graph arrays the
+                program consumes (e.g. per-edge weights, the CSR twin).
+
+    The engine calls, in order: `init` (per search), `make_step` (once per
+    trace), the loop (`keep_going` / the step), then `finalize`; host-side
+    `assemble` turns gathered device outputs into the program's output
+    object.  All methods receive the engine for access to the topology,
+    grid, codec and knobs.
+    """
+    name = "?"
+    codec_hint = "list"
+    n_extra = 0
+
+    @property
+    def key(self) -> tuple:
+        """Hashable identity: programs with equal keys may share an engine
+        (together with codec/chunking, see BFSConfig.algo_engine_key)."""
+        return (self.name,)
+
+    def init(self, engine, graph, extra, arg, i, j):
+        """Per-device initial state pytree for one search argument."""
+        raise NotImplementedError
+
+    def make_step(self, engine, graph, extra, i, j):
+        """Return step(state, prev_total) -> (state', total, scanned)."""
+        raise NotImplementedError
+
+    def keep_going(self, engine, st, total):
+        """Convergence predicate (True = run another level)."""
+        raise NotImplementedError
+
+    def init_total(self, engine, st):
+        """Global size of the initial frontier (the loop's entry total)."""
+        raise NotImplementedError
+
+    def finalize(self, engine, st, i, j) -> tuple:
+        """Per-device output arrays (engine appends the (hi, lo) counters)."""
+        raise NotImplementedError
+
+    def out_specs(self, engine) -> tuple:
+        """PartitionSpecs matching `finalize`'s outputs."""
+        raise NotImplementedError
+
+    def assemble(self, engine, outs, B):
+        """Host-side: gathered device outputs -> output object (B=None for a
+        scalar search, else the leading batch size)."""
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------------------
+# Shared state pytree for min-monoid value programs (CC, SSSP)
+# ----------------------------------------------------------------------------
+
+@_dc
+@dataclasses.dataclass
+class ValueState:
+    """Per-device state of a min-monoid value-propagation program.
+
+    `val` spans ALL local rows (n/R), generalizing the BFS visited bitmap:
+    the owned block is the authoritative value, remote rows are this
+    device's send-suppression cache (the smallest value it has ever
+    proposed/seen for that vertex -- proposing anything >= it is provably
+    redundant, the exact role `visited` plays for BFS).
+    """
+    val: jax.Array        # (n_rows_local,) int32, I32_MAX = top
+    front: jax.Array      # (S,) local col ids, canonical ascending, pad -1
+    payload: jax.Array    # (S,) int32 values aligned with front
+    front_cnt: jax.Array  # () int32
+    it: jax.Array         # () int32, 1-based iteration counter
+
+
+# ----------------------------------------------------------------------------
+# Level building blocks
+# ----------------------------------------------------------------------------
+
+def scan_relax(col_off, row_idx, edge_vals, all_front, all_payload,
+               front_total, relax, *, n_rows: int, grid: Grid2D,
+               edge_chunk: int = 8192):
+    """Chunked CSC scan of the gathered frontier, min-combining relaxed
+    payloads into a dense per-local-row candidate array.
+
+    For each edge u -> v of a frontier column u, proposes
+    `relax(payload[u], edge_vals[edge])` for v; proposals for the same v
+    combine by MIN (the monoid), so the result is independent of scan order.
+    Same chunked searchsorted edge walk as `frontier.expand_frontier`
+    (paper Alg. 3), same O(frontier edges + chunk) cost per level.
+
+    Returns (cand (n_rows,) int32, edges_scanned uint32).
+    """
+    ncl = grid.n_cols_local
+    nnz_cap = row_idx.shape[0]
+
+    u_safe = jnp.clip(all_front, 0, ncl - 1)
+    deg = (col_off[u_safe + 1] - col_off[u_safe])
+    deg = jnp.where(jnp.arange(ncl) < front_total, deg, 0)
+    cumul = F.exclusive_cumsum(deg)                    # (ncl + 1,)
+    total = cumul[front_total]
+
+    def chunk_body(state):
+        start, cand = state
+        gids = start + jnp.arange(edge_chunk, dtype=jnp.int32)
+        k = jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1
+        k = jnp.clip(k, 0, ncl - 1)
+        u = u_safe[k]
+        addr = jnp.clip(col_off[u] + gids - cumul[k], 0, nnz_cap - 1)
+        valid = gids < total
+        v = jnp.where(valid, row_idx[addr], 0)
+        w = None if edge_vals is None else edge_vals[addr]
+        val = jnp.where(valid, relax(all_payload[k], w), I32_MAX)
+        cand = cand.at[jnp.where(valid, v, n_rows)].min(val, mode="drop")
+        return start + edge_chunk, cand
+
+    init = (jnp.int32(0), jnp.full((n_rows,), I32_MAX, jnp.int32))
+    _, cand = jax.lax.while_loop(lambda s: s[0] < total, chunk_body, init)
+    return cand, total.astype(jnp.uint32)
+
+
+def pack_blocks(improved, vals, grid: Grid2D, fill_val=I32_MAX):
+    """Dense (n_rows_local,) improvements -> canonical fold buckets.
+
+    Local row m*S + t of block m maps to bucket row m, so the dense array IS
+    the bucket structure after a reshape; per bucket, improved entries are
+    front-packed ascending (the canonical form `FoldCodec.fold_values`
+    requires).  Returns (ids (C, S) local-row ids pad -1, cnt (C,),
+    vals (C, S) aligned, pad `fill_val`).
+    """
+    C, S = grid.C, grid.S
+    imp = improved.reshape(C, S)
+    vv = vals.reshape(C, S)
+    t = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (C, S))
+    key = jnp.where(imp, t, I32_MAX)
+    order = jnp.argsort(key, axis=1)
+    ts = jnp.take_along_axis(key, order, axis=1)
+    vs = jnp.take_along_axis(vv, order, axis=1)
+    ok = ts < I32_MAX
+    m = jnp.arange(C, dtype=jnp.int32)[:, None]
+    ids = jnp.where(ok, m * S + jnp.where(ok, ts, 0), -1)
+    vs = jnp.where(ok, vs, fill_val)
+    return ids, imp.sum(axis=1, dtype=jnp.int32), vs
+
+
+def scatter_min_received(recv_ids, recv_vals, j, S: int):
+    """Fold-received (C, S) owned rows j*S + t + aligned values -> (S,)
+    per-owned-row MIN over all senders (I32_MAX where nothing arrived)."""
+    t = jnp.where(recv_ids >= 0, recv_ids - j * S, S)
+    inc = jnp.full((S,), I32_MAX, jnp.int32)
+    return inc.at[t.reshape(-1)].min(
+        jnp.where(recv_ids >= 0, recv_vals, I32_MAX).reshape(-1), mode="drop")
+
+
+def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
+                    expand_fill=I32_MAX):
+    """The complete min-monoid level step shared by CC and SSSP.
+
+    gather frontier+payload -> scan_relax -> suppress (strict improvements
+    over the local cache only) -> pack_blocks -> codec fold_values ->
+    scatter-min merge into the owned block -> rebuild the frontier from
+    changed owned rows.  `relax(payload_u, w)` is the per-edge proposal
+    (identity for label propagation, min-plus for SSSP); `edge_vals` is the
+    per-device per-edge array `relax` consumes (or None); `expand_fill`
+    pads the gathered payload channel (never read under the valid mask).
+    """
+    from repro.dist import exchange as X
+
+    grid, topo = engine.grid, engine.topo
+    S, nrl = grid.S, grid.n_rows_local
+
+    def step(st: ValueState, prev_total):
+        all_front, all_pay, ftot = X.expand_exchange_values(
+            st.front, st.front_cnt, st.payload, topo=topo, fill=expand_fill)
+        cand, scanned = scan_relax(
+            graph.col_off, graph.row_idx, edge_vals, all_front, all_pay,
+            ftot, relax, n_rows=nrl, grid=grid,
+            edge_chunk=engine.edge_chunk)
+        # propose only strict improvements over what we already know
+        improved = cand < st.val
+        val1 = jnp.minimum(st.val, cand)
+        ids, cnt, vals = pack_blocks(improved, cand, grid)
+        ri, rc, rv = engine.codec.fold_values(ids, cnt, vals, topo=topo, j=j)
+        inc = scatter_min_received(ri, rv, j, S)
+        # merge against the PRE-scan owned block: this device's own
+        # proposals travel through the self all_to_all block, so comparing
+        # with val1 would mask them out of `changed`
+        owned_prev = jax.lax.dynamic_slice_in_dim(st.val, j * S, S)
+        new_owned = jnp.minimum(owned_prev, inc)
+        changed = new_owned < owned_prev
+        val2 = jax.lax.dynamic_update_slice(val1, new_owned, (j * S,))
+        front, payload, nc = owned_to_front(changed, new_owned, i, S)
+        st2 = ValueState(val=val2, front=front, payload=payload,
+                         front_cnt=nc, it=st.it + 1)
+        return st2, topo.psum_all(nc), scanned
+
+    return step
+
+
+def owned_to_front(changed, vals, i, S: int, fill_val=I32_MAX):
+    """Changed owned rows -> next frontier, canonical ascending.
+
+    Owned local row j*S + t converts to local col i*S + t (paper ROW2COL).
+    Returns (front (S,) col ids pad -1, payload (S,) aligned, cnt).
+    """
+    t = jnp.arange(S, dtype=jnp.int32)
+    key = jnp.where(changed, t, I32_MAX)
+    order = jnp.argsort(key)
+    ts = key[order]
+    vs = vals[order]
+    ok = ts < I32_MAX
+    front = jnp.where(ok, i * S + jnp.where(ok, ts, 0), -1)
+    payload = jnp.where(ok, vs, fill_val)
+    return front, payload, changed.sum(dtype=jnp.int32)

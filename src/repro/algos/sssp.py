@@ -1,0 +1,98 @@
+"""Single-source shortest paths on per-edge uint8 weights (DESIGN.md sec. 8).
+
+Frontier-driven Bellman-Ford relaxation -- the semiring swap Buluc & Madduri
+describe (min-plus in place of BFS's boolean or-and): the frontier payload is
+the vertex's current tentative distance; scanning edge u -> v proposes
+`dist(u) + w(u, v)`; the owner keeps the minimum and re-activates a vertex
+whenever its distance improves.  Non-negative weights guarantee convergence
+in at most (longest shortest-path hop count) levels, so the engine's
+`max_levels` must cover n for worst-case chains.
+
+Weights live with the partition: `partition_edge_vals` lays the per-edge
+uint8 array out in exactly the CSC order of `partition_2d`, and
+`DistGraph.from_edges(..., weights=...)` makes it resident alongside the
+graph.  The monoid is (min, +inf) over int32 distances; fold is
+`FoldCodec.fold_values`, so all three wire codecs are bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos import program as PR
+from repro.algos.program import FrontierProgram, ValueState, I32_MAX
+from repro.core.types import _dc
+
+
+@_dc
+@dataclasses.dataclass
+class SSSPOutput:
+    """Global shortest-path result (scalar root or (B,) batched roots)."""
+    dist: jax.Array        # (n,) / (B, n) int32 distances, -1 = unreachable
+    n_iters: jax.Array     # relaxation levels run
+    edges_scanned: Any = None  # exact Python int(s), 64-bit safe
+
+
+class SSSPProgram(FrontierProgram):
+    """Bellman-Ford relaxation as a frontier program (arg = root)."""
+    name = "sssp"
+    codec_hint = "list"
+    n_extra = 1            # the per-device (R, C, e_max) uint8 weight array
+
+    def init(self, engine, graph, extra, root, i, j):
+        grid = engine.grid
+        S, nrl = grid.S, grid.n_rows_local
+        b = root // S
+        oi, oj = b % grid.R, b // grid.R
+        mine = (oi == i) & (oj == j)
+        lr = (root // S // grid.R) * S + root % S
+        lc = root % grid.n_cols_local
+        val = jnp.full((nrl,), I32_MAX, jnp.int32)
+        val = jnp.where(mine, val.at[lr].set(0), val)
+        front = jnp.full((S,), -1, jnp.int32)
+        front = jnp.where(mine, front.at[0].set(lc), front)
+        return ValueState(val=val, front=front,
+                          payload=jnp.zeros((S,), jnp.int32),
+                          front_cnt=jnp.where(mine, jnp.int32(1),
+                                              jnp.int32(0)),
+                          it=jnp.int32(1))
+
+    def make_step(self, engine, graph, extra, i, j):
+        # min-plus relaxation over the resident per-edge weights
+        return PR.make_value_step(
+            engine, graph, i, j, relax=lambda p, w: p + w.astype(jnp.int32),
+            edge_vals=extra[0], expand_fill=0)
+
+    def keep_going(self, engine, st, total):
+        return (total > 0) & (st.it <= engine.max_levels)
+
+    def init_total(self, engine, st):
+        return engine.topo.psum_all(st.front_cnt)
+
+    def finalize(self, engine, st, i, j):
+        d = jax.lax.dynamic_slice_in_dim(st.val, j * engine.grid.S,
+                                         engine.grid.S)
+        return jnp.where(d == I32_MAX, -1, d), st.it
+
+    def out_specs(self, engine):
+        return (engine.topo.out_block_spec, engine.topo.dev_spec)
+
+    def assemble(self, engine, outs, B) -> SSSPOutput:
+        from repro.algos.engine import wide_total
+
+        dist, iters, hi, lo = outs
+        if B is None:
+            return SSSPOutput(dist=dist.reshape(-1), n_iters=iters.max(),
+                              edges_scanned=wide_total(hi, lo))
+        Pn, S = engine.grid.P, engine.grid.S
+        dist = jnp.swapaxes(dist.reshape(Pn, B, S), 0, 1).reshape(B, -1)
+        hi_s = np.asarray(hi).astype(np.int64).reshape(-1, B).sum(axis=0)
+        lo_s = np.asarray(lo).astype(np.int64).reshape(-1, B).sum(axis=0)
+        scanned = tuple((int(h) << 32) + int(l) for h, l in zip(hi_s, lo_s))
+        return SSSPOutput(dist=dist, n_iters=iters.reshape(-1, B).max(axis=0),
+                          edges_scanned=scanned)

@@ -5,9 +5,16 @@
     graph = DistGraph.from_edges(edges, BFSConfig(grid=(2, 4)))
     session = graph.session()
     out = session.bfs(roots)        # scalar root, or a batch in ONE program
+
+Frontier programs beyond BFS (DESIGN.md sec. 8) share the residency:
+
+    cc = session.connected_components()
+    sp = session.sssp(root)         # needs from_edges(..., weights=w)
+    mb = session.multi_bfs(sources, k=2)
 """
+from repro.algos import CCOutput, MultiBFSOutput, SSSPOutput
 from repro.api.config import BFSConfig, resolve_fold_codec
 from repro.api.session import DistGraph, GraphSession, build_engine
 
 __all__ = ["BFSConfig", "DistGraph", "GraphSession", "build_engine",
-           "resolve_fold_codec"]
+           "resolve_fold_codec", "CCOutput", "SSSPOutput", "MultiBFSOutput"]

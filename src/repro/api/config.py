@@ -79,6 +79,15 @@ class BFSConfig:
                 self.max_levels, self.alpha, self.row_axes, self.col_axes,
                 self.expand_fn)
 
+    def algo_engine_key(self, program_key: tuple, codec_name: str,
+                        max_levels: int) -> tuple:
+        """Cache key for a non-BFS frontier-program engine (DESIGN.md
+        sec. 8): the program's identity plus the config knobs the engine
+        bakes in.  `codec_name`/`max_levels` are per-call (the program's
+        codec hint / iteration bound may override the BFS spellings)."""
+        return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
+                max_levels, self.row_axes, self.col_axes)
+
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""
         g = self.grid

@@ -20,10 +20,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.algos import (
+    CCOutput, ConnectedComponentsProgram, FrontierEngine, MultiBFSOutput,
+    MultiSourceBFSProgram, SSSPOutput, SSSPProgram)
 from repro.api.config import BFSConfig
 from repro.core.direction import direction_step_factory
-from repro.core.partition import partition_2d, partition_2d_csr
+from repro.core.partition import (partition_2d, partition_2d_csr,
+                                  partition_edge_vals)
 from repro.core.types import BFSOutput, LocalGraph2D
+from repro.core.validate import validate_bfs
 from repro.dist.engine import DistBFSEngine
 from repro.dist.topology import Topology
 
@@ -50,27 +55,31 @@ class DistGraph:
     """
 
     def __init__(self, topology: Topology, csc: LocalGraph2D, *, csr=None,
-                 edges=None, n: int | None = None, config: BFSConfig = None):
+                 weights=None, edges=None, n: int | None = None,
+                 config: BFSConfig = None):
         self.topology = topology
         self.grid = topology.grid
         self.mesh = topology.mesh
         self.csc = csc
         self.csr = csr
+        self.weights = weights       # (R, C, e_max) per-edge values or None
         self.n = int(n) if n is not None else topology.grid.n
         self.config = config if config is not None else BFSConfig()
         # host edge copy retained ONLY while it may still be needed to plan
         # the CSR twin lazily (dropped once CSR exists; see release_edges)
         self._edges = edges if csr is None else None
-        self._engines = {}           # engine_key -> DistBFSEngine
-        self._compiled = {}          # (engine_key, shapes, B) -> executable
+        self._engines = {}           # engine key -> engine (BFS or algo)
+        self._compiled = {}          # (engine key, shapes, B) -> executable
 
     @classmethod
     def from_edges(cls, edges, config: BFSConfig = None, *, mesh=None,
-                   n: int | None = None) -> "DistGraph":
+                   n: int | None = None, weights=None) -> "DistGraph":
         """Plan a graph into residency: partition + place on the mesh.
 
         edges: (2, E) [src, dst] array (host or device).  n defaults to
         max vertex id + 1; the grid pads it up to a multiple of R*C.
+        weights: optional (E,) per-edge values (uint8 for SSSP), laid out in
+        the CSC partition order and made resident alongside the graph.
         """
         config = config if config is not None else BFSConfig()
         edges_np = np.asarray(edges)
@@ -82,11 +91,14 @@ class DistGraph:
         lg = partition_2d(edges_np, grid)
         csc = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
                            jnp.asarray(lg.nnz))
+        w = None
+        if weights is not None:
+            w = jnp.asarray(partition_edge_vals(edges_np, weights, grid))
         csr = None
         if config.direction:         # CSR twin only when bottom-up can run
             csr = {k: jnp.asarray(v)
                    for k, v in partition_2d_csr(edges_np, grid).items()}
-        return cls(topology, csc, csr=csr, edges=edges_np, n=n,
+        return cls(topology, csc, csr=csr, weights=w, edges=edges_np, n=n,
                    config=config)   # edges kept only while csr is None
 
     def ensure_csr(self):
@@ -161,13 +173,20 @@ class GraphSession:
             self.graph._compiled[key] = compiled
         return compiled
 
-    def bfs(self, roots) -> BFSOutput:
+    def bfs(self, roots, validate=False) -> BFSOutput:
         """Search from a scalar root or a (B,) batch of roots.
 
         Scalar: global (n,) level/pred (vertex-block order = plain global
         vertex ids, padded to the grid), scalar n_levels, exact int
         edges_scanned.  Batch: (B, n) level/pred, (B,) n_levels, tuple of B
         edges_scanned -- bit-identical to running the roots one by one.
+
+        validate: False (default) | True | (2, E) edge array.  Truthy runs
+        the Graph500 rules (`repro.core.validate.validate_bfs`) on every
+        root's output against the input edge list -- `True` uses the host
+        edges the DistGraph retains while the CSR twin is unplanned; pass
+        the array explicitly once they have been released.  Raises
+        AssertionError on any rule violation.
         """
         scalar = np.ndim(roots) == 0
         roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
@@ -179,8 +198,130 @@ class GraphSession:
         outs = self._compiled_for(B)(
             g.col_off, g.row_idx, g.nnz, *self._extra, roots_arr)
         out = self.engine.assemble_batch(outs, B)
+        if validate is not False and validate is not None:
+            self._validate(out, np.asarray(roots_arr), validate)
         if scalar:
             return BFSOutput(level=out.level[0], pred=out.pred[0],
                              n_levels=out.n_levels[0],
                              edges_scanned=out.edges_scanned[0])
         return out
+
+    def _validate(self, out: BFSOutput, roots, validate) -> None:
+        """Graph500 rule check of a batched output (see `bfs(validate=)`)."""
+        edges = self.graph._edges if isinstance(validate, bool) else validate
+        if edges is None:
+            raise ValueError(
+                "bfs(validate=True) needs the host edge list, but this "
+                "DistGraph has released it (CSR planned or release_edges); "
+                "pass the edge array: bfs(roots, validate=edges)")
+        n = self.graph.n
+        level = np.asarray(out.level)
+        pred = np.asarray(out.pred)
+        for b, root in enumerate(roots):
+            validate_bfs(edges, level[b][:n], pred[b][:n], int(root))
+
+    # ------------------------------------------------------------------
+    # Frontier programs beyond BFS (DESIGN.md sec. 8)
+    # ------------------------------------------------------------------
+
+    def _algo_engine(self, program, fold_codec, max_levels):
+        """Fetch/build the FrontierEngine for `program`, cached on the
+        DistGraph like the BFS engines (config codec/chunking apply unless
+        overridden per call)."""
+        codec = fold_codec if fold_codec is not None else program.codec_hint
+        codec_name = codec if isinstance(codec, str) \
+            else getattr(codec, "name", repr(codec))
+        key = self.config.algo_engine_key(program.key, codec_name,
+                                          max_levels)
+        eng = self.graph._engines.get(key)
+        if eng is None:
+            eng = FrontierEngine(
+                self.graph.topology, program, fold_codec=codec,
+                edge_chunk=self.config.edge_chunk, max_levels=max_levels,
+                dedup=self.config.dedup)
+            self.graph._engines[key] = eng
+        return eng, key
+
+    def _algo_compiled(self, eng, key, arg_aval, *extra, batched=False):
+        """AOT executable for one frontier program, cached on the DistGraph
+        keyed by (engine key, graph array shapes, arg shape)."""
+        g = self.graph.csc
+        ckey = (key, g.col_off.shape, g.row_idx.shape, batched,
+                arg_aval.shape)
+        compiled = self.graph._compiled.get(ckey)
+        if compiled is None:
+            fn = eng._run_batch if batched else eng._run
+            compiled = fn.lower(g.col_off, g.row_idx, g.nnz, *extra,
+                                arg_aval).compile()
+            self.graph._compiled[ckey] = compiled
+        return compiled
+
+    def connected_components(self, fold_codec=None) -> CCOutput:
+        """Labels of every vertex's connected component (min member id).
+
+        Assumes the planned edge list is symmetrised (as the Graph500-style
+        generator produces); on a directed list the label is the smallest
+        vertex id with a directed path to each vertex.  fold_codec: None =
+        the program's hint ("bitmap"); any codec gives identical labels.
+        """
+        max_levels = self.graph.grid.n + 1     # diameter bound
+        eng, key = self._algo_engine(ConnectedComponentsProgram(),
+                                     fold_codec, max_levels)
+        g = self.graph.csc
+        compiled = self._algo_compiled(
+            eng, key, jax.ShapeDtypeStruct((), jnp.int32))
+        outs = compiled(g.col_off, g.row_idx, g.nnz, jnp.int32(0))
+        return eng.program.assemble(eng, outs, None)
+
+    def sssp(self, roots, fold_codec=None) -> SSSPOutput:
+        """Shortest distances over the planned per-edge uint8 weights.
+
+        Scalar root -> (n,) int32 distances (-1 unreachable); a (B,) batch
+        runs as ONE compiled program (lax.map over roots, like `bfs`) ->
+        (B, n).  Requires `DistGraph.from_edges(..., weights=)`.
+        """
+        if self.graph.weights is None:
+            raise ValueError(
+                "sssp needs resident per-edge weights; plan the graph with "
+                "DistGraph.from_edges(edges, config, weights=w)")
+        scalar = np.ndim(roots) == 0
+        roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
+        if roots_arr.ndim != 1:
+            raise ValueError(f"roots must be a scalar or 1D batch, got "
+                             f"shape {roots_arr.shape}")
+        B = roots_arr.shape[0]
+        max_levels = self.graph.grid.n + 1     # Bellman-Ford round bound
+        eng, key = self._algo_engine(SSSPProgram(), fold_codec, max_levels)
+        g, w = self.graph.csc, self.graph.weights
+        compiled = self._algo_compiled(
+            eng, key, jax.ShapeDtypeStruct((B,), jnp.int32), w,
+            batched=True)
+        out = eng.program.assemble(
+            eng, compiled(g.col_off, g.row_idx, g.nnz, w, roots_arr), B)
+        if scalar:
+            return SSSPOutput(dist=out.dist[0], n_iters=out.n_iters[0],
+                              edges_scanned=out.edges_scanned[0])
+        return out
+
+    def multi_bfs(self, sources, k: int | None = None,
+                  fold_codec=None) -> MultiBFSOutput:
+        """Simultaneous BFS from a (K,) source set (ONE shared frontier).
+
+        Returns per-vertex hops to the nearest source and the claiming
+        source's index (same-wave ties -> minimum index).  k bounds the
+        sweep to k hops: `level >= 0` is then the union k-hop neighborhood
+        of the sources (the models/gnn sampling primitive).  Contrast
+        `bfs(roots)`, which runs K independent full searches.
+        """
+        sources_arr = jnp.asarray(sources, jnp.int32)
+        if sources_arr.ndim != 1 or sources_arr.shape[0] == 0:
+            raise ValueError(f"sources must be a non-empty 1D array, got "
+                             f"shape {sources_arr.shape}")
+        max_levels = int(k) if k is not None else self.config.max_levels
+        eng, key = self._algo_engine(MultiSourceBFSProgram(), fold_codec,
+                                     max_levels)
+        g = self.graph.csc
+        compiled = self._algo_compiled(
+            eng, key, jax.ShapeDtypeStruct(sources_arr.shape, jnp.int32))
+        outs = compiled(g.col_off, g.row_idx, g.nnz, sources_arr)
+        return eng.program.assemble(eng, outs, None)

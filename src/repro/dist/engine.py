@@ -1,9 +1,14 @@
 """The shared distributed-BFS engine (DESIGN.md sec. 6).
 
-One driver loop serves `BFS1D`, `BFS2D` and `BFS2DDirection`: init, the
-`lax.while_loop` over levels, the deferred-predecessor resolution and the
-per-search edge accounting live HERE; the drivers are thin configurations
-(topology + fold codec + optionally a custom per-level step).
+Since the frontier-program subsystem (DESIGN.md sec. 8) the generic parts --
+the `lax.while_loop` over levels, the scalar/batched device programs, the
+64-bit (hi, lo)-uint32 edge accounting -- live in
+`repro.algos.engine.FrontierEngine`, and BFS itself is ONE frontier program
+(`repro.algos.bfs.BFSLevelsProgram`).  `DistBFSEngine` is that pair under
+the historical constructor: init, the level loop, the deferred-predecessor
+resolution and the per-search accounting behave exactly as before; drivers
+remain thin configurations (topology + fold codec + optionally a custom
+per-level step).
 
 Per-level step contract (what `step_factory` must produce):
 
@@ -21,84 +26,31 @@ search) and jnp.int64 is unavailable without jax_enable_x64.
 """
 from __future__ import annotations
 
-import functools
-
-import numpy as np
-
-import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core import frontier as F
-from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
-from repro.dist import exchange as X
+# Re-exports: these historically lived here and stay importable from here.
+from repro.algos.engine import FrontierEngine, wide_add, wide_total  # noqa: F401
+from repro.core.types import LocalGraph2D, BFSOutput
 from repro.dist.topology import Topology
 
-
-# ----------------------------------------------------------------------------
-# Wide (64-bit) accumulation without jax_enable_x64
-# ----------------------------------------------------------------------------
-
-def wide_add(hi, lo, delta):
-    """(hi, lo) uint32 pair += delta (any non-negative integer dtype)."""
-    new_lo = lo + delta.astype(jnp.uint32)
-    return hi + (new_lo < lo).astype(jnp.uint32), new_lo
+# The BFS building blocks now live in repro.algos.bfs, which imports
+# repro.dist.exchange -- so pulling them in at module scope would re-enter
+# this package's own __init__ mid-import.  PEP 562 keeps
+# `from repro.dist.engine import canonical_front` (etc.) working lazily.
+_BFS_REEXPORTS = ("BFSLevelsProgram", "canonical_front", "init_state",
+                  "owned_level", "topdown_step")
 
 
-def wide_total(hi, lo) -> int:
-    """Sum per-device (hi, lo) pairs into one exact Python int."""
-    hi = np.asarray(hi).astype(np.int64)
-    lo = np.asarray(lo).astype(np.int64)
-    return (int(hi.sum()) << 32) + int(lo.sum())
+def __getattr__(name):
+    if name in _BFS_REEXPORTS:
+        from repro.algos import bfs
+        return getattr(bfs, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-# ----------------------------------------------------------------------------
-# Level-loop building blocks
-# ----------------------------------------------------------------------------
-
-def init_state(root, *, grid: Grid2D, i, j) -> BFSState:
-    S = grid.S
-    nrl = grid.n_rows_local
-    b = root // S
-    oi, oj = b % grid.R, b // grid.R
-    mine = (oi == i) & (oj == j)
-    lr = (root // S // grid.R) * S + root % S
-    lc = root % grid.n_cols_local
-    level = jnp.full((nrl,), -1, jnp.int32)
-    pred = jnp.full((nrl,), -1, jnp.int32)
-    visited = jnp.zeros((nrl,), bool)
-    front = jnp.full((S,), -1, jnp.int32)
-    level = jnp.where(mine, level.at[lr].set(0), level)
-    pred = jnp.where(mine, pred.at[lr].set(root), pred)
-    visited = jnp.where(mine, visited.at[lr].set(True), visited)
-    front = jnp.where(mine, front.at[0].set(lc), front)
-    cnt = jnp.where(mine, jnp.int32(1), jnp.int32(0))
-    return BFSState(level=level, pred=pred, visited=visited, front=front,
-                    front_cnt=cnt, lvl=jnp.int32(1))
-
-
-def owned_level(level, *, grid: Grid2D, j):
-    return jax.lax.dynamic_slice_in_dim(level, j * grid.S, grid.S)
-
-
-def canonical_front(front, cnt):
-    """Sort the padded frontier ascending (pad -1 stays at the back).
-
-    The frontier's order fixes the edge-scan order of the NEXT level, which
-    fixes which parent wins each first-visit race -- so keeping it canonical
-    makes levels AND predecessors bit-identical across fold codecs (whose
-    natural delivery orders differ)."""
-    key = jnp.where(front < 0, F.I32_MAX, front)
-    s = jnp.sort(key)
-    return jnp.where(s == F.I32_MAX, -1, s), cnt
-
-
-# ----------------------------------------------------------------------------
-# The engine
-# ----------------------------------------------------------------------------
-
-class DistBFSEngine:
-    """Whole-search program over a Topology (single lowering, jitted once).
+class DistBFSEngine(FrontierEngine):
+    """Whole-search BFS program over a Topology (single lowering, jitted
+    once) -- `BFSLevelsProgram` on the generalized driver.
 
     Parameters
     ----------
@@ -116,131 +68,20 @@ class DistBFSEngine:
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand_fn=None, dedup: str = "scatter",
                  step_factory=None, n_extra: int = 0):
-        self.topo = topo
-        self.grid = topo.grid
-        self.codec = X.get_fold_codec(fold_codec, topo.grid)
-        self.edge_chunk = edge_chunk
-        self.max_levels = max_levels
-        self.expand_fn = expand_fn
-        self.dedup = dedup
+        from repro.algos.bfs import BFSLevelsProgram
+
         self.step_factory = step_factory
         self.n_extra = n_extra
-        # traces of the level loop (scalar or batched); jit/AOT cache hits do
-        # not retrace, so tests can assert a 64-root sweep compiles once
-        self.trace_count = 0
-        self._run = jax.jit(self._build())
-        self._run_batch = jax.jit(self._build(batched=True))
+        super().__init__(
+            topo, BFSLevelsProgram(step_factory=step_factory,
+                                   n_extra=n_extra),
+            fold_codec=fold_codec, edge_chunk=edge_chunk,
+            max_levels=max_levels, expand_fn=expand_fn, dedup=dedup)
 
-    # -- one top-down level (paper Alg. 2 lines 12-18) -----------------------
-    def topdown_step(self, graph: LocalGraph2D, st: BFSState, *, i, j):
-        topo, grid = self.topo, self.grid
-        S = grid.S
-
-        # expand exchange: gather frontiers within the processor-column
-        all_front, front_total = X.expand_exchange(
-            st.front, st.front_cnt, topo=topo)
-
-        # frontier expansion (local CSC column scan)
-        ex = F.expand_frontier(
-            graph.col_off, graph.row_idx, st.visited, st.level, st.pred,
-            all_front, front_total, st.lvl, grid=grid, i=i, j=j,
-            edge_chunk=self.edge_chunk, expand_fn=self.expand_fn,
-            dedup=self.dedup)
-
-        # own-column vertices go straight to the frontier (lines 15-16)
-        own_rows = jnp.take(ex.dst, j, axis=0)      # (S,) local rows, block j
-        own_cnt = jnp.take(ex.dst_cnt, j)
-        own_cols = (i * S + (own_rows - j * S)).astype(jnp.int32)  # ROW2COL
-        own_valid = jnp.arange(S, dtype=jnp.int32) < own_cnt
-        dst = ex.dst.at[j].set(-1)
-        dst_cnt = ex.dst_cnt.at[j].set(0)
-
-        # fold exchange: route discoveries to their owners (same grid row)
-        int_verts, int_cnt = self.codec.fold(dst, dst_cnt, topo=topo, j=j)
-
-        # frontier update (paper sec. 3.5)
-        up = F.update_frontier(int_verts, int_cnt, ex.visited, ex.level,
-                               ex.pred, st.lvl, grid=grid, i=i, j=j)
-
-        nf = jnp.full((S,), -1, jnp.int32)
-        nc = jnp.int32(0)
-        nf, nc = F.append_padded(nf, nc, own_cols, own_valid)
-        up_valid = jnp.arange(S, dtype=jnp.int32) < up.new_cnt
-        nf, nc = F.append_padded(nf, nc, up.new_front, up_valid)
-        nf, nc = canonical_front(nf, nc)
-
-        st2 = BFSState(level=up.level, pred=up.pred, visited=up.visited,
-                       front=nf, front_cnt=nc, lvl=st.lvl + 1)
-        return st2, topo.psum_all(nc), ex.edges_scanned
-
-    # -- whole-search program (lax.while_loop over levels) -------------------
-    def _build(self, batched: bool = False):
-        """Device program for one root (scalar) or a (B,) roots axis.
-
-        The batched program runs the whole level loop per root under
-        `lax.map` (a scan: per-root work stays proportional to that root's
-        levels, unlike vmap which would pad every root to the slowest), so a
-        multi-root sweep is ONE compiled executable.
-        """
-        topo, grid = self.topo, self.grid
-
-        def device_fn(col_off, row_idx, nnz, *rest):
-            extra, roots = rest[:-1], rest[-1]
-            graph = LocalGraph2D(col_off=col_off[0, 0], row_idx=row_idx[0, 0],
-                                 nnz=nnz[0, 0])
-            extra = tuple(e[0, 0] for e in extra)
-            i, j = topo.device_coords()
-
-            def search(root):
-                st = init_state(root, grid=grid, i=i, j=j)
-
-                topdown = functools.partial(self.topdown_step, graph, i=i,
-                                            j=j)
-                if self.step_factory is None:
-                    step = lambda st, prev_total: topdown(st)
-                else:
-                    step = self.step_factory(self, graph, extra, i, j,
-                                             topdown)
-
-                def cond(carry):
-                    st, total, hi, lo = carry
-                    return (total > 0) & (st.lvl <= self.max_levels)
-
-                def body(carry):
-                    st, total, hi, lo = carry
-                    st2, total2, scanned = step(st, total)
-                    hi, lo = wide_add(hi, lo, scanned)
-                    return st2, total2, hi, lo
-
-                init_total = topo.psum_all(st.front_cnt)
-                st, _, hi, lo = jax.lax.while_loop(
-                    cond, body,
-                    (st, init_total, jnp.uint32(0), jnp.uint32(0)))
-
-                pred = X.resolve_preds(st.pred, topo=topo, j=j)
-                level = owned_level(st.level, grid=grid, j=j)
-                return level, pred, st.lvl, hi, lo
-
-            if batched:
-                level, pred, lvl, hi, lo = jax.lax.map(search, roots)
-            else:
-                level, pred, lvl, hi, lo = search(roots)
-            return (level[None, None], pred[None, None], lvl[None, None],
-                    hi[None, None], lo[None, None])
-
-        dev = topo.dev_spec
-        out_g = topo.out_block_spec
-        mapped = topo.shard_map(
-            device_fn,
-            in_specs=(dev,) * (3 + self.n_extra) + (P(),),
-            out_specs=(out_g, out_g, dev, dev, dev))
-
-        def counted(*args):
-            # runs at TRACE time only (jit / .lower()); cache hits skip it
-            self.trace_count += 1
-            return mapped(*args)
-
-        return counted
+    def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
+        """One top-down level (paper Alg. 2 lines 12-18)."""
+        from repro.algos.bfs import topdown_step
+        return topdown_step(self, graph, st, i=i, j=j)
 
     def run(self, graph: LocalGraph2D, root, *extra) -> BFSOutput:
         """Search from `root`; extra = the step_factory's per-device arrays.
@@ -248,20 +89,8 @@ class DistBFSEngine:
         Returns global (n,) level/pred in vertex-block order (b = j*R + i,
         i.e. plain global vertex ids), plus the exact 64-bit scanned-edge
         count summed over devices and levels."""
-        level, pred, lvls, hi, lo = self._run(
-            graph.col_off, graph.row_idx, graph.nnz, *extra, jnp.int32(root))
-        return BFSOutput(level=level.reshape(-1), pred=pred.reshape(-1),
-                         n_levels=lvls.max(), edges_scanned=wide_total(hi, lo))
+        return super().run(graph, jnp.int32(root), *extra)
 
     def assemble_batch(self, outs, B: int) -> BFSOutput:
         """Gathered batched device outputs -> global (B, n) BFSOutput."""
-        level, pred, lvls, hi, lo = outs
-        Pn, S = self.grid.P, self.grid.S
-        level = jnp.swapaxes(level.reshape(Pn, B, S), 0, 1).reshape(B, -1)
-        pred = jnp.swapaxes(pred.reshape(Pn, B, S), 0, 1).reshape(B, -1)
-        n_levels = lvls.reshape(-1, B).max(axis=0)
-        hi_s = np.asarray(hi).astype(np.int64).reshape(-1, B).sum(axis=0)
-        lo_s = np.asarray(lo).astype(np.int64).reshape(-1, B).sum(axis=0)
-        scanned = tuple((int(h) << 32) + int(l) for h, l in zip(hi_s, lo_s))
-        return BFSOutput(level=level, pred=pred, n_levels=n_levels,
-                         edges_scanned=scanned)
+        return self.program.assemble(self, outs, B)

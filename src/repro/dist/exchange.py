@@ -41,6 +41,27 @@ def expand_exchange(front, front_cnt, *, topo):
     return F.compact_blocks(af, ac)
 
 
+def expand_exchange_values(front, front_cnt, payload, *, topo, fill=0):
+    """`expand_exchange` with an aligned per-vertex payload channel
+    (frontier programs: the vertex's label / distance / source id).
+
+    Returns (all_front (n_cols_local,), all_payload aligned, front_total) --
+    the same compaction order as `expand_exchange` (valid entries first,
+    grid-row order preserved), applied to ids and payload in lockstep.
+    """
+    R, S = topo.grid.R, topo.grid.S
+    af = topo.row_gather(front).reshape(R, S)
+    ac = topo.row_gather(front_cnt).reshape(R)
+    ap = topo.row_gather(payload).reshape(R, S)
+    mask = jnp.arange(S, dtype=jnp.int32)[None, :] < ac[:, None]
+    flat_m = mask.reshape(-1)
+    order = jnp.argsort(~flat_m, stable=True)
+    valid = flat_m[order]
+    fr = jnp.where(valid, af.reshape(-1)[order], -1)
+    pl = jnp.where(valid, ap.reshape(-1)[order], fill)
+    return fr, pl, jnp.sum(ac, dtype=jnp.int32)
+
+
 def resolve_preds(pred, *, topo, j):
     """Final deferred-predecessor exchange (paper sec. 3.5 / contribution [2]).
 
@@ -81,6 +102,28 @@ class FoldCodec:
     def fold(self, dst, dst_cnt, *, topo, j):
         raise NotImplementedError
 
+    # -- value-carrying fold (frontier programs, DESIGN.md sec. 8) -----------
+    #
+    # Same exchange pattern, but every travelling vertex carries an int32
+    # value (its label / distance / source id).  The id-set goes on the wire
+    # in THIS codec's format; the values ride a dense int32 side channel
+    # aligned to the CANONICAL (ascending, front-packed) bucket order, which
+    # callers must provide (repro.algos.program.pack_blocks does).  Because
+    # the input is canonical and values are min-combined by consumers, every
+    # codec delivers bit-identical results by construction.
+
+    def wire_bytes_values(self, grid: Grid2D) -> int:
+        """Bytes SENT on one value-carrying fold (ids + values channel)."""
+        return self.wire_bytes(grid) + grid.C * 4 * grid.S
+
+    def fold_values(self, ids, cnt, vals, *, topo, j):
+        """ids: (C, S) local-row ids per owner bucket (bucket m holds ids
+        m*S + t), ascending, front-packed, padded -1; vals: (C, S) int32
+        aligned with ids.  Returns (recv_ids (C, S) owned rows j*S + t,
+        ascending front-packed per sender, recv_cnt (C,), recv_vals (C, S)
+        aligned)."""
+        raise NotImplementedError
+
 
 class ListFold(FoldCodec):
     """32-bit local indices, the paper's own wire format (sec. 3.3)."""
@@ -94,6 +137,13 @@ class ListFold(FoldCodec):
         int_verts = topo.col_all_to_all(dst).reshape(C, S)
         int_cnt = topo.col_all_to_all(dst_cnt).reshape(C)
         return int_verts, int_cnt
+
+    def fold_values(self, ids, cnt, vals, *, topo, j):
+        C, S = topo.grid.C, topo.grid.S
+        ri = topo.col_all_to_all(ids).reshape(C, S)
+        rc = topo.col_all_to_all(cnt).reshape(C)
+        rv = topo.col_all_to_all(vals).reshape(C, S)
+        return ri, rc, rv
 
 
 class BitmapFold(FoldCodec):
@@ -131,6 +181,15 @@ class BitmapFold(FoldCodec):
         C, S = topo.grid.C, topo.grid.S
         words = topo.col_all_to_all(self.encode(dst, dst_cnt, S))
         return self.decode(words.reshape(C, -1), j, S)
+
+    def fold_values(self, ids, cnt, vals, *, topo, j):
+        # decode delivers ascending front-packed rows -- exactly the
+        # canonical order the ids (and hence the values channel) arrived in
+        C, S = topo.grid.C, topo.grid.S
+        words = topo.col_all_to_all(self.encode(ids, cnt, S))
+        ri, rc = self.decode(words.reshape(C, -1), j, S)
+        rv = topo.col_all_to_all(vals).reshape(C, S)
+        return ri, rc, rv
 
 
 class DeltaFold(FoldCodec):
@@ -173,6 +232,16 @@ class DeltaFold(FoldCodec):
         gaps = topo.col_all_to_all(self.encode(dst, dst_cnt, S)).reshape(C, S)
         cnt = topo.col_all_to_all(dst_cnt).reshape(C)
         return self.decode(gaps, cnt, j, S)
+
+    def fold_values(self, ids, cnt, vals, *, topo, j):
+        # encode sorts per bucket; canonical input is already sorted, so the
+        # delivered order equals the sent order and the values align
+        C, S = topo.grid.C, topo.grid.S
+        gaps = topo.col_all_to_all(self.encode(ids, cnt, S)).reshape(C, S)
+        rc = topo.col_all_to_all(cnt).reshape(C)
+        ri, _ = self.decode(gaps, rc, j, S)
+        rv = topo.col_all_to_all(vals).reshape(C, S)
+        return ri, rc, rv
 
 
 FOLD_CODECS = {"list": ListFold, "bitmap": BitmapFold, "delta": DeltaFold}

@@ -1,0 +1,98 @@
+"""Subprocess integration check for the frontier-program subsystem on a real
+device grid (DESIGN.md sec. 8):
+
+  * CC / SSSP / multi-source BFS through `GraphSession` on an R x C
+    forced-host-device mesh match the NumPy host references on an R-MAT
+    graph AND on a ring (worst-case propagation depth) -- under every fold
+    codec, bit-identically;
+  * batched SSSP equals per-root SSSP and traces its level loop once;
+  * weights planned by `DistGraph.from_edges(..., weights=)` align with the
+    partition on a multi-device grid;
+  * the degenerate 1 x P topology runs the same programs.
+
+Usage: run_algos.py R C
+"""
+import os
+import sys
+
+R, C = int(sys.argv[1]), int(sys.argv[2])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R * C}"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.algos import (SSSPProgram, cc_reference, multi_bfs_reference,
+                         sssp_reference)
+from repro.api import BFSConfig, DistGraph
+from repro.graphgen import rmat_edges
+
+CODECS = ("list", "bitmap", "delta")
+
+
+def ring_edges(n):
+    u = np.arange(n, dtype=np.int64)
+    fwd = np.stack([u, (u + 1) % n])
+    return np.concatenate([fwd, fwd[::-1]], axis=1)
+
+
+def check_graph(edges_np, n, config, what, mesh=None, sssp_roots=2):
+    rng = np.random.default_rng(7)
+    w = rng.integers(1, 256, size=edges_np.shape[1]).astype(np.uint8)
+    graph = DistGraph.from_edges(edges_np, config, n=n, weights=w,
+                                 mesh=mesh)
+    sess = graph.session()
+
+    cc_ref = cc_reference(edges_np, n)
+    deg = np.bincount(edges_np[0], minlength=n)
+    roots = rng.choice(np.flatnonzero(deg > 0), sssp_roots, replace=False)
+    sp_refs = [sssp_reference(edges_np, w, n, int(r)) for r in roots]
+    sources = rng.choice(np.flatnonzero(deg > 0), 4, replace=False)
+    mb_ref = multi_bfs_reference(edges_np, n, sources)
+
+    for codec in CODECS:
+        cc = sess.connected_components(fold_codec=codec)
+        assert (np.asarray(cc.labels)[:n] == cc_ref).all(), (what, codec,
+                                                             "cc")
+        sp = sess.sssp(roots, fold_codec=codec)
+        for b in range(len(roots)):
+            assert (np.asarray(sp.dist[b])[:n] == sp_refs[b]).all(), \
+                (what, codec, "sssp", roots[b])
+        mb = sess.multi_bfs(sources, fold_codec=codec)
+        assert (np.asarray(mb.level)[:n] == mb_ref[0]).all(), (what, codec,
+                                                               "mb level")
+        assert (np.asarray(mb.src)[:n] == mb_ref[1]).all(), (what, codec,
+                                                             "mb src")
+
+    # batched == per-root, bit-exact, and the sweep traces once
+    eng, _ = sess._algo_engine(SSSPProgram(), None, graph.grid.n + 1)
+    assert eng.trace_count == 1, f"{what}: SSSP sweep traced more than once"
+    s0 = sess.sssp(int(roots[0]))
+    sp = sess.sssp(roots)
+    assert (np.asarray(sp.dist[0]) == np.asarray(s0.dist)).all(), what
+    assert sp.edges_scanned[0] == s0.edges_scanned, what
+
+    # k-hop truncation
+    mb2 = sess.multi_bfs(sources, k=2)
+    ref2 = multi_bfs_reference(edges_np, n, sources, max_levels=2)
+    assert (np.asarray(mb2.level)[:n] == ref2[0]).all(), (what, "k-hop")
+    print(f"  {what}: OK")
+
+
+SCALE, EF = 9, 8
+n = 1 << SCALE
+rmat = np.asarray(rmat_edges(jax.random.key(0), SCALE, EF))
+
+check_graph(rmat, n, BFSConfig(grid=(R, C), edge_chunk=2048), "rmat 2d")
+check_graph(ring_edges(64), 64, BFSConfig(grid=(R, C), edge_chunk=256),
+            "ring 2d", sssp_roots=1)
+
+# degenerate 1 x P topology through the same programs
+from repro.dist.compat import make_mesh
+mesh1 = make_mesh((R * C,), ("p",))
+check_graph(rmat, n,
+            BFSConfig(grid=(1, R * C), row_axes=(), col_axes=("p",),
+                      edge_chunk=2048),
+            "rmat 1d", mesh=mesh1, sssp_roots=1)
+
+print("OK")

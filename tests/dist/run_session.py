@@ -4,6 +4,8 @@
     (CSR twin only when direction is on);
   * batched `GraphSession.bfs` is bit-exact vs per-root queries AND the
     python reference, for the list codec and for direction optimisation;
+  * every sweep runs with `validate=` on, so multi-device CI checks the
+    Graph500 rules (tree/level/edge consistency), not just bit-equality;
   * a multi-root sweep traces the level loop exactly once (AOT cache);
   * the degenerate 1 x P topology works through the same session API.
 
@@ -20,7 +22,7 @@ import jax
 import numpy as np
 
 from repro.api import BFSConfig, DistGraph
-from repro.core import bfs_reference_py, validate_bfs
+from repro.core import bfs_reference_py
 from repro.dist.compat import make_mesh
 from repro.graphgen import rmat_edges, build_csc
 
@@ -34,13 +36,15 @@ roots = np.random.default_rng(3).choice(np.flatnonzero(deg > 0), 8,
 
 
 def check_batch(sess, what):
-    bout = sess.bfs(roots)
+    # validate= runs the Graph500 rules on every root inside the session
+    # (explicit edge array: the direction session has released the host
+    # copy to plan its CSR twin)
+    bout = sess.bfs(roots, validate=edges_np)
     assert sess.engine.trace_count == 1, f"{what}: sweep traced more than once"
     for b, root in enumerate(roots):
         ref, _ = bfs_reference_py(co, ri, int(root), n)
         lvl = np.asarray(bout.level[b])[:n]
         assert (lvl == ref).all(), f"{what}: levels mismatch at root {root}"
-        validate_bfs(edges_np, lvl, np.asarray(bout.pred[b])[:n], int(root))
     # batched == sequential, bit-exact (scalar goes through the B=1 program)
     sout = sess.bfs(int(roots[0]))
     assert (np.asarray(bout.level[0]) == np.asarray(sout.level)).all(), what
@@ -54,6 +58,8 @@ graph = DistGraph.from_edges(
     edges_np, BFSConfig(grid=(R, C), edge_chunk=2048), n=n)
 assert graph.csr is None, "CSR twin built without direction"
 check_batch(graph.session(), "2d")
+# validate=True resolves to the retained host edges while CSR is unplanned
+graph.session().bfs(int(roots[0]), validate=True)
 
 # --- direction optimisation over the SAME resident graph (lazy CSR) --------
 dsess = graph.session(BFSConfig(grid=(R, C), edge_chunk=2048,

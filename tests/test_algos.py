@@ -1,0 +1,284 @@
+"""Frontier-program subsystem coverage (DESIGN.md sec. 8).
+
+  * CC / SSSP / multi-source BFS through the session match the NumPy host
+    references on R-MAT, ring and star graphs, under every fold codec,
+    bit-identically;
+  * BFS through the refactored engine is unchanged (covered by
+    tests/test_api_session.py); here we additionally pin SSSP with unit
+    weights == BFS levels (the semiring degeneration) and multi_bfs from a
+    single source == bfs levels;
+  * batched SSSP == per-root SSSP, and sweeps trace the level loop once;
+  * engine/AOT caches are shared across sessions on one DistGraph;
+  * `partition_edge_vals` lays values out in exactly `partition_2d`'s order;
+  * weight-less graphs reject sssp with a clear error.
+
+Multi-device equivalents run in tests/dist/run_algos.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algos import (ConnectedComponentsProgram, SSSPProgram,
+                         cc_reference, k_hop_neighborhood,
+                         multi_bfs_reference, sssp_reference)
+from repro.api import BFSConfig, DistGraph
+from repro.core import Grid2D, partition_2d
+from repro.core.partition import partition_edge_vals
+from repro.graphgen import rmat_edges
+
+SCALE, EF = 8, 8
+N = 1 << SCALE
+CODECS = ("list", "bitmap", "delta")
+
+
+def ring_edges(n):
+    u = np.arange(n, dtype=np.int64)
+    fwd = np.stack([u, (u + 1) % n])
+    return np.concatenate([fwd, fwd[::-1]], axis=1)
+
+
+def star_edges(n):
+    """Hub 0 joined to every spoke, both directions."""
+    spokes = np.arange(1, n, dtype=np.int64)
+    hub = np.zeros_like(spokes)
+    return np.stack([np.concatenate([hub, spokes]),
+                     np.concatenate([spokes, hub])])
+
+
+@pytest.fixture(scope="module")
+def rmat_graph():
+    edges = np.asarray(rmat_edges(jax.random.key(0), SCALE, EF))
+    rng = np.random.default_rng(1)
+    w = rng.integers(1, 256, size=edges.shape[1]).astype(np.uint8)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=512), n=N, weights=w)
+    return edges, w, graph
+
+
+# ----------------------------------------------------------------------------
+# Connected components
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_cc_rmat_matches_reference(rmat_graph, codec):
+    edges, _, graph = rmat_graph
+    out = graph.session().connected_components(fold_codec=codec)
+    assert (np.asarray(out.labels)[:N] == cc_reference(edges, N)).all()
+    assert int(out.n_iters) >= 1 and out.edges_scanned > 0
+
+
+def test_cc_codecs_bit_identical(rmat_graph):
+    _, _, graph = rmat_graph
+    outs = [graph.session().connected_components(fold_codec=c)
+            for c in CODECS]
+    for out in outs[1:]:
+        assert (np.asarray(out.labels) == np.asarray(outs[0].labels)).all()
+        assert out.edges_scanned == outs[0].edges_scanned
+
+
+@pytest.mark.parametrize("edges_fn,n", [(ring_edges, 64), (star_edges, 65)])
+def test_cc_ring_and_star(edges_fn, n):
+    """One component -> all labels 0; the ring needs ~n/2 propagation
+    levels (the deep-diameter case `max_levels = n + 1` must cover)."""
+    edges = edges_fn(n)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=256), n=n)
+    out = graph.session().connected_components()
+    assert (np.asarray(out.labels)[:n] == 0).all()
+    assert (np.asarray(out.labels)[:n] == cc_reference(edges, n)).all()
+
+
+def test_cc_two_components():
+    """Two disjoint rings -> two labels (each ring's min id)."""
+    n = 32
+    a = ring_edges(n)
+    b = ring_edges(n) + n
+    edges = np.concatenate([a, b], axis=1)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=256), n=2 * n)
+    lab = np.asarray(graph.session().connected_components().labels)[:2 * n]
+    assert (lab[:n] == 0).all() and (lab[n:] == n).all()
+
+
+# ----------------------------------------------------------------------------
+# SSSP
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_sssp_rmat_matches_dijkstra(rmat_graph, codec):
+    edges, w, graph = rmat_graph
+    root = int(np.flatnonzero(np.bincount(edges[0], minlength=N) > 0)[0])
+    out = graph.session().sssp(root, fold_codec=codec)
+    assert (np.asarray(out.dist)[:N] == sssp_reference(edges, w, N,
+                                                       root)).all()
+
+
+def test_sssp_unit_weights_equal_bfs_levels(rmat_graph):
+    """min-plus with w == 1 degenerates to BFS hop counts."""
+    edges, _, _ = rmat_graph
+    ones = np.ones(edges.shape[1], np.uint8)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=512), n=N, weights=ones)
+    sess = graph.session()
+    root = int(np.flatnonzero(np.bincount(edges[0], minlength=N) > 0)[3])
+    bfs = sess.bfs(root)
+    sp = sess.sssp(root)
+    assert (np.asarray(sp.dist) == np.asarray(bfs.level)).all()
+
+
+def test_sssp_batched_bitexact_and_traces_once(rmat_graph):
+    edges, w, graph = rmat_graph
+    sess = graph.session()
+    deg = np.bincount(edges[0], minlength=N)
+    roots = np.random.default_rng(2).choice(np.flatnonzero(deg > 0), 8,
+                                            replace=False)
+    eng, _ = sess._algo_engine(SSSPProgram(), None, graph.grid.n + 1)
+    t0 = eng.trace_count
+    bout = sess.sssp(roots)
+    assert eng.trace_count <= t0 + 1, "sweep must trace at most once"
+    t1 = eng.trace_count
+    sess.sssp(roots[::-1].copy())
+    assert eng.trace_count == t1, "second sweep must hit the AOT cache"
+    for b, root in enumerate(roots):
+        sout = sess.sssp(int(root))
+        assert (np.asarray(bout.dist[b]) == np.asarray(sout.dist)).all()
+        assert bout.edges_scanned[b] == sout.edges_scanned
+        assert (np.asarray(bout.dist[b])[:N] ==
+                sssp_reference(edges, w, N, int(root))).all()
+
+
+def test_sssp_ring_weighted():
+    n = 64
+    edges = ring_edges(n)
+    rng = np.random.default_rng(3)
+    w = rng.integers(1, 256, size=edges.shape[1]).astype(np.uint8)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=256), n=n, weights=w)
+    out = graph.session().sssp(5)
+    assert (np.asarray(out.dist)[:n] == sssp_reference(edges, w, n, 5)).all()
+
+
+def test_sssp_requires_weights(rmat_graph):
+    edges, _, _ = rmat_graph
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=512), n=N)
+    with pytest.raises(ValueError, match="weights"):
+        graph.session().sssp(0)
+
+
+def test_partition_edge_vals_aligns_with_partition_2d():
+    """vals[i, j, k] must describe the edge at row_idx[i, j, k]: encode each
+    edge's identity into its value and check against the CSC layout."""
+    edges = np.asarray(rmat_edges(jax.random.key(5), 6, 4))
+    n = 1 << 6
+    grid = Grid2D.for_vertices(n, 2, 2)
+    lg = partition_2d(edges, grid)
+    # value = global dst id (mod 251) -- recoverable from the local row
+    vals = (edges[1] % 251).astype(np.int32)
+    out = partition_edge_vals(edges, vals, grid)
+    assert out.shape == lg.row_idx.shape
+    S, ncl = grid.S, grid.n_cols_local
+    for i in range(2):
+        for j in range(2):
+            nnz = int(lg.nnz[i, j])
+            lr = lg.row_idx[i, j, :nnz]
+            gdst = ((lr // S) * grid.R + i) * S + lr % S
+            assert (out[i, j, :nnz] == gdst % 251).all()
+            assert (out[i, j, nnz:] == 0).all()
+
+
+# ----------------------------------------------------------------------------
+# Multi-source BFS
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_multi_bfs_matches_reference(rmat_graph, codec):
+    edges, _, graph = rmat_graph
+    deg = np.bincount(edges[0], minlength=N)
+    sources = np.flatnonzero(deg > 0)[[0, 7, 19, 40]]
+    out = graph.session().multi_bfs(sources, fold_codec=codec)
+    lref, sref = multi_bfs_reference(edges, N, sources)
+    assert (np.asarray(out.level)[:N] == lref).all()
+    assert (np.asarray(out.src)[:N] == sref).all()
+
+
+def test_multi_bfs_single_source_equals_bfs(rmat_graph):
+    edges, _, graph = rmat_graph
+    sess = graph.session()
+    root = int(np.flatnonzero(np.bincount(edges[0], minlength=N) > 0)[2])
+    mb = sess.multi_bfs(np.array([root]))
+    bfs = sess.bfs(root)
+    assert (np.asarray(mb.level) == np.asarray(bfs.level)).all()
+    reached = np.asarray(mb.level) >= 0
+    assert (np.asarray(mb.src)[reached] == 0).all()
+
+
+def test_multi_bfs_k_hop_truncation(rmat_graph):
+    edges, _, graph = rmat_graph
+    deg = np.bincount(edges[0], minlength=N)
+    sources = np.flatnonzero(deg > 0)[[1, 9]]
+    out = graph.session().multi_bfs(sources, k=2)
+    lref, sref = multi_bfs_reference(edges, N, sources, max_levels=2)
+    assert (np.asarray(out.level)[:N] == lref).all()
+    assert (np.asarray(out.src)[:N] == sref).all()
+    hood = k_hop_neighborhood(edges, N, sources, 2)
+    assert (np.flatnonzero(np.asarray(out.level)[:N] >= 0) == hood).all()
+    assert int(out.n_levels) <= 3
+
+
+def test_multi_bfs_star_tie_break():
+    """Every spoke adjacent to two sources in one wave -> min index wins."""
+    n = 17
+    edges = star_edges(n)
+    graph = DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 1), edge_chunk=64), n=n)
+    # sources: two spokes; the hub is hit by both in wave 1 -> index 0
+    out = graph.session().multi_bfs(np.array([5, 3]))
+    lref, sref = multi_bfs_reference(edges, n, [5, 3])
+    assert (np.asarray(out.level)[:n] == lref).all()
+    assert (np.asarray(out.src)[:n] == sref).all()
+    assert int(np.asarray(out.src)[0]) == 0      # hub claimed by index 0
+
+
+def test_multi_bfs_rejects_empty_sources(rmat_graph):
+    _, _, graph = rmat_graph
+    with pytest.raises(ValueError, match="non-empty"):
+        graph.session().multi_bfs(np.array([], np.int32))
+
+
+# ----------------------------------------------------------------------------
+# Cache discipline across programs
+# ----------------------------------------------------------------------------
+
+def test_algo_engines_cached_on_graph(rmat_graph):
+    _, _, graph = rmat_graph
+    s1, s2 = graph.session(), graph.session()
+    e1, k1 = s1._algo_engine(ConnectedComponentsProgram(), None,
+                             graph.grid.n + 1)
+    e2, k2 = s2._algo_engine(ConnectedComponentsProgram(), None,
+                             graph.grid.n + 1)
+    assert e1 is e2 and k1 == k2, "sessions must share algo engines"
+    # distinct codec -> distinct engine; repeat CC calls hit the AOT cache
+    e3, _ = s1._algo_engine(ConnectedComponentsProgram(), "delta",
+                            graph.grid.n + 1)
+    assert e3 is not e1
+    before = e1.trace_count
+    s1.connected_components()
+    s2.connected_components()
+    assert e1.trace_count == max(before, 1), "repeat CC must hit the cache"
+
+
+def test_validate_flag_runs_graph500_rules(rmat_graph):
+    """bfs(validate=...) runs the Graph500 rules (satellite: session-level
+    validation); a released edge list raises a clear error."""
+    edges, _, graph = rmat_graph
+    sess = graph.session()
+    deg = np.bincount(edges[0], minlength=N)
+    roots = np.flatnonzero(deg > 0)[:3]
+    sess.bfs(int(roots[0]), validate=True)         # retained host edges
+    sess.bfs(roots, validate=edges)                # explicit edge array
+    graph.release_edges()
+    sess.bfs(int(roots[0]), validate=edges)        # still fine explicitly
+    with pytest.raises(ValueError, match="released"):
+        sess.bfs(int(roots[0]), validate=True)

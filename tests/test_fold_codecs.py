@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import frontier as F
 from repro.core import Grid2D, partition_2d, bfs_reference_py, validate_bfs
 from repro.core.bfs2d import BFS2D
@@ -105,6 +106,127 @@ def test_fold_codecs_identical_levels_and_preds():
         assert (np.asarray(outs[codec].pred) ==
                 np.asarray(outs["list"].pred)).all(), codec
         assert outs[codec].edges_scanned == outs["list"].edges_scanned
+
+
+# ----------------------------------------------------------------------------
+# Wire-format roundtrips at the frontier-density extremes (satellite: empty,
+# full and single-vertex frontiers across list/bitmap/delta).  The exchange
+# is emulated without a mesh: each row of the canonical bucket array plays
+# the part of one sender's bucket for column j, exactly what the receiver
+# sees after the all_to_all.
+# ----------------------------------------------------------------------------
+
+I32_MAX = int(np.iinfo(np.int32).max)
+
+
+def _canonical_buckets(subsets, vals_rng, S, j):
+    """Per-sender subsets of [0, S) -> canonical (ids, cnt, vals) arrays
+    (ascending, front-packed, id = j*S + t) as `algos.program.pack_blocks`
+    produces them."""
+    C = len(subsets)
+    ids = np.full((C, S), -1, np.int32)
+    vals = np.full((C, S), I32_MAX, np.int32)
+    cnt = np.zeros((C,), np.int32)
+    for m, T in enumerate(subsets):
+        T = np.sort(np.asarray(sorted(T), dtype=np.int32))
+        ids[m, :len(T)] = j * S + T
+        vals[m, :len(T)] = vals_rng.integers(0, 1 << 30, size=len(T))
+        cnt[m] = len(T)
+    return jnp.asarray(ids), jnp.asarray(cnt), jnp.asarray(vals)
+
+
+def _emulate_fold_values(codec_name, ids, cnt, vals, S, j):
+    """Receiver-side (ids, cnt, vals) for one emulated fold exchange."""
+    if codec_name == "list":
+        return np.asarray(ids), np.asarray(cnt), np.asarray(vals)
+    if codec_name == "bitmap":
+        words = X.BitmapFold.encode(ids, cnt, S)
+        ri, rc = X.BitmapFold.decode(words, jnp.int32(j), S)
+        return np.asarray(ri), np.asarray(rc), np.asarray(vals)
+    gaps = X.DeltaFold.encode(ids, cnt, S)
+    assert gaps.dtype == jnp.uint16
+    ri, rc = X.DeltaFold.decode(gaps, cnt, jnp.int32(j), S)
+    return np.asarray(ri), np.asarray(rc), np.asarray(vals)
+
+
+def _assert_roundtrip(subsets, S, j, seed=0):
+    ids, cnt, vals = _canonical_buckets(subsets, np.random.default_rng(seed),
+                                        S, j)
+    got = {c: _emulate_fold_values(c, ids, cnt, vals, S, j)
+           for c in X.FOLD_CODECS}
+    for name, (ri, rc, rv) in got.items():
+        assert (rc == np.asarray(cnt)).all(), name
+        for m, T in enumerate(subsets):
+            want = j * S + np.sort(np.asarray(sorted(T), dtype=np.int32))
+            k = len(T)
+            assert (ri[m, :k] == want).all(), (name, m)
+            assert (ri[m, k:] == -1).all(), (name, m)
+        # the values channel stays aligned with the delivered id order
+        assert (rv == np.asarray(vals)).all(), name
+
+
+@pytest.mark.parametrize("S", [1, 32, 33, 64])
+@pytest.mark.parametrize("kind", ["empty", "single", "full", "mixed"])
+def test_fold_values_roundtrip_extremes(S, kind):
+    """Deterministic coverage of the density extremes (runs with or without
+    hypothesis): empty frontier, single-vertex frontier, full frontier."""
+    C, j = 4, 2
+    rng = np.random.default_rng(S)
+    if kind == "empty":
+        subsets = [set() for _ in range(C)]
+    elif kind == "single":
+        subsets = [{int(rng.integers(0, S))} for _ in range(C)]
+    elif kind == "full":
+        subsets = [set(range(S)) for _ in range(C)]
+    else:   # one empty, one single, one full, one random
+        subsets = [set(), {int(rng.integers(0, S))}, set(range(S)),
+                   set(rng.choice(S, size=int(rng.integers(0, S + 1)),
+                                  replace=False).tolist())]
+    _assert_roundtrip(subsets, S, j, seed=S)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 96), st.integers(0, 3), st.integers(0, 10_000))
+def test_fold_values_roundtrip_property(S, j, seed):
+    """Random per-sender subsets: every codec delivers the identical
+    canonical (ids, cnt) set and keeps the values channel aligned."""
+    rng = np.random.default_rng(seed)
+    C = j + 1 + int(rng.integers(0, 3))
+    subsets = [set(rng.choice(S, size=int(rng.integers(0, S + 1)),
+                              replace=False).tolist()) for _ in range(C)]
+    _assert_roundtrip(subsets, S, j, seed=seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 80), st.integers(0, 10_000))
+def test_set_fold_encode_decode_property(S, seed):
+    """The plain (set-only) bitmap/delta encode/decode pair recovers each
+    bucket's id set sorted ascending, at any density including 0 and S."""
+    rng = np.random.default_rng(seed)
+    C, j = 3, 1
+    dst = np.full((C, S), -1, np.int32)
+    cnts = []
+    for m in range(C):
+        k = int(rng.integers(0, S + 1))
+        t = rng.choice(S, size=k, replace=False)
+        dst[m, :k] = j * S + t       # unsorted, as expand produces them
+        cnts.append(k)
+    cnt = jnp.asarray(cnts, jnp.int32)
+    for name in ("bitmap", "delta"):
+        if name == "bitmap":
+            ri, rc = X.BitmapFold.decode(
+                X.BitmapFold.encode(jnp.asarray(dst), cnt, S), jnp.int32(j),
+                S)
+        else:
+            ri, rc = X.DeltaFold.decode(
+                X.DeltaFold.encode(jnp.asarray(dst), cnt, S), cnt,
+                jnp.int32(j), S)
+        ri = np.asarray(ri)
+        assert (np.asarray(rc) == np.asarray(cnt)).all(), name
+        for m in range(C):
+            want = np.sort(dst[m, :cnts[m]])
+            assert (ri[m, :cnts[m]] == want).all(), (name, m)
+            assert (ri[m, cnts[m]:] == -1).all(), (name, m)
 
 
 def test_compat_is_only_direct_importer():
