@@ -13,7 +13,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import OUT_DIR, emit, emit_json
+from benchmarks.common import bench_scale, emit, emit_json, smoke_mode
 
 SCALE, EF = 13, 8
 CODECS = ("list", "bitmap", "delta")
@@ -37,8 +37,10 @@ def main():
     from repro.api import BFSConfig, DistGraph
     from repro.graphgen import rmat_edges
 
-    n = 1 << SCALE
-    edges = np.asarray(rmat_edges(jax.random.key(11), SCALE, EF))
+    scale = bench_scale(SCALE)
+    iters = 1 if smoke_mode() else ITERS
+    n = 1 << scale
+    edges = np.asarray(rmat_edges(jax.random.key(11), scale, EF))
     w = np.random.default_rng(0).integers(1, 256, size=edges.shape[1]) \
         .astype(np.uint8)
     graph = DistGraph.from_edges(
@@ -66,11 +68,11 @@ def main():
         sums = {}
         for codec in CODECS:
             out = run(codec)
-            wall = _time(lambda: run(codec), field)
+            wall = _time(lambda: run(codec), field, iters=iters)
             scanned = int(out.edges_scanned)
             checksum = int(field(out).astype(np.int64).sum())
             sums[codec] = checksum
-            rows.append((name, codec, SCALE, EF, f"{wall:.4f}", scanned,
+            rows.append((name, codec, scale, EF, f"{wall:.4f}", scanned,
                          f"{scanned / wall:.3e}", checksum))
             result.setdefault(name, {})[codec] = {
                 "wall_s": wall, "edges_scanned": scanned,
@@ -80,7 +82,7 @@ def main():
         result[name]["codecs_agree"] = True
 
     emit(rows, "algos_sweep")
-    path = emit_json({"schema": "BENCH_algos/v1", "scale": SCALE, "ef": EF,
+    path = emit_json({"schema": "BENCH_algos/v1", "scale": scale, "ef": EF,
                       "algos": result}, "BENCH_algos")
     print(f"wrote {path}")
 

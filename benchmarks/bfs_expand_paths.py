@@ -1,0 +1,36 @@
+"""Expand-path head-to-head (DESIGN.md sec. 9): the SAME BFS level sequence
+under the reference jnp scan and the fused Pallas kernel (interpret mode on
+this CPU container), reporting per-level expand times and asserting the two
+paths stay bit-identical (the lvl_sum checksums must agree across the worker
+processes).  This is the expand-path dimension of BENCH_bfs (schema v4)."""
+from benchmarks.common import bench_scale, emit, run_worker
+
+SCALE_DEFAULT, EF = 14, 16
+PATHS = ("reference", "pallas-interpret")
+HEADER = ("path", "level", "frontier", "edges", "expand_s", "lvl_sum")
+
+
+def main():
+    scale = bench_scale(SCALE_DEFAULT)
+    rows, sums = [HEADER], {}
+    for path in PATHS:
+        out = run_worker("expand_worker.py", scale, EF, path).strip()
+        for line in out.splitlines():
+            row = tuple(line.strip().split(","))
+            if len(row) != len(HEADER):
+                continue                    # tolerate stray worker chatter
+            rows.append(row)
+            sums[path] = row[-1]
+    # emit BEFORE the equality gates: the rows are the diagnostic when one
+    # fires.  A path with no parseable rows is a FAILURE, not a vacuous pass.
+    emit(rows, "expand_paths")
+    missing = [p for p in PATHS if p not in sums]
+    if missing:
+        raise AssertionError(f"no parseable rows from worker(s): {missing}")
+    if len(set(sums.values())) != 1:
+        raise AssertionError(f"expand paths disagree on levels: {sums}")
+    print(f"# expand paths agree: lvl_sum = {sums['reference']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,6 @@
 (Kepler path: deterministic scatter-min winner, our default) vs the
 'scatter/compact' pre-Kepler path (sort-based dedup supporting benign races,
 the paper's original).  Single device, one realistic level."""
-import time
 
 import jax
 import jax.numpy as jnp

@@ -2,18 +2,21 @@
 the SAME scale-14 searches under each fold wire format, reporting TEPS and
 measured bytes-per-edge, and asserting the outputs are bit-identical (the
 lvl_sum/pred_sum checksums must agree across the worker processes)."""
-from benchmarks.common import BFS_WORKER_HEADER, emit, run_worker
+from benchmarks.common import (BFS_WORKER_HEADER, bench_scale, emit,
+                               run_worker, smoke_mode)
 
-R, C, SCALE, EF, ROOTS = 2, 2, 14, 16, 3
+R, C, EF = 2, 2, 16
 CODECS = ("list", "bitmap", "delta")
 
 
 def main():
+    scale = bench_scale(14)
+    roots = 2 if smoke_mode() else 3
     header = BFS_WORKER_HEADER
     rows = [header]
     sums = {}
     for codec in CODECS:
-        out = run_worker("bfs_worker.py", "2d", R, C, SCALE, EF, ROOTS, codec)
+        out = run_worker("bfs_worker.py", "2d", R, C, scale, EF, roots, codec)
         row = tuple(out.strip().split(","))
         rows.append(row)
         d = dict(zip(header, row))

@@ -1,7 +1,5 @@
 """Table 3 analog: real-world graphs (reduced R-MAT analogs matched to the
 paper's scale/edge-factor per graph; no network access in this container)."""
-import jax
-import numpy as np
 
 from benchmarks.common import emit, run_worker
 

@@ -9,6 +9,20 @@ import time
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "bench_out")
 
+
+def bench_scale(default: int) -> int:
+    """Suite graph scale: the REPRO_BENCH_SCALE env override (set by
+    `benchmarks/run.py --scale N`, e.g. the CI smoke job) or the suite's
+    full-run default."""
+    v = os.environ.get("REPRO_BENCH_SCALE", "").strip()
+    return int(v) if v else default
+
+
+def smoke_mode() -> bool:
+    """True under `benchmarks/run.py --smoke` (CI: fewer roots/iters; the
+    correctness gates still run in full)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
 # One header for every suite driving workers/bfs_worker.py -- the worker's
 # print order and the suites' CSVs must agree, so it lives here once.
 # batched_harmonic_TEPS: harmonic mean over roots of

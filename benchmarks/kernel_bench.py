@@ -15,11 +15,12 @@ from benchmarks.common import emit, timeit
 
 
 def main():
-    import sys, os
+    import os
+    import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from repro.kernels import binsearch_map, visited_filter
+    from repro.kernels import binsearch_map, clip_cumul, local_expand, \
+        visited_filter
     from repro.kernels import ref as R
-    from repro.kernels.ops import clip_cumul
 
     rng = np.random.default_rng(0)
     rows = [("name", "us_per_call", "derived")]
@@ -36,12 +37,8 @@ def main():
         assert (np.asarray(k_kernel)[ok] == np.asarray(k_ref)[ok]).all()
         f = jax.jit(lambda c, g: R.binsearch_map_ref(c, g))
         t = timeit(lambda: jax.block_until_ready(f(cumul, gids)))
-        # TPU work model: scalar path = E*log2(F) serial gathers;
-        # vector path = E * span/W lane-ops with W=256 (DESIGN.md sec. 3)
-        import math
-        ratio = math.log2(F_SZ) / (F_SZ / 256 / (E / int(cumul[-1]) or 1) + 1)
         rows.append((f"binsearch_map_ref_F{F_SZ}_E{E}",
-                     f"{t * 1e6:.0f}", f"parity_ok"))
+                     f"{t * 1e6:.0f}", "parity_ok"))
 
     v = jnp.asarray(rng.integers(0, 1 << 16, size=1 << 15), jnp.int32)
     valid = jnp.asarray(rng.random(1 << 15) < 0.8)
@@ -55,6 +52,25 @@ def main():
     f2 = jax.jit(lambda v, val, w: R.visited_filter_ref(v[:256], val[:256], w))
     t2 = timeit(lambda: jax.block_until_ready(f2(v, valid, words)))
     rows.append(("visited_filter_ref_tile256", f"{t2 * 1e6:.0f}", "parity_ok"))
+
+    # the FUSED op (DESIGN.md sec. 9): reference-path timing + cross-path
+    # parity gate at a bench shape
+    n = 1 << 12
+    fdeg = rng.integers(0, 16, size=n).astype(np.int32)
+    col_off = jnp.asarray(np.concatenate([[0], np.cumsum(fdeg)]), jnp.int32)
+    row_idx = jnp.asarray(rng.integers(0, n, size=int(fdeg.sum())), jnp.int32)
+    front = jnp.arange(n, dtype=jnp.int32)
+    vis = jnp.zeros((n,), bool)
+    ref = local_expand((front, n), (col_off, row_idx), vis, path="reference",
+                       edge_chunk=4096)
+    pal = local_expand((front, n), (col_off, row_idx), vis,
+                       path="pallas-interpret", edge_chunk=4096)
+    assert (np.asarray(ref.verts) == np.asarray(pal.verts)).all()
+    assert (np.asarray(ref.parents) == np.asarray(pal.parents)).all()
+    t3 = timeit(lambda: jax.block_until_ready(local_expand(
+        (front, n), (col_off, row_idx), vis, path="reference",
+        edge_chunk=4096).verts))
+    rows.append((f"local_expand_ref_n{n}", f"{t3 * 1e6:.0f}", "parity_ok"))
     emit(rows, "kernel_bench")
 
 

@@ -1,8 +1,8 @@
 """Benchmark orchestrator: one module per paper table/figure.
 Each prints CSV rows (also written to bench_out/<name>.csv); a final pass
 folds everything into machine-readable bench_out/BENCH_bfs.json so the perf
-trajectory (TEPS, bytes-per-edge per fold codec, per-phase times) is
-trackable across PRs.
+trajectory (TEPS, bytes-per-edge per fold codec, per-phase times, per-level
+expand times per expand path) is trackable across PRs.
 
   fig3   weak scaling (TEPS vs devices, scale/device fixed)
   fig4   strong scaling (fixed graph)
@@ -11,12 +11,31 @@ trackable across PRs.
   fold   list/bitmap/delta fold codec head-to-head (+ equality check)
   fig8/t2 atomic-style vs sort/compact expansion
   table3 real-world graph analogs
+  expand reference vs fused-Pallas(-interpret) per-level expand times
   kernels Pallas-kernel parity + oracle timings
+
+CLI:
+  --scale N   force every honoring suite to graph scale N (REPRO_BENCH_SCALE)
+  --smoke     reduced CI suite list (fold codecs on 2x2 simulated devices,
+              algos sweep, expand paths, kernel parity) with fewer
+              roots/iters; the bit-exactness and schema gates still run in
+              full and a violation exits non-zero (the regression gate is on
+              correctness counters, never on wall-clock)
 """
+import argparse
+import json
 import os
 import sys
 import time
 import traceback
+
+# runnable as `python benchmarks/run.py` from anywhere: the suites import
+# each other through the `benchmarks` namespace package at the repo root,
+# and the in-process suites (algos_sweep, kernel_bench) import repro
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 from benchmarks import common
 
@@ -67,10 +86,20 @@ def write_bench_json() -> None:
          "transfer_frac": _f(r.get("transfer_frac"))}
         for r in read_csv("fig5_6_breakdown")]
 
+    # the expand-path dimension (v4): per-level expand wall times for the
+    # reference scan vs the fused Pallas(-interpret) kernel, same search
+    exp_rows = read_csv("expand_paths")
+    expand_paths = {}
+    for r in exp_rows:
+        expand_paths.setdefault(r["path"], []).append({
+            "level": _f(r.get("level")), "frontier": _f(r.get("frontier")),
+            "edges": _f(r.get("edges")),
+            "expand_s": _f(r.get("expand_s"))})
+
     out = {
-        "schema": "BENCH_bfs/v3",   # v3: + batched_harmonic_TEPS (harmonic
-                                    # mean with count_component_edges
-                                    # numerators for the batched sweep too)
+        "schema": "BENCH_bfs/v4",   # v4: + expand_paths / expand_paths_agree
+                                    # (per-level expand times, reference vs
+                                    # pallas(-interpret), bit-exactness gate)
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),
@@ -83,16 +112,92 @@ def write_bench_json() -> None:
                               for v in codecs.values()}) == 1
                          if codecs else None),
         "phases": phases,
+        "expand_paths": expand_paths,
+        "expand_paths_agree": (len({r.get("lvl_sum") for r in exp_rows}) == 1
+                               if exp_rows else None),
     }
     path = emit_json(out, "BENCH_bfs")
     print(f"\nwrote {path}")
 
 
-def main() -> None:
+def validate_bench(smoke: bool) -> list:
+    """Schema + correctness-counter gates over the emitted JSON artifacts.
+
+    Returns a list of violation strings (empty = pass).  Gates correctness
+    (codec / expand-path bit-exactness, schema shape), NEVER wall-clock.
+    In smoke mode the smoke suites' sections are additionally REQUIRED, so
+    a silently-skipped suite cannot read as a pass.
+    """
+    errors = []
+
+    def load(name):
+        p = os.path.join(common.OUT_DIR, f"{name}.json")
+        if not os.path.exists(p):
+            return None
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except json.JSONDecodeError as e:
+            errors.append(f"{name}.json: invalid JSON ({e})")
+            return None
+
+    bfs = load("BENCH_bfs")
+    if bfs is None:
+        errors.append("BENCH_bfs.json missing")
+    else:
+        if bfs.get("schema") != "BENCH_bfs/v4":
+            errors.append(f"BENCH_bfs schema {bfs.get('schema')!r} != "
+                          f"'BENCH_bfs/v4'")
+        for key in ("teps", "fold_codecs", "codecs_agree", "phases",
+                    "expand_paths", "expand_paths_agree"):
+            if key not in bfs:
+                errors.append(f"BENCH_bfs missing key {key!r}")
+        if bfs.get("codecs_agree") is False:
+            errors.append("fold codecs disagree on levels/preds "
+                          "(codecs_agree = false)")
+        if bfs.get("expand_paths_agree") is False:
+            errors.append("expand paths disagree on levels "
+                          "(expand_paths_agree = false)")
+        if smoke:
+            if not bfs.get("fold_codecs"):
+                errors.append("smoke: fold_codecs section empty")
+            ep = bfs.get("expand_paths") or {}
+            for path in ("reference", "pallas-interpret"):
+                if not ep.get(path):
+                    errors.append(f"smoke: expand_paths[{path!r}] empty")
+
+    algos = load("BENCH_algos")
+    if algos is None:
+        if smoke:
+            errors.append("smoke: BENCH_algos.json missing")
+    else:
+        if algos.get("schema") != "BENCH_algos/v1":
+            errors.append(f"BENCH_algos schema {algos.get('schema')!r} != "
+                          f"'BENCH_algos/v1'")
+        for name, res in (algos.get("algos") or {}).items():
+            if res.get("codecs_agree") is not True:
+                errors.append(f"BENCH_algos[{name!r}]: codecs_agree != true")
+        if smoke and not algos.get("algos"):
+            errors.append("smoke: BENCH_algos has no algos")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scale", type=int, default=None,
+                    help="force graph scale for suites that honor it")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI suite list; correctness gates in full")
+    args = ap.parse_args(argv)
+    if args.scale is not None:
+        os.environ["REPRO_BENCH_SCALE"] = str(args.scale)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from benchmarks import (bfs_weak_scaling, bfs_strong_scaling,
                             bfs_breakdown, bfs_1d_vs_2d, bfs_fold_codecs,
-                            bfs_expansion_variants, bfs_realworld,
-                            algos_sweep, kernel_bench)
+                            bfs_expand_paths, bfs_expansion_variants,
+                            bfs_realworld, algos_sweep, kernel_bench)
     # (suite label, entry point, CSV name the suite emits)
     suites = [
         ("algos_sweep", algos_sweep.main, "algos_sweep"),
@@ -102,11 +207,15 @@ def main() -> None:
         ("fig5_6_breakdown", bfs_breakdown.main, "fig5_6_breakdown"),
         ("fig7_1d_vs_2d", bfs_1d_vs_2d.main, "fig7_1d_vs_2d"),
         ("fold_codecs", bfs_fold_codecs.main, "fold_codecs"),
+        ("expand_paths", bfs_expand_paths.main, "expand_paths"),
         ("table2_fig8_expansion", bfs_expansion_variants.main,
          "table2_fig8_expansion_variants"),
         ("table3_realworld", bfs_realworld.main, "table3_realworld"),
         ("kernel_bench", kernel_bench.main, "kernel_bench"),
     ]
+    if args.smoke:
+        keep = {"algos_sweep", "fold_codecs", "expand_paths", "kernel_bench"}
+        suites = [s for s in suites if s[0] in keep]
     failures = 0
     for name, fn, csv_name in suites:
         print(f"\n=== {name} ===")
@@ -123,8 +232,12 @@ def main() -> None:
             failures += 1
             print(f"--- {name} FAILED:\n{traceback.format_exc()[-1500:]}")
     write_bench_json()
-    if failures:
+    errors = validate_bench(args.smoke)
+    for e in errors:
+        print(f"VALIDATION: {e}")
+    if failures or errors:
         sys.exit(1)
+    print("validation OK")
 
 
 if __name__ == "__main__":

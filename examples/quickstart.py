@@ -8,7 +8,6 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.graphgen import rmat_edges, build_csc

@@ -56,7 +56,6 @@ def run(name, build, results):
 
 def main():
     from repro.launch.mesh import make_production_mesh, mesh_axes
-    from repro.configs import get_arch
     from repro.configs.lm_common import build_lm_dryrun
     import importlib
 

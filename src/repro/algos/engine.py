@@ -64,14 +64,23 @@ class FrontierEngine:
                 (None defers to `program.codec_hint`).
     edge_chunk: CSC scan chunk size of the expand phase.
     max_levels: loop bound fed to `program.keep_going`.
-    expand_fn:  optional kernel override for the CSC scan (Pallas path).
+    expand:     local-expand implementation: "reference" | "pallas" |
+                "pallas-interpret" | "auto" (DESIGN.md sec. 9).  "auto"
+                picks Pallas on GPU/TPU, reference on CPU, and honors
+                REPRO_EXPAND=pallas-interpret for interpret-mode testing.
+                All paths are bit-identical.
+    expand_fn:  explicit chunk-expansion override for the CSC scan; when
+                given it wins over `expand` (and value-carrying scans fall
+                back to the reference path).
     dedup:      winner-selection method for set-valued folds.
     """
 
     def __init__(self, topo, program, *, fold_codec=None,
                  edge_chunk: int = 8192, max_levels: int = 64,
-                 expand_fn=None, dedup: str = "scatter"):
+                 expand: str = "auto", expand_fn=None,
+                 dedup: str = "scatter"):
         from repro.dist.exchange import get_fold_codec
+        from repro.kernels.select import resolve_expand_path
 
         self.topo = topo
         self.grid = topo.grid
@@ -80,6 +89,24 @@ class FrontierEngine:
         self.codec = get_fold_codec(spec, topo.grid)
         self.edge_chunk = edge_chunk
         self.max_levels = max_levels
+        self.expand = expand
+        # value_expand_fn is the value-carrying twin threaded into
+        # `repro.algos.program.scan_relax` (CC / SSSP / multi-source BFS)
+        self.value_expand_fn = None
+        if expand_fn is not None:
+            self.expand_path = "custom"
+        else:
+            self.expand_path = resolve_expand_path(expand)
+            if self.expand_path != "reference":
+                # import OUTSIDE any trace (the kernel modules cache jnp
+                # constants at import time; see repro.kernels.expand), and
+                # through the package surface so a Pallas-less install gets
+                # the guided ImportError (expand='reference' remedy)
+                from repro.kernels import (make_expand_fn,
+                                           make_value_expand_fn)
+                expand_fn = make_expand_fn(path=self.expand_path)
+                self.value_expand_fn = make_value_expand_fn(
+                    path=self.expand_path)
         self.expand_fn = expand_fn
         self.dedup = dedup
         # traces of the level loop (scalar or batched); jit/AOT cache hits do

@@ -96,7 +96,8 @@ class MultiSourceBFSProgram(FrontierProgram):
             cand, scanned = PR.scan_relax(
                 graph.col_off, graph.row_idx, None, all_front, all_pay,
                 ftot, lambda p, w: p, n_rows=nrl, grid=grid,
-                edge_chunk=engine.edge_chunk)
+                edge_chunk=engine.edge_chunk,
+                expand_fn=engine.value_expand_fn)
             # first fold per vertex per device (the BFS visited discipline)
             improved = (cand < I32_MAX) & ~st.visited
             vis1 = st.visited | improved

@@ -124,7 +124,7 @@ class ValueState:
 
 def scan_relax(col_off, row_idx, edge_vals, all_front, all_payload,
                front_total, relax, *, n_rows: int, grid: Grid2D,
-               edge_chunk: int = 8192):
+               edge_chunk: int = 8192, expand_fn=None):
     """Chunked CSC scan of the gathered frontier, min-combining relaxed
     payloads into a dense per-local-row candidate array.
 
@@ -134,10 +134,16 @@ def scan_relax(col_off, row_idx, edge_vals, all_front, all_payload,
     Same chunked searchsorted edge walk as `frontier.expand_frontier`
     (paper Alg. 3), same O(frontier edges + chunk) cost per level.
 
+    expand_fn: optional value-carrying kernel override for one chunk (the
+    fused Pallas path, `repro.kernels.expand.make_value_expand_fn`):
+        (gids, cumul, all_front, all_payload, front_total, col_off, row_idx)
+            -> (v, payload, addr, valid)
+    Bit-identical to the inline scan: the kernel maps/gathers, the relax
+    monoid and the scatter-min combine stay here.
+
     Returns (cand (n_rows,) int32, edges_scanned uint32).
     """
     ncl = grid.n_cols_local
-    nnz_cap = row_idx.shape[0]
 
     u_safe = jnp.clip(all_front, 0, ncl - 1)
     deg = (col_off[u_safe + 1] - col_off[u_safe])
@@ -148,14 +154,16 @@ def scan_relax(col_off, row_idx, edge_vals, all_front, all_payload,
     def chunk_body(state):
         start, cand = state
         gids = start + jnp.arange(edge_chunk, dtype=jnp.int32)
-        k = jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1
-        k = jnp.clip(k, 0, ncl - 1)
-        u = u_safe[k]
-        addr = jnp.clip(col_off[u] + gids - cumul[k], 0, nnz_cap - 1)
-        valid = gids < total
-        v = jnp.where(valid, row_idx[addr], 0)
+        if expand_fn is None:
+            v, _, k, addr, valid = F.reference_expand_chunk(
+                gids, cumul, all_front, front_total, col_off, row_idx)
+            pay = all_payload[k]
+        else:
+            v, pay, addr, valid = expand_fn(gids, cumul, all_front,
+                                            all_payload, front_total,
+                                            col_off, row_idx)
         w = None if edge_vals is None else edge_vals[addr]
-        val = jnp.where(valid, relax(all_payload[k], w), I32_MAX)
+        val = jnp.where(valid, relax(pay, w), I32_MAX)
         cand = cand.at[jnp.where(valid, v, n_rows)].min(val, mode="drop")
         return start + edge_chunk, cand
 
@@ -220,7 +228,8 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
         cand, scanned = scan_relax(
             graph.col_off, graph.row_idx, edge_vals, all_front, all_pay,
             ftot, relax, n_rows=nrl, grid=grid,
-            edge_chunk=engine.edge_chunk)
+            edge_chunk=engine.edge_chunk,
+            expand_fn=engine.value_expand_fn)
         # propose only strict improvements over what we already know
         improved = cand < st.val
         val1 = jnp.minimum(st.val, cand)

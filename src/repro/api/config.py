@@ -47,7 +47,15 @@ class BFSConfig:
                  frontier exceeds n / alpha).
     row_axes /
     col_axes:    mesh axes the processor grid's rows/columns span.
-    expand_fn:   optional kernel override for the CSC scan (Pallas path).
+    expand_fn:   explicit chunk-expansion override for the CSC scan (wins
+                 over `expand` when given).
+    expand:      local-expand implementation (DESIGN.md sec. 9):
+                 "pallas" (the fused kernel, compiled), "pallas-interpret"
+                 (the same kernel body in interpret mode, for CPU testing),
+                 "reference" (the inline jnp scan), or "auto" (Pallas on
+                 GPU/TPU, reference on CPU; the REPRO_EXPAND environment
+                 variable overrides, so CI can force pallas-interpret).
+                 Every path is bit-identical.
     """
     grid: Any = None
     fold_codec: Any = "list"
@@ -59,6 +67,7 @@ class BFSConfig:
     row_axes: tuple = ("r",)
     col_axes: tuple = ("c",)
     expand_fn: Any = None
+    expand: str = "auto"
 
     def __post_init__(self):
         for f in ("row_axes", "col_axes"):
@@ -72,12 +81,23 @@ class BFSConfig:
         return fc if isinstance(fc, str) else getattr(fc, "name", repr(fc))
 
     @property
+    def expand_path(self) -> str:
+        """The concrete expand implementation this config selects NOW
+        ("auto" resolves against REPRO_EXPAND and the default backend)."""
+        from repro.kernels.select import resolve_expand_path
+
+        return resolve_expand_path(self.expand)
+
+    @property
     def engine_key(self) -> tuple:
         """What makes two configs share one DistBFSEngine (and hence one
-        AOT-compile cache line, together with graph shape and batch size)."""
+        AOT-compile cache line, together with graph shape and batch size).
+
+        Uses the RESOLVED expand path, so "auto" configs re-key correctly
+        if REPRO_EXPAND changes between engine builds in one process."""
         return (self.codec_name, self.direction, self.edge_chunk, self.dedup,
                 self.max_levels, self.alpha, self.row_axes, self.col_axes,
-                self.expand_fn)
+                self.expand_fn, self.expand_path)
 
     def algo_engine_key(self, program_key: tuple, codec_name: str,
                         max_levels: int) -> tuple:
@@ -86,7 +106,8 @@ class BFSConfig:
         bakes in.  `codec_name`/`max_levels` are per-call (the program's
         codec hint / iteration bound may override the BFS spellings)."""
         return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
-                max_levels, self.row_axes, self.col_axes)
+                max_levels, self.row_axes, self.col_axes, self.expand_fn,
+                self.expand_path)
 
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""

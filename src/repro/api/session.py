@@ -42,8 +42,9 @@ def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
         n_extra = 2
     return DistBFSEngine(
         topology, fold_codec=config.fold_codec, edge_chunk=config.edge_chunk,
-        max_levels=config.max_levels, expand_fn=config.expand_fn,
-        dedup=config.dedup, step_factory=step_factory, n_extra=n_extra)
+        max_levels=config.max_levels, expand=config.expand,
+        expand_fn=config.expand_fn, dedup=config.dedup,
+        step_factory=step_factory, n_extra=n_extra)
 
 
 class DistGraph:
@@ -238,6 +239,7 @@ class GraphSession:
             eng = FrontierEngine(
                 self.graph.topology, program, fold_codec=codec,
                 edge_chunk=self.config.edge_chunk, max_levels=max_levels,
+                expand=self.config.expand, expand_fn=self.config.expand_fn,
                 dedup=self.config.dedup)
             self.graph._engines[key] = eng
         return eng, key

@@ -1,1 +1,2 @@
-from repro.configs.registry import ARCHS, get_arch, MeshAxes, DryrunSpec
+from repro.configs.registry import ARCHS, get_arch
+from repro.configs.common import MeshAxes, DryrunSpec

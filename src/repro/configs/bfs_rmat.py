@@ -7,7 +7,6 @@ deferred-predecessor exchange) at the Table-1 scale for the mesh size:
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -13,18 +13,16 @@ SEQUENCE over everything (GSPMD inserts the partial-softmax reductions --
 flash-decoding's split-KV as a sharding choice)."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.common import DryrunSpec, MeshAxes, abstract
+from repro.configs.common import DryrunSpec, MeshAxes
 from repro.models import lm as L
 from repro.models.moe import MoEShard
 from repro.optim.adamw import AdamWConfig
-from repro.train.train_step import TrainConfig, make_train_step, init_state, \
-    state_shardings
+from repro.train.train_step import TrainConfig, make_train_step, init_state
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

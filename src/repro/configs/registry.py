@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import functools
 
-from repro.configs.common import ArchDef, DryrunSpec, MeshAxes
+from repro.configs.common import ArchDef
 
 
 def _lm(arch_module_name: str):

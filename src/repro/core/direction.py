@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import frontier as F
 from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
-from repro.dist.engine import DistBFSEngine, canonical_front
+from repro.dist.engine import canonical_front
 from repro.dist.topology import Topology
 
 I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)

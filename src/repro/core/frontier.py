@@ -1,8 +1,9 @@
 """Device-local frontier expansion / update (paper sec. 3.4, 3.5).
 
 Everything here is pure jnp with static shapes and is the REFERENCE path; the
-Pallas kernels in `repro.kernels` implement the same contracts for the hot
-tiles (see kernels/ops.py for the drop-in switch).
+fused Pallas pipeline in `repro.kernels.expand` implements the same contracts
+for the hot tiles (`make_expand_fn` is the drop-in switch; engines select it
+via `BFSConfig(expand=...)`, DESIGN.md sec. 9).
 
 Adaptation notes (DESIGN.md sec. 3):
   * `atomicOr` visited dedup      -> scatter-min "winner" selection (the first
@@ -15,7 +16,6 @@ Adaptation notes (DESIGN.md sec. 3):
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -124,6 +124,41 @@ def unpack_bitmap(words, S: int):
     return bits.reshape(words.shape[:-1] + (-1,))[..., :S].astype(bool)
 
 
+def reference_expand_chunk(gids, cumul, all_front, front_total, col_off,
+                           row_idx):
+    """One chunk of the paper's column scan in plain jnp -- THE reference
+    map/gather formulas, single source of truth.  Shared by
+    `expand_frontier`'s inline path, `repro.algos.program.scan_relax` and
+    `repro.kernels.expand.local_expand(path="reference")`; the fused Pallas
+    kernel mirrors these formulas lane for lane (the bit-identity contract,
+    DESIGN.md sec. 9) -- edit them HERE or the paths diverge.
+
+    Returns (v, u, k, addr, valid): candidate local rows (masked lanes
+    -> 0), parent frontier cols, frontier slot index, clipped CSC edge
+    address, live-lane mask.
+    """
+    ncl = all_front.shape[0]
+    nnz_cap = row_idx.shape[0]
+    k = jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1
+    k = jnp.clip(k, 0, ncl - 1)
+    u = jnp.clip(all_front, 0, ncl - 1)[k]
+    addr = jnp.clip(col_off[u] + gids - cumul[k], 0, nnz_cap - 1)
+    valid = gids < cumul[front_total]
+    v = jnp.where(valid, row_idx[addr], 0)
+    return v, u, k, addr, valid
+
+
+def set_bits(words, v, take):
+    """Set bit v[take] in the packed uint32 bitmap (the incremental twin of
+    `pack_bitmap`): callers guarantee the taken v are DISTINCT and their
+    bits currently unset (winner_dedup output on unvisited candidates), so
+    a scatter-add of single-bit values is an exact atomicOr."""
+    nw = words.shape[0]
+    bit = jnp.uint32(1) << (v & 31).astype(jnp.uint32)
+    return words.at[jnp.where(take, v >> 5, nw)].add(
+        jnp.where(take, bit, jnp.uint32(0)), mode="drop")
+
+
 class ExpandResult(NamedTuple):
     visited: jax.Array
     level: jax.Array
@@ -144,12 +179,14 @@ def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
     i, j: this device's grid coordinates (traced or static).
     expand_fn: optional kernel override mapping
         (gids, cumul, all_front, front_total, col_off, row_idx, visited)
-        -> (v, unvisited_mask, u) for one chunk (the Pallas path).
+        -> (v, unvisited_mask, u) for one chunk (the Pallas path).  A
+        closure carrying `accepts_words = True` additionally receives
+        `words=` -- the packed visited bitmap this loop then maintains
+        INCREMENTALLY (one O(n_rows) pack per level instead of per chunk).
     """
     n_rows = visited.shape[0]
     S, C = grid.S, grid.C
     ncl = grid.n_cols_local
-    nnz_cap = row_idx.shape[0]
 
     u_safe = jnp.clip(all_front, 0, ncl - 1)
     deg = (col_off[u_safe + 1] - col_off[u_safe])
@@ -159,19 +196,20 @@ def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
 
     dst = jnp.full((C, S), -1, jnp.int32)
     dst_cnt = jnp.zeros((C,), jnp.int32)
+    use_words = bool(getattr(expand_fn, "accepts_words", False))
+    words = pack_bitmap(visited) if use_words \
+        else jnp.zeros((1,), jnp.uint32)               # pytree placeholder
 
     def chunk_body(state):
-        start, visited, level, pred, dst, dst_cnt = state
+        start, visited, words, level, pred, dst, dst_cnt = state
         gids = start + jnp.arange(edge_chunk, dtype=jnp.int32)
         if expand_fn is None:
-            k = jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1
-            k = jnp.clip(k, 0, ncl - 1)
-            u = u_safe[k]
-            addr = col_off[u] + gids - cumul[k]
-            valid = gids < total
-            v = row_idx[jnp.clip(addr, 0, nnz_cap - 1)]
-            v = jnp.where(valid, v, 0)
+            v, u, _, _, valid = reference_expand_chunk(
+                gids, cumul, all_front, front_total, col_off, row_idx)
             unvis = valid & ~visited[v]
+        elif use_words:
+            v, unvis, u = expand_fn(gids, cumul, all_front, front_total,
+                                    col_off, row_idx, visited, words=words)
         else:
             v, unvis, u = expand_fn(gids, cumul, all_front, front_total,
                                     col_off, row_idx, visited)
@@ -179,6 +217,8 @@ def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
         # mark visited (paper: atomicOr on the full-local-row bitmap -- this
         # is what makes every remote vertex fold at most once per search)
         visited = visited.at[jnp.where(win, v, n_rows)].set(True, mode="drop")
+        if use_words:
+            words = set_bits(words, v, win)
         # predecessor: global parent id, stored also for remote rows
         # (deferred resolution, paper sec. 3.5 / [2])
         pg = (j * ncl + u).astype(jnp.int32)
@@ -190,13 +230,13 @@ def expand_frontier(col_off, row_idx, visited, level, pred, all_front,
         level = level.at[jnp.where(is_local, v, n_rows)].set(
             jnp.where(is_local, lvl, 0), mode="drop")
         dst, dst_cnt = bucket_append(dst, dst_cnt, v, m, win, C)
-        return start + edge_chunk, visited, level, pred, dst, dst_cnt
+        return start + edge_chunk, visited, words, level, pred, dst, dst_cnt
 
     def chunk_cond(state):
         return state[0] < total
 
-    init = (jnp.int32(0), visited, level, pred, dst, dst_cnt)
-    _, visited, level, pred, dst, dst_cnt = jax.lax.while_loop(
+    init = (jnp.int32(0), visited, words, level, pred, dst, dst_cnt)
+    _, visited, _, level, pred, dst, dst_cnt = jax.lax.while_loop(
         chunk_cond, chunk_body, init)
     # per-level count reported unsigned: one level's local scan is bounded by
     # the int32-indexable local nnz, but the SUM across levels/devices is not

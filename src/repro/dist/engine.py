@@ -56,7 +56,11 @@ class DistBFSEngine(FrontierEngine):
     ----------
     topo:         Topology binding the processor grid to mesh axes.
     fold_codec:   "list" | "bitmap" | "delta" | FoldCodec instance.
-    expand_fn:    optional kernel override for the CSC scan (Pallas path).
+    expand:       local-expand implementation ("reference" | "pallas" |
+                  "pallas-interpret" | "auto"; DESIGN.md sec. 9) -- the
+                  fused Pallas pipeline vs the inline jnp scan,
+                  bit-identical either way.
+    expand_fn:    explicit chunk-expansion override (wins over `expand`).
     dedup:        winner-selection method ("scatter" | "sort").
     step_factory: optional `(engine, graph, extra, i, j, topdown) -> step`
                   hook replacing the default top-down per-level step.
@@ -66,8 +70,8 @@ class DistBFSEngine(FrontierEngine):
 
     def __init__(self, topo: Topology, *, fold_codec="list",
                  edge_chunk: int = 8192, max_levels: int = 64,
-                 expand_fn=None, dedup: str = "scatter",
-                 step_factory=None, n_extra: int = 0):
+                 expand: str = "auto", expand_fn=None,
+                 dedup: str = "scatter", step_factory=None, n_extra: int = 0):
         from repro.algos.bfs import BFSLevelsProgram
 
         self.step_factory = step_factory
@@ -76,7 +80,8 @@ class DistBFSEngine(FrontierEngine):
             topo, BFSLevelsProgram(step_factory=step_factory,
                                    n_extra=n_extra),
             fold_codec=fold_codec, edge_chunk=edge_chunk,
-            max_levels=max_levels, expand_fn=expand_fn, dedup=dedup)
+            max_levels=max_levels, expand=expand, expand_fn=expand_fn,
+            dedup=dedup)
 
     def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
         """One top-down level (paper Alg. 2 lines 12-18)."""

@@ -1,15 +1,67 @@
-"""Pallas TPU kernels for the BFS hot spots (paper sec. 3.4/3.4.1).
+"""Pallas kernels for the BFS hot spots (paper sec. 3.4/3.4.1).
 
-The paper's column-scan CUDA kernel decomposes on TPU into:
-  binsearch_map   -- thread->edge mapping (scan + search) as a monotonic
-                     windowed broadcast-compare (VPU-dense, no per-lane
-                     divergent binary search);
-  gather_segments -- concatenation of the frontier's CSC columns into a
-                     contiguous edge buffer (chunked sequential-grid DMA);
-  visited_filter  -- bitmap test + first-occurrence dedup (the atomicOr
-                     analog; dense triangular compare replaces the race).
+The paper's column-scan CUDA kernel lives here as ONE fused op plus its
+stages (DESIGN.md sec. 9):
 
-Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+  expand.local_expand  -- the fused local-expand pipeline: workload mapping,
+                          neighbor gather, bitmap visited filter and output
+                          compaction, with "pallas" / "pallas-interpret" /
+                          "reference" implementations that are bit-identical;
+  binsearch_map        -- the thread->edge mapping stage as a standalone op
+                          (monotonic windowed broadcast-compare);
+  visited_filter       -- the bitmap test + first-occurrence dedup stage as
+                          a standalone op (the atomicOr analog);
+  ref                  -- pure-jnp stage oracles for the parity tests.
+
+The engines select a path with `BFSConfig(expand=...)` and thread the chunk
+closures from `make_expand_fn` / `make_value_expand_fn` into their scans.
+
+Everything is exported lazily (PEP 562) so `import repro` / `import
+repro.kernels` works on installs without jax.experimental.pallas; only
+touching a kernel symbol requires Pallas, and a missing Pallas surfaces as a
+clear ImportError at that point.
 """
-from repro.kernels.ops import binsearch_map, gather_segments, visited_filter, \
-    make_expand_fn
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # the fused op and its engine hooks (repro.kernels.expand)
+    "local_expand": "repro.kernels.expand",
+    "LocalExpandOut": "repro.kernels.expand",
+    "expand_chunk": "repro.kernels.expand",
+    "expand_chunk_values": "repro.kernels.expand",
+    "make_expand_fn": "repro.kernels.expand",
+    "make_value_expand_fn": "repro.kernels.expand",
+    # selection is Pallas-free (repro.kernels.select): engines resolve paths
+    # on every construction, including on installs without Pallas
+    "resolve_expand_path": "repro.kernels.select",
+    "EXPAND_PATHS": "repro.kernels.select",
+    "EXPAND_ENV": "repro.kernels.select",
+    # stage ops
+    "binsearch_map": "repro.kernels._binsearch_map",
+    "map_workload_tile": "repro.kernels._binsearch_map",
+    "clip_cumul": "repro.kernels._binsearch_map",
+    "visited_filter": "repro.kernels._visited_filter",
+    "filter_tile": "repro.kernels._visited_filter",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    try:
+        mod = importlib.import_module(module)
+    except ImportError as e:   # Pallas (or its deps) unavailable
+        raise ImportError(
+            f"repro.kernels.{name} needs jax.experimental.pallas, which "
+            f"failed to import; use BFSConfig(expand='reference') on this "
+            f"install ({e})") from e
+    return getattr(mod, name)
+
+
+def __dir__():
+    return __all__

@@ -15,8 +15,12 @@ The loop runs ceil((k_last - k0 + 1) / W) times: total work O(TILE * span/W)
 vector ops instead of O(TILE log F) divergent scalar ops.
 
 cumul must be CLIPPED by the caller: entries at index > front_total set to
-I32_MAX (ops.py does this) so the window loop terminates after the live
+I32_MAX (`clip_cumul` below) so the window loop terminates after the live
 frontier prefix.
+
+`map_workload_tile` is the kernel body on VALUES: it is the workload-mapping
+STAGE of the fused local-expand pipeline (repro.kernels.expand) and the whole
+kernel of the standalone `binsearch_map` op.
 """
 from __future__ import annotations
 
@@ -29,13 +33,19 @@ from jax.experimental import pallas as pl
 I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
 
 
-def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
-    gid = gids_ref[...]
-    # the cumul block sits whole in VMEM; read it ONCE into a value so the
-    # while loops below stay ref-free (JAX 0.4.x interpret mode cannot
-    # discharge ref reads inside a while cond; on TPU the dynamic_slices
-    # lower to the same VMEM accesses pl.load would)
-    cumul = cumul_ref[...]
+def clip_cumul(cumul, front_total):
+    """Entries past the live frontier -> I32_MAX (terminates the kernel's
+    window loop right after the prefix; see module docstring)."""
+    idx = jnp.arange(cumul.shape[0], dtype=jnp.int32)
+    return jnp.where(idx <= front_total, cumul, I32_MAX)
+
+
+def map_workload_tile(gid, cumul, *, window: int, n_cumul: int):
+    """k[t] = max { l : cumul[l] <= gid[t] } for ONE tile of consecutive edge
+    ids, as dense VPU work (the thread->edge mapping stage).
+
+    Operates on values (not refs): callable both from a Pallas kernel body
+    (the refs read once into values) and from the fused expand kernel."""
     g0 = gid[0]
     gmax = gid[-1]
 
@@ -73,7 +83,16 @@ def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
 
     _, count = jax.lax.while_loop(
         wcond, wbody, (k0 + 1, jnp.zeros_like(gid)))
-    k_ref[...] = k0 + count
+    return k0 + count
+
+
+def _kernel(gids_ref, cumul_ref, k_ref, *, window: int, n_cumul: int):
+    # the cumul block sits whole in VMEM; read it ONCE into a value so the
+    # while loops stay ref-free (JAX 0.4.x interpret mode cannot discharge
+    # ref reads inside a while cond; on TPU the dynamic_slices lower to the
+    # same VMEM accesses pl.load would)
+    k_ref[...] = map_workload_tile(gids_ref[...], cumul_ref[...],
+                                   window=window, n_cumul=n_cumul)
 
 
 @functools.partial(jax.jit,

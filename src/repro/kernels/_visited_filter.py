@@ -21,10 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(v_ref, valid_ref, words_ref, won_ref):
-    v = v_ref[...]
-    valid = valid_ref[...]
-    words = words_ref[...]
+def filter_tile(v, valid, words):
+    """The kernel body on VALUES: bitmap test + first-occurrence dedup for
+    ONE tile.  Also the visited-filter STAGE of the fused local-expand
+    pipeline (repro.kernels.expand)."""
     n_words = words.shape[0]
     w = jnp.clip(v >> 5, 0, n_words - 1)
     old = jnp.take(words, w, axis=0)
@@ -35,7 +35,11 @@ def _kernel(v_ref, valid_ref, words_ref, won_ref):
     ii = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
     dup = jnp.any(eq & (jj < ii), axis=1)
-    won_ref[...] = unvis & ~dup
+    return unvis & ~dup
+
+
+def _kernel(v_ref, valid_ref, words_ref, won_ref):
+    won_ref[...] = filter_tile(v_ref[...], valid_ref[...], words_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

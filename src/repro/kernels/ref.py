@@ -1,4 +1,7 @@
-"""Pure-jnp oracles for the Pallas kernels."""
+"""Pure-jnp oracles for the Pallas kernel STAGES (repro.kernels.expand's
+fused op additionally has a full reference path of its own: the
+path="reference" branch of `local_expand`, which the parity tests pin
+against these stage oracles and against the engines' inline scans)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -9,22 +12,6 @@ I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
 def binsearch_map_ref(cumul, gids):
     """k[t] = max { l : cumul[l] <= gids[t] } (paper's binsearch_maxle)."""
     return (jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1)
-
-
-def gather_segments_ref(front_off, cumul, row_idx, out_size: int):
-    """Concatenate row_idx[front_off[k] : front_off[k] + deg_k] at cumul[k].
-
-    front_off: (F,) segment starts in row_idx; cumul: (F+1,) exclusive scan
-    of segment lengths (entries beyond the real frontier repeat the total).
-    Returns (out_size,) with unused tail = -1.
-    """
-    slots = jnp.arange(out_size, dtype=jnp.int32)
-    k = binsearch_map_ref(cumul, slots)
-    k = jnp.clip(k, 0, front_off.shape[0] - 1)
-    addr = front_off[k] + slots - cumul[k]
-    valid = slots < cumul[-1]
-    v = row_idx[jnp.clip(addr, 0, row_idx.shape[0] - 1)]
-    return jnp.where(valid, v, -1)
 
 
 def visited_filter_ref(v, valid, bitmap_words):

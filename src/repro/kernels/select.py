@@ -1,0 +1,44 @@
+"""Expand-path selection (the `BFSConfig(expand=...)` rules; DESIGN.md
+sec. 9).
+
+Deliberately Pallas-free: the engines call `resolve_expand_path` on EVERY
+construction -- including expand="reference" ones on installs without
+jax.experimental.pallas -- so the selection logic must import without it.
+The kernels themselves live in `repro.kernels.expand` and are only imported
+once a non-reference path is selected.
+"""
+from __future__ import annotations
+
+import os
+
+EXPAND_PATHS = ("reference", "pallas", "pallas-interpret")
+EXPAND_ENV = "REPRO_EXPAND"
+
+
+def resolve_expand_path(spec="auto", *, platform: str | None = None) -> str:
+    """Concretise an expand-path spelling.
+
+    spec: "reference" | "pallas" | "pallas-interpret" are themselves;
+    "auto" (or None) consults the REPRO_EXPAND environment variable first
+    (so CI matrix legs force the kernel path process-wide) and otherwise
+    picks "pallas" on GPU/TPU backends, "reference" on CPU.
+    """
+    if spec is None:
+        spec = "auto"
+    if spec == "auto":
+        env = os.environ.get(EXPAND_ENV, "").strip().lower()
+        if env and env != "auto":
+            if env not in EXPAND_PATHS:
+                raise ValueError(
+                    f"{EXPAND_ENV}={env!r}: expected one of {EXPAND_PATHS} "
+                    f"or 'auto'")
+            return env
+        if platform is None:
+            import jax
+            platform = jax.default_backend()
+        return "pallas" if platform in ("gpu", "tpu", "cuda", "rocm") \
+            else "reference"
+    if spec not in EXPAND_PATHS:
+        raise ValueError(
+            f"expand={spec!r}: expected one of {EXPAND_PATHS + ('auto',)}")
+    return spec

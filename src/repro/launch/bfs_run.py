@@ -14,7 +14,6 @@ container); on a TPU pod, drop --devices and bind --row-axes/--col-axes to
 the pod mesh."""
 import argparse
 import os
-import sys
 
 
 def main():

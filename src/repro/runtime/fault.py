@@ -14,7 +14,7 @@ recovery logic is unit-testable:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 class FaultInjector:

@@ -14,7 +14,6 @@ The model plugs in as loss_fn(params, batch) -> scalar.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -15,7 +15,6 @@
 Multi-device equivalents run in tests/dist/run_algos.py.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

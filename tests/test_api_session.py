@@ -11,14 +11,13 @@
 
 Multi-device session checks run in tests/dist/run_session.py.
 """
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import BFSConfig, DistGraph, GraphSession
+from repro.api import BFSConfig, DistGraph
 from repro.core import (Grid2D, bfs_reference_py, partition_2d, validate_bfs)
 from repro.core.types import LocalGraph2D
 from repro.dist.compat import make_mesh

@@ -1,7 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.graphgen import rmat_edges, build_csc, build_csr, degrees
 from repro.graphgen.build import build_csc_np

@@ -1,5 +1,6 @@
-"""Per-kernel shape/dtype sweeps + property tests vs the ref.py oracles
-(interpret=True executes the kernel bodies on CPU)."""
+"""Per-stage shape/dtype sweeps + property tests vs the ref.py oracles
+(interpret=True executes the kernel bodies on CPU).  The FUSED pipeline the
+stages compose into is covered by tests/test_expand.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,10 +8,9 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.kernels import binsearch_map, gather_segments, visited_filter, \
-    make_expand_fn
+from repro.kernels import binsearch_map, clip_cumul, make_expand_fn, \
+    visited_filter
 from repro.kernels import ref as R
-from repro.kernels.ops import clip_cumul
 
 
 def _cumul(rng, n_seg, max_deg):
@@ -52,21 +52,33 @@ def test_binsearch_map_property(data):
     assert (np.diff(k[valid]) >= 0).all()
 
 
-@pytest.mark.parametrize("chunk", [4, 32, 128])
+@pytest.mark.parametrize("tile,window", [(64, 16), (128, 64)])
 @pytest.mark.parametrize("n_seg", [1, 13, 64])
-def test_gather_segments_sweep(chunk, n_seg, rng):
-    seglen = rng.integers(0, 3 * chunk, size=n_seg).astype(np.int32)
-    cum = np.concatenate([[0], np.cumsum(seglen)]).astype(np.int32)
-    pool = rng.integers(0, 10_000, size=4096).astype(np.int32)
-    off = rng.integers(0, pool.size - 3 * chunk, size=n_seg).astype(np.int32)
-    out = gather_segments(jnp.asarray(off), jnp.asarray(cum),
-                          jnp.asarray(pool), out_size=int(cum[-1]),
-                          chunk=chunk)
-    ref = np.asarray(R.gather_segments_ref(
-        jnp.asarray(off), jnp.asarray(cum), jnp.asarray(pool),
-        int(cum[-1])) if cum[-1] else np.zeros(0, np.int32))
-    np.testing.assert_array_equal(np.asarray(out)[:int(cum[-1])],
-                                  ref[:int(cum[-1])])
+def test_fused_gather_stage_sweep(tile, window, n_seg, rng):
+    """Stage 2 of the fused pipeline (the old gather_segments role): the
+    kernel's v must equal row_idx[col_off[u] + gid - cumul[k]] -- i.e. the
+    concatenation of the frontier's CSC columns -- on every valid lane."""
+    from repro.kernels import expand_chunk
+
+    ncl = n_seg
+    deg = rng.integers(0, 3 * tile // n_seg + 2, size=ncl).astype(np.int32)
+    col_off = np.concatenate([[0], np.cumsum(deg)]).astype(np.int32)
+    row_idx = rng.integers(0, 10_000, size=max(int(col_off[-1]), 1)) \
+        .astype(np.int32)
+    front = np.arange(ncl, dtype=np.int32)          # full frontier
+    cumul = np.concatenate([[0], np.cumsum(deg)]).astype(np.int32)
+    total = int(cumul[-1])
+    e = max(tile, ((total + tile - 1) // tile) * tile)
+    gids = jnp.arange(e, dtype=jnp.int32)
+    v, won, u = expand_chunk(
+        gids, jnp.asarray(cumul), jnp.asarray(front), jnp.int32(ncl),
+        jnp.asarray(col_off), jnp.asarray(row_idx),
+        jnp.zeros((10_000,), bool), tile=tile, window=window)
+    concat = np.concatenate(
+        [row_idx[col_off[c]:col_off[c + 1]] for c in front] or
+        [np.zeros(0, np.int32)])
+    np.testing.assert_array_equal(np.asarray(v)[:total], concat)
+    assert (np.asarray(v)[total:] == 0).all()       # masked lanes
 
 
 @pytest.mark.parametrize("tile", [64, 128, 512])
@@ -97,7 +109,8 @@ def test_visited_filter_semantics():
 
 
 def test_expand_fn_matches_inline(rng):
-    """The kernel-backed expand_fn must reproduce the inline jnp path."""
+    """The fused kernel-backed expand_fn must reproduce the inline jnp
+    path through `expand_frontier` (the engines' integration point)."""
     from repro.core.frontier import expand_frontier
     from repro.core.types import Grid2D
     from repro.graphgen import rmat_edges
@@ -119,7 +132,8 @@ def test_expand_fn_matches_inline(rng):
                         jnp.int32(1), **kw)
     b = expand_frontier(co, ri, visited, level, pred, front, jnp.int32(1),
                         jnp.int32(1), expand_fn=make_expand_fn(
-                            tile=128, window=64), **kw)
+                            path="pallas-interpret", tile=128, window=64),
+                        **kw)
     np.testing.assert_array_equal(np.asarray(a.visited), np.asarray(b.visited))
     np.testing.assert_array_equal(np.asarray(a.level), np.asarray(b.level))
     np.testing.assert_array_equal(np.asarray(a.dst_cnt), np.asarray(b.dst_cnt))

@@ -1,7 +1,6 @@
 """Roofline extractor tests: collective parsing + loop-aware costing."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.roofline import (analyze_hlo, cost_analysis_dict,
                                    parse_collective_bytes, _shape_bytes,

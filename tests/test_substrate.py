@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import (adamw_init, adamw_update, AdamWConfig,
                          topk_compress_init, topk_compress, int8_compress,
