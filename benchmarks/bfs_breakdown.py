@@ -1,20 +1,69 @@
-"""Fig. 5/6 analog: compute vs transfer split + four-phase breakdown of one
-representative BFS level (expand exchange, frontier expansion, fold
-exchange, frontier update) on 2x2 and 2x4 grids."""
-from benchmarks.common import emit, run_worker
+"""Fig. 5/6 analog: per-LEVEL four-phase breakdown of a real BFS (expand
+exchange, frontier expansion, fold exchange, frontier update) plus the fold
+wire-byte accounting per codec, before/after the single-message fold
+overhaul (DESIGN.md sec. 10).
+
+Emits two CSVs:
+  fig5_6_breakdown  scale,R,C,level,frontier,expand_s,scan_s,fold_s,
+                    update_s,transfer_frac     (one row per level)
+  fold_wire         scale,R,C,codec,level,folded,msgs_before,msgs_after,
+                    set_bytes_before,set_bytes_after,value_bytes_dense,
+                    value_bytes_sent,edges     (one row per codec x level)
+
+`*_before` / `*_dense` price the PR-4 layout (payload + separate count
+collective, dense (C, S) int32 value channel); `*_after` / `*_sent` the
+fused single message (header-word counts, front-packed count-proportional
+value channel) using each level's measured fold counts.
+"""
+from benchmarks.common import bench_scale, emit, run_worker, smoke_mode
+
+# collectives per fold exchange in the PR-4 layout (the fused path is
+# always ONE); value-folds shipped a third dense-channel collective
+MSGS_BEFORE = {"list": 2, "bitmap": 1, "delta": 2}
+MSGS_VALUE_BEFORE = {"list": 3, "bitmap": 2, "delta": 3}
 
 
 def main():
-    rows = [("scale", "R", "C", "expand_s", "scan_s", "fold_s", "update_s",
-             "compute_s", "transfer_s", "transfer_frac")]
-    for (r, c, scale) in [(2, 2, 14), (2, 4, 15)]:
+    grids = [(2, 2, bench_scale(10))] if smoke_mode() \
+        else [(2, 2, bench_scale(14)), (2, 4, bench_scale(15))]
+    phase_rows = [("scale", "R", "C", "level", "frontier", "expand_s",
+                   "scan_s", "fold_s", "update_s", "transfer_frac")]
+    wire_rows = [("scale", "R", "C", "codec", "level", "folded",
+                  "set_msgs_before", "value_msgs_before", "msgs_after",
+                  "set_bytes_before", "set_bytes_after", "value_bytes_dense",
+                  "value_bytes_sent", "edges")]
+    for (r, c, scale) in grids:
         out = run_worker("phases_worker.py", r, c, scale, 16).strip()
-        s, R, C, e, sc, f, u = out.split(",")
-        comp = float(sc) + float(u)
-        tr = float(e) + float(f)
-        rows.append((s, R, C, e, sc, f, u, f"{comp:.5f}", f"{tr:.5f}",
-                     f"{tr / (comp + tr):.3f}"))
-    emit(rows, "fig5_6_breakdown")
+        levels, wires, edges = [], [], None
+        for line in out.splitlines():
+            parts = line.strip().split(",")
+            if parts[0] == "P":
+                levels.append(parts[1:])
+            elif parts[0] == "B":
+                wires.append(parts[1:])
+            elif parts[0] == "M":
+                edges = int(parts[2])
+        if not levels or edges is None:
+            raise AssertionError(
+                f"phases_worker {r}x{c} produced no parseable rows")
+        for s, R, C, lvl, frontier, e, sc, f, u in levels:
+            comp = float(sc) + float(u)
+            tr = float(e) + float(f)
+            phase_rows.append(
+                (s, R, C, lvl, frontier, e, sc, f, u,
+                 f"{tr / (comp + tr):.3f}"))
+        for codec, lvl, folded, sb, sa, vb, va in wires:
+            wire_rows.append(
+                (scale, r, c, codec, lvl, folded, MSGS_BEFORE[codec],
+                 MSGS_VALUE_BEFORE[codec], 1, sb, sa, vb, va, edges))
+    emit(phase_rows, "fig5_6_breakdown")
+    emit(wire_rows, "fold_wire")
+    # the fused value channel must undercut the dense baseline (the BENCH
+    # gate re-checks this on the aggregated JSON)
+    for row in wire_rows[1:]:
+        if int(row[12]) > int(row[11]):
+            raise AssertionError(f"fused value-fold bytes above dense "
+                                 f"baseline: {row}")
 
 
 if __name__ == "__main__":

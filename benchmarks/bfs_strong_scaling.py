@@ -1,15 +1,22 @@
 """Fig. 4 analog: strong scaling on a fixed graph (reduced: scale 15, the
-paper uses 25), devices 1..8."""
-from benchmarks.common import BFS_WORKER_HEADER, emit, run_worker
+paper uses 25), devices 1..8.  In smoke mode (CI) a minimal 1x1-vs-2x2
+sweep at the forced scale keeps `teps.strong_scaling` populated in
+BENCH_bfs without the full grid ladder."""
+from benchmarks.common import (BFS_WORKER_HEADER, bench_scale, emit,
+                               run_worker, smoke_mode)
 
 GRIDS = [(1, 1), (1, 2), (2, 2), (2, 4)]
 SCALE, EF, ROOTS = 15, 16, 4
 
 
 def main():
+    smoke = smoke_mode()
+    grids = [(1, 1), (2, 2)] if smoke else GRIDS
+    scale = bench_scale(SCALE)
+    roots = 2 if smoke else ROOTS
     rows = [BFS_WORKER_HEADER]
-    for r, c in GRIDS:
-        out = run_worker("bfs_worker.py", "2d", r, c, SCALE, EF, ROOTS)
+    for r, c in grids:
+        out = run_worker("bfs_worker.py", "2d", r, c, scale, EF, roots)
         rows.append(tuple(out.strip().split(",")))
     emit(rows, "fig4_strong_scaling")
 

@@ -5,8 +5,9 @@ trajectory (TEPS, bytes-per-edge per fold codec, per-phase times, per-level
 expand times per expand path) is trackable across PRs.
 
   fig3   weak scaling (TEPS vs devices, scale/device fixed)
-  fig4   strong scaling (fixed graph)
-  fig5/6 compute-vs-transfer + four-phase breakdown
+  fig4   strong scaling (fixed graph; minimal 1x1-vs-2x2 sweep in smoke)
+  fig5/6 per-level four-phase breakdown + fold wire bytes before/after the
+         single-message overhaul per codec (DESIGN.md sec. 10)
   fig7   1D baseline (degenerate 1xP grid of the shared engine) vs 2D
   fold   list/bitmap/delta fold codec head-to-head (+ equality check)
   fig8/t2 atomic-style vs sort/compact expansion
@@ -17,10 +18,12 @@ expand times per expand path) is trackable across PRs.
 CLI:
   --scale N   force every honoring suite to graph scale N (REPRO_BENCH_SCALE)
   --smoke     reduced CI suite list (fold codecs on 2x2 simulated devices,
-              algos sweep, expand paths, kernel parity) with fewer
+              strong-scaling mini sweep, per-level breakdown + fold wire
+              bytes, algos sweep, expand paths, kernel parity) with fewer
               roots/iters; the bit-exactness and schema gates still run in
-              full and a violation exits non-zero (the regression gate is on
-              correctness counters, never on wall-clock)
+              full and a violation exits non-zero (the regression gates are
+              on correctness counters and wire-byte accounting, never on
+              wall-clock)
 """
 import argparse
 import json
@@ -79,12 +82,41 @@ def write_bench_json() -> None:
             "lvl_sum": r.get("lvl_sum"), "pred_sum": r.get("pred_sum"),
             "scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}'}
 
+    # per-LEVEL expand/scan/fold/update wall times of a real search (v5:
+    # the long-empty phases field, fed by benchmarks/bfs_breakdown.py)
     phases = [
         {"scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}',
+         "level": _f(r.get("level")), "frontier": _f(r.get("frontier")),
          "expand_s": _f(r.get("expand_s")), "scan_s": _f(r.get("scan_s")),
          "fold_s": _f(r.get("fold_s")), "update_s": _f(r.get("update_s")),
          "transfer_frac": _f(r.get("transfer_frac"))}
         for r in read_csv("fig5_6_breakdown")]
+
+    # fold wire-byte accounting per codec, summed over the measured levels:
+    # PR-4 layout (separate count collective + dense value channel) vs the
+    # fused single message (header word + count-proportional value prefix)
+    fold_wire = {}
+    for r in read_csv("fold_wire"):
+        key = (r["codec"], f'{r.get("R")}x{r.get("C")}')
+        agg = fold_wire.setdefault(key, {
+            "codec": r["codec"], "grid": key[1], "scale": _f(r.get("scale")),
+            "levels": 0, "folded": 0,
+            "set_msgs_before": int(r["set_msgs_before"]),
+            "value_msgs_before": int(r["value_msgs_before"]),
+            "msgs_after": int(r["msgs_after"]),
+            "set_bytes_before": 0, "set_bytes_after": 0,
+            "value_bytes_dense": 0, "value_bytes_sent": 0,
+            "edges": int(r["edges"])})
+        agg["levels"] += 1
+        agg["folded"] += int(r["folded"])
+        for k in ("set_bytes_before", "set_bytes_after", "value_bytes_dense",
+                  "value_bytes_sent"):
+            agg[k] += int(r[k])
+    for agg in fold_wire.values():
+        e = max(agg["edges"], 1)
+        agg["value_bytes_per_edge_dense"] = agg["value_bytes_dense"] / e
+        agg["value_bytes_per_edge_sent"] = agg["value_bytes_sent"] / e
+    fold_wire = [fold_wire[k] for k in sorted(fold_wire)]
 
     # the expand-path dimension (v4): per-level expand wall times for the
     # reference scan vs the fused Pallas(-interpret) kernel, same search
@@ -97,9 +129,10 @@ def write_bench_json() -> None:
             "expand_s": _f(r.get("expand_s"))})
 
     out = {
-        "schema": "BENCH_bfs/v4",   # v4: + expand_paths / expand_paths_agree
-                                    # (per-level expand times, reference vs
-                                    # pallas(-interpret), bit-exactness gate)
+        "schema": "BENCH_bfs/v5",   # v5: phases now per-LEVEL (and filled),
+                                    # + fold_wire (single-message fold bytes
+                                    # before/after per codec, value channel
+                                    # dense vs count-proportional)
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),
@@ -112,6 +145,7 @@ def write_bench_json() -> None:
                               for v in codecs.values()}) == 1
                          if codecs else None),
         "phases": phases,
+        "fold_wire": fold_wire,
         "expand_paths": expand_paths,
         "expand_paths_agree": (len({r.get("lvl_sum") for r in exp_rows}) == 1
                                if exp_rows else None),
@@ -145,11 +179,11 @@ def validate_bench(smoke: bool) -> list:
     if bfs is None:
         errors.append("BENCH_bfs.json missing")
     else:
-        if bfs.get("schema") != "BENCH_bfs/v4":
+        if bfs.get("schema") != "BENCH_bfs/v5":
             errors.append(f"BENCH_bfs schema {bfs.get('schema')!r} != "
-                          f"'BENCH_bfs/v4'")
+                          f"'BENCH_bfs/v5'")
         for key in ("teps", "fold_codecs", "codecs_agree", "phases",
-                    "expand_paths", "expand_paths_agree"):
+                    "fold_wire", "expand_paths", "expand_paths_agree"):
             if key not in bfs:
                 errors.append(f"BENCH_bfs missing key {key!r}")
         if bfs.get("codecs_agree") is False:
@@ -158,9 +192,32 @@ def validate_bench(smoke: bool) -> list:
         if bfs.get("expand_paths_agree") is False:
             errors.append("expand paths disagree on levels "
                           "(expand_paths_agree = false)")
+        # the compressed value channel must never exceed the PR-4
+        # dense-channel baseline, and must STRICTLY undercut it for bitmap
+        # (the codec the dense channel defeated hardest) whenever the
+        # fold-wire suite ran
+        for agg in bfs.get("fold_wire") or []:
+            sent = agg.get("value_bytes_sent", 0)
+            dense = agg.get("value_bytes_dense", 0)
+            strict = agg.get("codec") == "bitmap"
+            if (sent >= dense) if strict else (sent > dense):
+                errors.append(
+                    f"{agg.get('codec')} value-fold bytes not "
+                    f"{'below' if strict else 'within'} the dense-channel "
+                    f"baseline: sent={sent} vs dense={dense} "
+                    f"(grid {agg.get('grid')})")
         if smoke:
             if not bfs.get("fold_codecs"):
                 errors.append("smoke: fold_codecs section empty")
+            if not bfs.get("phases"):
+                errors.append("smoke: phases section empty")
+            if not bfs.get("fold_wire"):
+                errors.append("smoke: fold_wire section empty")
+            if not any(c.get("codec") == "bitmap"
+                       for c in bfs.get("fold_wire") or []):
+                errors.append("smoke: fold_wire has no bitmap entry")
+            if not (bfs.get("teps") or {}).get("strong_scaling"):
+                errors.append("smoke: teps.strong_scaling empty")
             ep = bfs.get("expand_paths") or {}
             for path in ("reference", "pallas-interpret"):
                 if not ep.get(path):
@@ -198,13 +255,14 @@ def main(argv=None) -> None:
                             bfs_breakdown, bfs_1d_vs_2d, bfs_fold_codecs,
                             bfs_expand_paths, bfs_expansion_variants,
                             bfs_realworld, algos_sweep, kernel_bench)
-    # (suite label, entry point, CSV name the suite emits)
+    # (suite label, entry point, CSV name(s) the suite emits)
     suites = [
         ("algos_sweep", algos_sweep.main, "algos_sweep"),
         ("fig3_weak_scaling", bfs_weak_scaling.main, "fig3_weak_scaling"),
         ("fig4_strong_scaling", bfs_strong_scaling.main,
          "fig4_strong_scaling"),
-        ("fig5_6_breakdown", bfs_breakdown.main, "fig5_6_breakdown"),
+        ("fig5_6_breakdown", bfs_breakdown.main,
+         ("fig5_6_breakdown", "fold_wire")),
         ("fig7_1d_vs_2d", bfs_1d_vs_2d.main, "fig7_1d_vs_2d"),
         ("fold_codecs", bfs_fold_codecs.main, "fold_codecs"),
         ("expand_paths", bfs_expand_paths.main, "expand_paths"),
@@ -214,16 +272,20 @@ def main(argv=None) -> None:
         ("kernel_bench", kernel_bench.main, "kernel_bench"),
     ]
     if args.smoke:
-        keep = {"algos_sweep", "fold_codecs", "expand_paths", "kernel_bench"}
+        keep = {"algos_sweep", "fig4_strong_scaling", "fig5_6_breakdown",
+                "fold_codecs", "expand_paths", "kernel_bench"}
         suites = [s for s in suites if s[0] in keep]
     failures = 0
-    for name, fn, csv_name in suites:
+    for name, fn, csv_names in suites:
         print(f"\n=== {name} ===")
-        # drop the previous run's CSV first: a failing suite must leave a
+        # drop the previous run's CSVs first: a failing suite must leave a
         # GAP in BENCH_bfs.json, not silently contribute stale numbers
-        stale = os.path.join(common.OUT_DIR, f"{csv_name}.csv")
-        if os.path.exists(stale):
-            os.remove(stale)
+        if isinstance(csv_names, str):
+            csv_names = (csv_names,)
+        for csv_name in csv_names:
+            stale = os.path.join(common.OUT_DIR, f"{csv_name}.csv")
+            if os.path.exists(stale):
+                os.remove(stale)
         t0 = time.time()
         try:
             fn()

@@ -1,114 +1,199 @@
-"""Worker: per-phase timing breakdown of the 2D BFS (paper Fig. 5/6).
+"""Worker: per-LEVEL phase timing breakdown of the 2D BFS (paper Fig. 5/6)
+plus fold wire-byte accounting per codec.
 
-Runs the four phases (expand exchange, frontier expansion, fold exchange,
-frontier update) as separately-jitted stages on a host-driven level loop so
-each can be wall-clocked.  CSV: scale,R,C,expand_s,scan_s,fold_s,update_s.
+Runs a real BFS through the session API to obtain the level structure, then
+re-drives every level's four phases (expand exchange, frontier expansion,
+fold exchange, frontier update) as separately-jitted stages on the REAL
+per-level frontier/visited state, wall-clocking each.  The fold stage and
+the expand exchange go through the same `repro.dist` exchange/codec code the
+engines use, so the timings track the fused single-message fold path
+(DESIGN.md sec. 10).
 
-Usage: phases_worker.py R C SCALE EF
+For each codec and level it also reports the fold-exchange byte accounting
+before/after the single-message overhaul: the PR-4 layout (separate count
+collective, dense (C, S) int32 value channel) vs the fused message
+(header-word counts, front-packed count-proportional value channel), using
+the level's ACTUAL fold counts for the sent-bytes figure.
+
+Output lines (parsed by benchmarks/bfs_breakdown.py):
+  P,scale,R,C,level,frontier,expand_s,scan_s,fold_s,update_s
+  B,codec,level,folded,set_before,set_after,val_before,val_after
+  M,edges,<component edges>,n_levels,<levels>
+
+Usage: phases_worker.py R C SCALE EF [MAX_LEVELS]
 """
 import os
 import sys
 import time
 
 R, C, SCALE, EF = (int(a) for a in sys.argv[1:5])
+MAX_LEVELS = int(sys.argv[5]) if len(sys.argv) > 5 else 8
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R * C}"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.dist import compat
-from repro.graphgen import rmat_edges
-from repro.core import Grid2D, partition_2d
+from repro.api import BFSConfig, DistGraph
 from repro.core import frontier as F
+from repro.core.validate import count_component_edges
+from repro.dist import exchange as X
+from repro.dist.compat import make_mesh
+from repro.graphgen import rmat_edges
 
 n = 1 << SCALE
-edges = rmat_edges(jax.random.key(42), SCALE, EF)
-mesh = compat.make_mesh((R, C), ("r", "c"))
-grid = Grid2D.for_vertices(n, R, C)
-lg = partition_2d(np.asarray(edges), grid)
-S = grid.S
+edges_np = np.asarray(rmat_edges(jax.random.key(42), SCALE, EF))
+mesh = make_mesh((R, C), ("r", "c"))
+config = BFSConfig(grid=(R, C), edge_chunk=16384)
+graph = DistGraph.from_edges(edges_np, config, mesh=mesh, n=n)
+grid, topo = graph.grid, graph.topology
+S, nrl = grid.S, grid.n_rows_local
+dev = topo.dev_spec
 
-dev = P(("r",), ("c",))
+# the real level structure: one session BFS from the first non-isolated root
+deg = np.bincount(edges_np[0], minlength=n)
+root = int(np.flatnonzero(deg > 0)[0])
+out = graph.session().bfs(root)
+level_g = np.asarray(out.level)[: grid.n]       # padded global level array
+n_levels = int(out.n_levels)
+comp_edges = count_component_edges(edges_np, level_g[:n])
+
+# ---------------------------------------------------------------------------
+# host-side reconstruction of per-device state entering each level
+# ---------------------------------------------------------------------------
+v_all = np.arange(grid.n, dtype=np.int64)
+blk = v_all // S                      # vertex block b = j*R + i
+own_i, own_j, t_in = blk % R, blk // R, v_all % S
 
 
-def sm(f, in_specs, out_specs):
-    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                    out_specs=out_specs, check_vma=False))
+def device_state(lvl: int):
+    """(R, C, ...) frontier/visited/level arrays entering level `lvl`."""
+    front = np.full((R, C, S), -1, np.int32)
+    cnt = np.zeros((R, C), np.int32)
+    in_front = level_g == lvl - 1
+    for i in range(R):
+        for j in range(C):
+            mine = in_front & (own_i == i) & (own_j == j)
+            cols = np.sort(i * S + t_in[mine]).astype(np.int32)
+            front[i, j, : len(cols)] = cols
+            cnt[i, j] = len(cols)
+    visited = np.zeros((R, C, nrl), bool)
+    lvl_arr = np.full((R, C, nrl), -1, np.int32)
+    seen = (level_g >= 0) & (level_g <= lvl - 1)
+    for i in range(R):
+        # local row m*S + t on grid-row i holds vertex (m*R + i)*S + t
+        rows_i = np.where(blk % R == i)[0]
+        lr = (blk[rows_i] // R) * S + t_in[rows_i]
+        visited[i, :, lr] = seen[rows_i, None]
+        lvl_arr[i, :, lr] = np.where(seen[rows_i], level_g[rows_i], -1)[:, None]
+    return (jnp.asarray(front), jnp.asarray(cnt), jnp.asarray(visited),
+            jnp.asarray(lvl_arr))
 
 
-# phase 1: expand exchange (all_gather along rows)
-expand = sm(lambda fr, cnt: F.compact_blocks(
-    jax.lax.all_gather(fr[0, 0], "r").reshape(R, S),
-    jax.lax.all_gather(cnt[0, 0], "r").reshape(R))[0][None, None],
-    (dev, dev), dev)
+# ---------------------------------------------------------------------------
+# the four phases as separately-jitted shard_map stages
+# ---------------------------------------------------------------------------
+def sm(f, n_in, n_out):
+    return jax.jit(topo.shard_map(f, in_specs=(dev,) * n_in,
+                                  out_specs=(dev,) * n_out if n_out > 1
+                                  else dev))
 
-# phase 2: frontier expansion (local scan)
-def scan_fn(co, ri, vis, lvl_a, pr, af, tot):
-    i = jax.lax.axis_index("r").astype(jnp.int32)
-    j = jax.lax.axis_index("c").astype(jnp.int32)
-    ex = F.expand_frontier(co[0, 0], ri[0, 0], vis[0, 0], lvl_a[0, 0],
-                           pr[0, 0], af[0, 0], tot[0, 0], jnp.int32(1),
-                           grid=grid, i=i, j=j, edge_chunk=16384)
+
+expand = sm(lambda fr, cnt: X.expand_exchange(
+    fr[0, 0], cnt[0, 0], topo=topo)[0][None, None], 2, 1)
+
+
+def scan_fn(co, ri, vis, la, pr, af, tot, lvl):
+    i, j = topo.device_coords()
+    ex = F.expand_frontier(co[0, 0], ri[0, 0], vis[0, 0], la[0, 0], pr[0, 0],
+                           af[0, 0], tot[0, 0], lvl[0, 0], grid=grid, i=i,
+                           j=j, edge_chunk=16384)
     return (ex.visited[None, None], ex.dst[None, None],
             ex.dst_cnt[None, None])
 
 
-scan = sm(scan_fn, (dev,) * 7, (dev, dev, dev))
+scan = sm(scan_fn, 8, 3)
 
-# phase 3: fold exchange (all_to_all along cols)
-fold = sm(lambda d, c: (
-    jax.lax.all_to_all(d[0, 0], "c", 0, 0)[None, None],
-    jax.lax.all_to_all(c[0, 0], "c", 0, 0)[None, None]),
-    (dev, dev), (dev, dev))
+CODECS = ("list", "bitmap", "delta")
+folds = {}
+for name in CODECS:
+    codec = X.get_fold_codec(name, grid)
 
-# phase 4: frontier update
-def upd_fn(iv, ic, vis, lvl_a, pr):
-    i = jax.lax.axis_index("r").astype(jnp.int32)
-    j = jax.lax.axis_index("c").astype(jnp.int32)
-    up = F.update_frontier(iv[0, 0], ic[0, 0], vis[0, 0], lvl_a[0, 0],
-                           pr[0, 0], jnp.int32(1), grid=grid, i=i, j=j)
+    def fold_fn(d, c, codec=codec):
+        _, j = topo.device_coords()
+        iv, ic = codec.fold(d[0, 0], c[0, 0], topo=topo, j=j)
+        return iv[None, None], ic[None, None]
+
+    folds[name] = sm(fold_fn, 2, 2)
+
+
+def upd_fn(iv, ic, vis, la, pr, lvl):
+    i, j = topo.device_coords()
+    up = F.update_frontier(iv[0, 0], ic[0, 0], vis[0, 0], la[0, 0], pr[0, 0],
+                           lvl[0, 0], grid=grid, i=i, j=j)
     return up.new_front[None, None], up.new_cnt[None, None]
 
 
-update = sm(upd_fn, (dev,) * 5, (dev, dev))
-
-# drive a realistic mid-search level: frontier = a random 10% of each block
-rng = np.random.default_rng(0)
-front = np.full((R, C, S), -1, np.int32)
-cnt = np.full((R, C), S // 10, np.int32)
-for i in range(R):
-    for j in range(C):
-        front[i, j, :S // 10] = rng.choice(grid.n_cols_local, S // 10,
-                                           replace=False)
-vis = np.zeros((R, C, grid.n_rows_local), bool)
-lvl_a = np.full((R, C, grid.n_rows_local), -1, np.int32)
-pr = np.full((R, C, grid.n_rows_local), -1, np.int32)
+update = sm(upd_fn, 6, 2)
 
 
-def t(fn, *args):
-    o = fn(*args)
-    jax.block_until_ready(o)
+def t(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
-    for _ in range(3):
-        o = fn(*args)
-        jax.block_until_ready(o)
-    return (time.perf_counter() - t0) / 3
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
 
 
-af = expand(jnp.asarray(front), jnp.asarray(cnt))
-tot = jnp.full((R, C), int((af[0, 0] >= 0).sum()), jnp.int32)
-t_expand = t(expand, jnp.asarray(front), jnp.asarray(cnt))
-vis_j, dst, dcnt = scan(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
-                        jnp.asarray(vis), jnp.asarray(lvl_a), jnp.asarray(pr),
-                        af, tot)
-t_scan = t(scan, jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
-           jnp.asarray(vis), jnp.asarray(lvl_a), jnp.asarray(pr), af, tot)
-iv, ic = fold(dst, dcnt)
-t_fold = t(fold, dst, dcnt)
-t_update = t(update, iv, ic, vis_j, jnp.asarray(lvl_a), jnp.asarray(pr))
+# ---------------------------------------------------------------------------
+# fold wire-byte accounting: PR-4 layout vs the fused single message
+# ---------------------------------------------------------------------------
 
-print(f"{SCALE},{R},{C},{t_expand:.5f},{t_scan:.5f},{t_fold:.5f},"
-      f"{t_update:.5f}")
+
+def fold_bytes(codec, dev_counts):
+    """(set_before, set_after, val_before, val_after) bytes, ALL devices.
+
+    The PR-4 "before" layout shipped the same payload+count bytes split
+    across separate collectives (so set_before == set_after; the win there
+    is message COUNT, tracked by bfs_breakdown's msgs columns) plus a dense
+    (C, S) int32 value channel (`wire_bytes_values`, the static capacity);
+    "after" is the fused single message with the count-proportional value
+    prefix (`wire_bytes_values_sent` over each device's actual counts)."""
+    set_bytes = codec.wire_bytes(grid) * grid.P
+    val_before = codec.wire_bytes_values(grid) * grid.P
+    val_after = sum(codec.wire_bytes_values_sent(grid, int(c))
+                    for c in dev_counts)
+    return set_bytes, set_bytes, val_before, val_after
+
+
+# ---------------------------------------------------------------------------
+# drive the levels
+# ---------------------------------------------------------------------------
+csc = graph.csc
+pred0 = jnp.full((R, C, nrl), -1, jnp.int32)
+for lvl in range(1, min(n_levels, MAX_LEVELS) + 1):
+    front, cnt, vis, la = device_state(lvl)
+    frontier = int((level_g == lvl - 1).sum())
+    if frontier == 0:
+        break
+    lvl_in = jnp.full((R, C), lvl, jnp.int32)
+    af = expand(front, cnt)
+    tot = jnp.asarray((np.asarray(af) >= 0).sum(axis=2).astype(np.int32))
+    t_expand = t(expand, front, cnt)
+    vis2, dst, dcnt = scan(csc.col_off, csc.row_idx, vis, la, pred0, af, tot,
+                           lvl_in)
+    t_scan = t(scan, csc.col_off, csc.row_idx, vis, la, pred0, af, tot,
+               lvl_in)
+    t_fold = t(folds["list"], dst, dcnt)
+    iv, ic = folds["list"](dst, dcnt)
+    t_update = t(update, iv, ic, vis2, la, pred0, lvl_in)
+    print(f"P,{SCALE},{R},{C},{lvl},{frontier},{t_expand:.5f},{t_scan:.5f},"
+          f"{t_fold:.5f},{t_update:.5f}")
+    dev_counts = np.asarray(dcnt).sum(axis=2).reshape(-1)   # per device
+    folded = int(dev_counts.sum())
+    for name in CODECS:
+        sb, sa, vb, va = fold_bytes(X.get_fold_codec(name, grid), dev_counts)
+        print(f"B,{name},{lvl},{folded},{sb},{sa},{vb},{va}")
+
+print(f"M,edges,{comp_edges},n_levels,{n_levels}")

@@ -71,7 +71,7 @@ def topdown_step(engine, graph: LocalGraph2D, st: BFSState, *, i, j):
 
     # expand exchange: gather frontiers within the processor-column
     all_front, front_total = X.expand_exchange(
-        st.front, st.front_cnt, topo=topo)
+        st.front, st.front_cnt, topo=topo, ops=engine.fold_ops)
 
     # frontier expansion (local CSC column scan)
     ex = F.expand_frontier(

@@ -72,24 +72,40 @@ class FrontierEngine:
     expand_fn:  explicit chunk-expansion override for the CSC scan; when
                 given it wins over `expand` (and value-carrying scans fall
                 back to the reference path).
+    fold:       fold-pipeline implementation: "reference" | "pallas" |
+                "pallas-interpret" | "auto" (DESIGN.md sec. 10).  Selects
+                the codec encode/decode kernels and the prefix-sum
+                compaction that replaces the per-level argsorts; "auto"
+                honors REPRO_FOLD and otherwise mirrors the expand rules.
+                All paths are bit-identical.
     dedup:      winner-selection method for set-valued folds.
     """
 
     def __init__(self, topo, program, *, fold_codec=None,
                  edge_chunk: int = 8192, max_levels: int = 64,
-                 expand: str = "auto", expand_fn=None,
+                 expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter"):
         from repro.dist.exchange import get_fold_codec
-        from repro.kernels.select import resolve_expand_path
+        from repro.kernels.select import (resolve_expand_path,
+                                          resolve_fold_path)
 
         self.topo = topo
         self.grid = topo.grid
         self.program = program
-        spec = fold_codec if fold_codec is not None else program.codec_hint
-        self.codec = get_fold_codec(spec, topo.grid)
         self.edge_chunk = edge_chunk
         self.max_levels = max_levels
         self.expand = expand
+        self.fold = fold
+        self.fold_path = resolve_fold_path(fold)
+        self.fold_ops = None
+        if self.fold_path != "reference":
+            # same import discipline as the expand kernels: through the
+            # package surface, outside any trace (Pallas-less installs get
+            # the guided ImportError naming fold='reference')
+            from repro.kernels import make_fold_ops
+            self.fold_ops = make_fold_ops(path=self.fold_path)
+        spec = fold_codec if fold_codec is not None else program.codec_hint
+        self.codec = get_fold_codec(spec, topo.grid, ops=self.fold_ops)
         # value_expand_fn is the value-carrying twin threaded into
         # `repro.algos.program.scan_relax` (CC / SSSP / multi-source BFS)
         self.value_expand_fn = None

@@ -81,7 +81,8 @@ class MultiSourceBFSProgram(FrontierProgram):
         level = jnp.where(claimed, 0, -1).astype(jnp.int32)
         owned_src = jax.lax.dynamic_slice_in_dim(src, j * S, S)
         front, payload, cnt = PR.owned_to_front(owned_src < I32_MAX,
-                                                owned_src, i, S)
+                                                owned_src, i, S,
+                                                ops=engine.fold_ops)
         return MultiBFSState(visited=claimed, level=level, src=src,
                              front=front, payload=payload, front_cnt=cnt,
                              lvl=jnp.int32(1))
@@ -89,10 +90,12 @@ class MultiSourceBFSProgram(FrontierProgram):
     def make_step(self, engine, graph, extra, i, j):
         grid, topo = engine.grid, engine.topo
         S, nrl = grid.S, grid.n_rows_local
+        fold_ops = engine.fold_ops
 
         def step(st: MultiBFSState, prev_total):
             all_front, all_pay, ftot = X.expand_exchange_values(
-                st.front, st.front_cnt, st.payload, topo=topo, fill=I32_MAX)
+                st.front, st.front_cnt, st.payload, topo=topo, fill=I32_MAX,
+                ops=fold_ops)
             cand, scanned = PR.scan_relax(
                 graph.col_off, graph.row_idx, None, all_front, all_pay,
                 ftot, lambda p, w: p, n_rows=nrl, grid=grid,
@@ -101,7 +104,8 @@ class MultiSourceBFSProgram(FrontierProgram):
             # first fold per vertex per device (the BFS visited discipline)
             improved = (cand < I32_MAX) & ~st.visited
             vis1 = st.visited | improved
-            ids, cnt, vals = PR.pack_blocks(improved, cand, grid)
+            ids, cnt, vals = PR.pack_blocks(improved, cand, grid,
+                                            ops=fold_ops)
             ri, rc, rv = engine.codec.fold_values(ids, cnt, vals,
                                                   topo=topo, j=j)
             inc = PR.scatter_min_received(ri, rv, j, S)
@@ -121,7 +125,8 @@ class MultiSourceBFSProgram(FrontierProgram):
             vis_owned = jax.lax.dynamic_slice_in_dim(vis1, j * S, S)
             vis2 = jax.lax.dynamic_update_slice(vis1, vis_owned | changed,
                                                 (j * S,))
-            front, payload, nc = PR.owned_to_front(changed, new_src, i, S)
+            front, payload, nc = PR.owned_to_front(changed, new_src, i, S,
+                                                   ops=fold_ops)
             st2 = MultiBFSState(visited=vis2, level=lvl2, src=src2,
                                 front=front, payload=payload, front_cnt=nc,
                                 lvl=st.lvl + 1)

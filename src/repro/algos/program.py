@@ -172,7 +172,7 @@ def scan_relax(col_off, row_idx, edge_vals, all_front, all_payload,
     return cand, total.astype(jnp.uint32)
 
 
-def pack_blocks(improved, vals, grid: Grid2D, fill_val=I32_MAX):
+def pack_blocks(improved, vals, grid: Grid2D, fill_val=I32_MAX, ops=None):
     """Dense (n_rows_local,) improvements -> canonical fold buckets.
 
     Local row m*S + t of block m maps to bucket row m, so the dense array IS
@@ -180,17 +180,26 @@ def pack_blocks(improved, vals, grid: Grid2D, fill_val=I32_MAX):
     front-packed ascending (the canonical form `FoldCodec.fold_values`
     requires).  Returns (ids (C, S) local-row ids pad -1, cnt (C,),
     vals (C, S) aligned, pad `fill_val`).
+
+    ops: optional fold-kernel bundle (`repro.kernels.fold`) whose prefix-sum
+    compaction replaces the per-level argsort; bit-identical either way.
     """
     C, S = grid.C, grid.S
     imp = improved.reshape(C, S)
     vv = vals.reshape(C, S)
     t = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (C, S))
+    m = jnp.arange(C, dtype=jnp.int32)[:, None]
+    if ops is not None:
+        # pads are -1 (not I32_MAX as on the reference path), so m*S + ts
+        # cannot overflow and a single mask suffices
+        (ts, vs), cnt = ops.compact_rows(imp, (t, vv), (-1, fill_val))
+        ids = jnp.where(ts >= 0, m * S + ts, -1)
+        return ids, cnt, vs
     key = jnp.where(imp, t, I32_MAX)
     order = jnp.argsort(key, axis=1)
     ts = jnp.take_along_axis(key, order, axis=1)
     vs = jnp.take_along_axis(vv, order, axis=1)
     ok = ts < I32_MAX
-    m = jnp.arange(C, dtype=jnp.int32)[:, None]
     ids = jnp.where(ok, m * S + jnp.where(ok, ts, 0), -1)
     vs = jnp.where(ok, vs, fill_val)
     return ids, imp.sum(axis=1, dtype=jnp.int32), vs
@@ -221,10 +230,12 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
 
     grid, topo = engine.grid, engine.topo
     S, nrl = grid.S, grid.n_rows_local
+    fold_ops = engine.fold_ops
 
     def step(st: ValueState, prev_total):
         all_front, all_pay, ftot = X.expand_exchange_values(
-            st.front, st.front_cnt, st.payload, topo=topo, fill=expand_fill)
+            st.front, st.front_cnt, st.payload, topo=topo, fill=expand_fill,
+            ops=fold_ops)
         cand, scanned = scan_relax(
             graph.col_off, graph.row_idx, edge_vals, all_front, all_pay,
             ftot, relax, n_rows=nrl, grid=grid,
@@ -233,7 +244,7 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
         # propose only strict improvements over what we already know
         improved = cand < st.val
         val1 = jnp.minimum(st.val, cand)
-        ids, cnt, vals = pack_blocks(improved, cand, grid)
+        ids, cnt, vals = pack_blocks(improved, cand, grid, ops=fold_ops)
         ri, rc, rv = engine.codec.fold_values(ids, cnt, vals, topo=topo, j=j)
         inc = scatter_min_received(ri, rv, j, S)
         # merge against the PRE-scan owned block: this device's own
@@ -243,7 +254,8 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
         new_owned = jnp.minimum(owned_prev, inc)
         changed = new_owned < owned_prev
         val2 = jax.lax.dynamic_update_slice(val1, new_owned, (j * S,))
-        front, payload, nc = owned_to_front(changed, new_owned, i, S)
+        front, payload, nc = owned_to_front(changed, new_owned, i, S,
+                                            ops=fold_ops)
         st2 = ValueState(val=val2, front=front, payload=payload,
                          front_cnt=nc, it=st.it + 1)
         return st2, topo.psum_all(nc), scanned
@@ -251,13 +263,22 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
     return step
 
 
-def owned_to_front(changed, vals, i, S: int, fill_val=I32_MAX):
+def owned_to_front(changed, vals, i, S: int, fill_val=I32_MAX, ops=None):
     """Changed owned rows -> next frontier, canonical ascending.
 
     Owned local row j*S + t converts to local col i*S + t (paper ROW2COL).
     Returns (front (S,) col ids pad -1, payload (S,) aligned, cnt).
+
+    ops: optional fold-kernel bundle replacing the argsort (bit-identical).
     """
     t = jnp.arange(S, dtype=jnp.int32)
+    if ops is not None:
+        (ts, vs), cnt = ops.compact_rows(changed[None, :],
+                                         (t[None, :], vals[None, :]),
+                                         (-1, fill_val))
+        ts, vs = ts[0], vs[0]
+        front = jnp.where(ts >= 0, i * S + ts, -1)      # pads are -1
+        return front, vs, cnt[0]
     key = jnp.where(changed, t, I32_MAX)
     order = jnp.argsort(key)
     ts = key[order]

@@ -56,6 +56,11 @@ class BFSConfig:
                  GPU/TPU, reference on CPU; the REPRO_EXPAND environment
                  variable overrides, so CI can force pallas-interpret).
                  Every path is bit-identical.
+    fold:        fold-pipeline implementation (DESIGN.md sec. 10): the
+                 codec encode/decode kernels and the prefix-sum compaction
+                 that replaces the per-level argsorts.  Same spellings and
+                 rules as `expand`, with REPRO_FOLD as the environment
+                 override.  Every path is bit-identical.
     """
     grid: Any = None
     fold_codec: Any = "list"
@@ -68,6 +73,7 @@ class BFSConfig:
     col_axes: tuple = ("c",)
     expand_fn: Any = None
     expand: str = "auto"
+    fold: str = "auto"
 
     def __post_init__(self):
         for f in ("row_axes", "col_axes"):
@@ -89,15 +95,24 @@ class BFSConfig:
         return resolve_expand_path(self.expand)
 
     @property
+    def fold_path(self) -> str:
+        """The concrete fold implementation this config selects NOW
+        ("auto" resolves against REPRO_FOLD and the default backend)."""
+        from repro.kernels.select import resolve_fold_path
+
+        return resolve_fold_path(self.fold)
+
+    @property
     def engine_key(self) -> tuple:
         """What makes two configs share one DistBFSEngine (and hence one
         AOT-compile cache line, together with graph shape and batch size).
 
-        Uses the RESOLVED expand path, so "auto" configs re-key correctly
-        if REPRO_EXPAND changes between engine builds in one process."""
+        Uses the RESOLVED expand and fold paths, so "auto" configs re-key
+        correctly if REPRO_EXPAND / REPRO_FOLD changes between engine
+        builds in one process."""
         return (self.codec_name, self.direction, self.edge_chunk, self.dedup,
                 self.max_levels, self.alpha, self.row_axes, self.col_axes,
-                self.expand_fn, self.expand_path)
+                self.expand_fn, self.expand_path, self.fold_path)
 
     def algo_engine_key(self, program_key: tuple, codec_name: str,
                         max_levels: int) -> tuple:
@@ -107,7 +122,7 @@ class BFSConfig:
         codec hint / iteration bound may override the BFS spellings)."""
         return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
                 max_levels, self.row_axes, self.col_axes, self.expand_fn,
-                self.expand_path)
+                self.expand_path, self.fold_path)
 
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""

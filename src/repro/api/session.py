@@ -43,7 +43,7 @@ def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
     return DistBFSEngine(
         topology, fold_codec=config.fold_codec, edge_chunk=config.edge_chunk,
         max_levels=config.max_levels, expand=config.expand,
-        expand_fn=config.expand_fn, dedup=config.dedup,
+        expand_fn=config.expand_fn, fold=config.fold, dedup=config.dedup,
         step_factory=step_factory, n_extra=n_extra)
 
 
@@ -240,7 +240,7 @@ class GraphSession:
                 self.graph.topology, program, fold_codec=codec,
                 edge_chunk=self.config.edge_chunk, max_levels=max_levels,
                 expand=self.config.expand, expand_fn=self.config.expand_fn,
-                dedup=self.config.dedup)
+                fold=self.config.fold, dedup=self.config.dedup)
             self.graph._engines[key] = eng
         return eng, key
 

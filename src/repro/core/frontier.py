@@ -32,16 +32,25 @@ def exclusive_cumsum(x):
     return jnp.concatenate([jnp.zeros((1,), jnp.int32), c])
 
 
-def compact_blocks(vals, cnts, fill=-1):
+def compact_blocks(vals, cnts, fill=-1, ops=None):
     """Concatenate R padded blocks (R, S) with per-block counts into one
-    padded (R*S,) array (valid entries first, order preserved)."""
+    padded (R*S,) array (valid entries first, order preserved).
+
+    ops: optional fold-kernel bundle (`repro.kernels.fold`) whose prefix-sum
+    compaction replaces the argsort; None = the reference path.  Both are
+    bit-identical (the output is fully determined by the mask)."""
     R, S = vals.shape
     mask = jnp.arange(S, dtype=jnp.int32)[None, :] < cnts[:, None]
+    total = jnp.sum(cnts, dtype=jnp.int32)
+    if ops is not None:
+        (out,), _ = ops.compact_rows(mask.reshape(1, -1),
+                                     (vals.reshape(1, -1),), (fill,))
+        return out[0], total
     flat_v = vals.reshape(-1)
     flat_m = mask.reshape(-1)
     order = jnp.argsort(~flat_m, stable=True)
     out = jnp.where(flat_m[order], flat_v[order], fill)
-    return out, jnp.sum(cnts, dtype=jnp.int32)
+    return out, total
 
 
 def winner_dedup(v, eligible, n_rows: int, method: str = "scatter"):

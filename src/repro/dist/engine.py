@@ -61,6 +61,9 @@ class DistBFSEngine(FrontierEngine):
                   fused Pallas pipeline vs the inline jnp scan,
                   bit-identical either way.
     expand_fn:    explicit chunk-expansion override (wins over `expand`).
+    fold:         fold-pipeline implementation (same spellings; DESIGN.md
+                  sec. 10) -- codec encode/decode kernels + the prefix-sum
+                  compaction, REPRO_FOLD override, bit-identical paths.
     dedup:        winner-selection method ("scatter" | "sort").
     step_factory: optional `(engine, graph, extra, i, j, topdown) -> step`
                   hook replacing the default top-down per-level step.
@@ -70,7 +73,7 @@ class DistBFSEngine(FrontierEngine):
 
     def __init__(self, topo: Topology, *, fold_codec="list",
                  edge_chunk: int = 8192, max_levels: int = 64,
-                 expand: str = "auto", expand_fn=None,
+                 expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter", step_factory=None, n_extra: int = 0):
         from repro.algos.bfs import BFSLevelsProgram
 
@@ -81,7 +84,7 @@ class DistBFSEngine(FrontierEngine):
                                    n_extra=n_extra),
             fold_codec=fold_codec, edge_chunk=edge_chunk,
             max_levels=max_levels, expand=expand, expand_fn=expand_fn,
-            dedup=dedup)
+            fold=fold, dedup=dedup)
 
     def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
         """One top-down level (paper Alg. 2 lines 12-18)."""

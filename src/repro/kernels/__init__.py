@@ -7,6 +7,11 @@ stages (DESIGN.md sec. 9):
                           neighbor gather, bitmap visited filter and output
                           compaction, with "pallas" / "pallas-interpret" /
                           "reference" implementations that are bit-identical;
+  fold                 -- the fused fold pipeline (DESIGN.md sec. 10): the
+                          prefix-sum compaction primitive (the per-level
+                          argsort replacement), bitmap pack/unpack and delta
+                          encode/decode kernels, bundled by `make_fold_ops`
+                          and selected via `BFSConfig(fold=...)`;
   binsearch_map        -- the thread->edge mapping stage as a standalone op
                           (monotonic windowed broadcast-compare);
   visited_filter       -- the bitmap test + first-occurrence dedup stage as
@@ -33,11 +38,22 @@ _EXPORTS = {
     "expand_chunk_values": "repro.kernels.expand",
     "make_expand_fn": "repro.kernels.expand",
     "make_value_expand_fn": "repro.kernels.expand",
+    # the fused fold pipeline (repro.kernels.fold, DESIGN.md sec. 10)
+    "compact_rows": "repro.kernels.fold",
+    "pack_bits": "repro.kernels.fold",
+    "unpack_bits": "repro.kernels.fold",
+    "delta_gaps": "repro.kernels.fold",
+    "delta_positions": "repro.kernels.fold",
+    "make_fold_ops": "repro.kernels.fold",
+    "PallasFoldOps": "repro.kernels.fold",
     # selection is Pallas-free (repro.kernels.select): engines resolve paths
     # on every construction, including on installs without Pallas
     "resolve_expand_path": "repro.kernels.select",
+    "resolve_fold_path": "repro.kernels.select",
     "EXPAND_PATHS": "repro.kernels.select",
     "EXPAND_ENV": "repro.kernels.select",
+    "FOLD_PATHS": "repro.kernels.select",
+    "FOLD_ENV": "repro.kernels.select",
     # stage ops
     "binsearch_map": "repro.kernels._binsearch_map",
     "map_workload_tile": "repro.kernels._binsearch_map",
@@ -58,8 +74,8 @@ def __getattr__(name: str):
     except ImportError as e:   # Pallas (or its deps) unavailable
         raise ImportError(
             f"repro.kernels.{name} needs jax.experimental.pallas, which "
-            f"failed to import; use BFSConfig(expand='reference') on this "
-            f"install ({e})") from e
+            f"failed to import; use BFSConfig(expand='reference') / "
+            f"BFSConfig(fold='reference') on this install ({e})") from e
     return getattr(mod, name)
 
 

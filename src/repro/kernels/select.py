@@ -1,11 +1,18 @@
-"""Expand-path selection (the `BFSConfig(expand=...)` rules; DESIGN.md
-sec. 9).
+"""Kernel-path selection (the `BFSConfig(expand=...)` / `BFSConfig(fold=...)`
+rules; DESIGN.md sec. 9 + 10).
 
-Deliberately Pallas-free: the engines call `resolve_expand_path` on EVERY
-construction -- including expand="reference" ones on installs without
-jax.experimental.pallas -- so the selection logic must import without it.
-The kernels themselves live in `repro.kernels.expand` and are only imported
-once a non-reference path is selected.
+Deliberately Pallas-free: the engines call `resolve_expand_path` and
+`resolve_fold_path` on EVERY construction -- including "reference" ones on
+installs without jax.experimental.pallas -- so the selection logic must
+import without it.  The kernels themselves live in `repro.kernels.expand` /
+`repro.kernels.fold` and are only imported once a non-reference path is
+selected.
+
+Both knobs share one spelling set ("reference" | "pallas" |
+"pallas-interpret" | "auto") and one resolution rule; they differ only in
+the environment override that CI matrix legs use to force a path
+process-wide (REPRO_EXPAND for the expand scan, REPRO_FOLD for the fold
+pipeline).
 """
 from __future__ import annotations
 
@@ -13,6 +20,31 @@ import os
 
 EXPAND_PATHS = ("reference", "pallas", "pallas-interpret")
 EXPAND_ENV = "REPRO_EXPAND"
+
+FOLD_PATHS = EXPAND_PATHS
+FOLD_ENV = "REPRO_FOLD"
+
+
+def _resolve(spec, *, env: str, knob: str, platform: str | None) -> str:
+    if spec is None:
+        spec = "auto"
+    if spec == "auto":
+        override = os.environ.get(env, "").strip().lower()
+        if override and override != "auto":
+            if override not in EXPAND_PATHS:
+                raise ValueError(
+                    f"{env}={override!r}: expected one of {EXPAND_PATHS} "
+                    f"or 'auto'")
+            return override
+        if platform is None:
+            import jax
+            platform = jax.default_backend()
+        return "pallas" if platform in ("gpu", "tpu", "cuda", "rocm") \
+            else "reference"
+    if spec not in EXPAND_PATHS:
+        raise ValueError(
+            f"{knob}={spec!r}: expected one of {EXPAND_PATHS + ('auto',)}")
+    return spec
 
 
 def resolve_expand_path(spec="auto", *, platform: str | None = None) -> str:
@@ -23,22 +55,9 @@ def resolve_expand_path(spec="auto", *, platform: str | None = None) -> str:
     (so CI matrix legs force the kernel path process-wide) and otherwise
     picks "pallas" on GPU/TPU backends, "reference" on CPU.
     """
-    if spec is None:
-        spec = "auto"
-    if spec == "auto":
-        env = os.environ.get(EXPAND_ENV, "").strip().lower()
-        if env and env != "auto":
-            if env not in EXPAND_PATHS:
-                raise ValueError(
-                    f"{EXPAND_ENV}={env!r}: expected one of {EXPAND_PATHS} "
-                    f"or 'auto'")
-            return env
-        if platform is None:
-            import jax
-            platform = jax.default_backend()
-        return "pallas" if platform in ("gpu", "tpu", "cuda", "rocm") \
-            else "reference"
-    if spec not in EXPAND_PATHS:
-        raise ValueError(
-            f"expand={spec!r}: expected one of {EXPAND_PATHS + ('auto',)}")
-    return spec
+    return _resolve(spec, env=EXPAND_ENV, knob="expand", platform=platform)
+
+
+def resolve_fold_path(spec="auto", *, platform: str | None = None) -> str:
+    """Concretise a fold-path spelling (same rules, REPRO_FOLD override)."""
+    return _resolve(spec, env=FOLD_ENV, knob="fold", platform=platform)
