@@ -1,13 +1,18 @@
 """Fig. 8 / Table 2 analog: 'atomic-style' scatter-based frontier expansion
 (Kepler path: deterministic scatter-min winner, our default) vs the
 'scatter/compact' pre-Kepler path (sort-based dedup supporting benign races,
-the paper's original).  Single device, one realistic level."""
+the paper's original).  Single device, one realistic level.
+
+Also hosts the direction sweep (`direction_sweep`, DESIGN.md sec. 11):
+top-down vs bottom-up vs adaptive whole searches plus the per-level
+bottom-up phase times and alpha/beta decisions, so the crossover the
+adaptive heuristic exploits is tracked across PRs."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import bench_scale, emit, run_worker, timeit
 
 
 def _setup(scale=16, ef=16, frontier_frac=0.05):
@@ -81,5 +86,50 @@ def main():
     emit(rows, "table2_fig8_expansion_variants")
 
 
+DIR_SCALE_DEFAULT, DIR_EF = 14, 16
+DIR_MODES = ("False", "adaptive", "bottomup")
+
+
+def direction_sweep():
+    """Direction-optimised traversal head-to-head on a 1x1 grid: per-mode
+    whole-search times (bit-equality gated on the lvl/pred checksums) and
+    the per-level bottom-up phase times + adaptive decisions.
+
+    Emits two CSVs:
+      direction_sweep   scale,R,C,mode,roots,mean_s,levels,lvl_sum,pred_sum,
+                        dirs           (one row per mode; dirs "0|1|...")
+      direction_levels  scale,level,frontier,dir,bottomup_s
+                        (one row per BFS level of the replayed search)
+    """
+    scale = bench_scale(DIR_SCALE_DEFAULT)
+    out = run_worker("direction_worker.py", scale, DIR_EF).strip()
+    mode_rows = [("scale", "R", "C", "mode", "roots", "mean_s", "levels",
+                  "lvl_sum", "pred_sum", "dirs")]
+    level_rows = [("scale", "level", "frontier", "dir", "bottomup_s")]
+    sums = {}
+    for line in out.splitlines():
+        parts = line.strip().split(",")
+        if parts[0] == "M" and len(parts) == 8:
+            mode_rows.append((scale, 1, 1, *parts[1:]))
+            sums[parts[1]] = (parts[5], parts[6])
+        elif parts[0] == "L" and len(parts) == 5:
+            level_rows.append((scale, *parts[1:]))
+    # emit BEFORE the gates: the rows are the diagnostic when one fires
+    emit(mode_rows, "direction_sweep")
+    emit(level_rows, "direction_levels")
+    missing = [m for m in DIR_MODES if m not in sums]
+    if missing:
+        raise AssertionError(f"direction_worker produced no rows for "
+                             f"{missing}")
+    if len(level_rows) < 2:
+        raise AssertionError("direction_worker produced no per-level rows")
+    if len(set(sums.values())) != 1:
+        raise AssertionError(
+            f"direction modes disagree on levels/preds: {sums}")
+    print(f"# direction modes agree: lvl_sum,pred_sum = "
+          f"{sums['False']}")
+
+
 if __name__ == "__main__":
     main()
+    direction_sweep()

@@ -13,6 +13,8 @@ expand times per expand path) is trackable across PRs.
   fig8/t2 atomic-style vs sort/compact expansion
   table3 real-world graph analogs
   expand reference vs fused-Pallas(-interpret) per-level expand times
+  direction top-down vs bottom-up vs adaptive sweep + per-level alpha/beta
+         decisions and bottom-up phase times (DESIGN.md sec. 11)
   kernels Pallas-kernel parity + oracle timings
 
 CLI:
@@ -128,11 +130,29 @@ def write_bench_json() -> None:
             "edges": _f(r.get("edges")),
             "expand_s": _f(r.get("expand_s"))})
 
+    # the direction dimension (v6): per-mode whole-search times with
+    # bit-equality checksums, the adaptive per-level decision trace, and the
+    # replayed bottom-up phase time per level (bfs_expansion_variants.
+    # direction_sweep; DESIGN.md sec. 11)
+    dir_rows = read_csv("direction_sweep")
+    direction = {}
+    for r in dir_rows:
+        direction[r["mode"]] = {
+            "scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}',
+            "mean_s": _f(r.get("mean_s")), "levels": _f(r.get("levels")),
+            "lvl_sum": r.get("lvl_sum"), "pred_sum": r.get("pred_sum"),
+            "dirs": [int(x) for x in r.get("dirs", "").split("|")
+                     if x not in ("", "-1")]}
+    direction_levels = [
+        {"level": _f(r.get("level")), "frontier": _f(r.get("frontier")),
+         "dir": _f(r.get("dir")), "bottomup_s": _f(r.get("bottomup_s"))}
+        for r in read_csv("direction_levels")]
+
     out = {
-        "schema": "BENCH_bfs/v5",   # v5: phases now per-LEVEL (and filled),
-                                    # + fold_wire (single-message fold bytes
-                                    # before/after per codec, value channel
-                                    # dense vs count-proportional)
+        "schema": "BENCH_bfs/v6",   # v6: + direction (per-mode search times
+                                    # with bit-equality checksums, adaptive
+                                    # per-level decisions, bottom-up phase
+                                    # times); v5: per-LEVEL phases+fold_wire
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),
@@ -149,6 +169,13 @@ def write_bench_json() -> None:
         "expand_paths": expand_paths,
         "expand_paths_agree": (len({r.get("lvl_sum") for r in exp_rows}) == 1
                                if exp_rows else None),
+        "direction": direction,
+        "direction_levels": direction_levels,
+        # null (not true) when the sweep did not run: an absent suite must
+        # not read as a passed bit-equality gate
+        "direction_agree": (
+            len({(v["lvl_sum"], v["pred_sum"]) for v in direction.values()})
+            == 1 if direction else None),
     }
     path = emit_json(out, "BENCH_bfs")
     print(f"\nwrote {path}")
@@ -179,11 +206,12 @@ def validate_bench(smoke: bool) -> list:
     if bfs is None:
         errors.append("BENCH_bfs.json missing")
     else:
-        if bfs.get("schema") != "BENCH_bfs/v5":
+        if bfs.get("schema") != "BENCH_bfs/v6":
             errors.append(f"BENCH_bfs schema {bfs.get('schema')!r} != "
-                          f"'BENCH_bfs/v5'")
+                          f"'BENCH_bfs/v6'")
         for key in ("teps", "fold_codecs", "codecs_agree", "phases",
-                    "fold_wire", "expand_paths", "expand_paths_agree"):
+                    "fold_wire", "expand_paths", "expand_paths_agree",
+                    "direction", "direction_levels", "direction_agree"):
             if key not in bfs:
                 errors.append(f"BENCH_bfs missing key {key!r}")
         if bfs.get("codecs_agree") is False:
@@ -192,6 +220,9 @@ def validate_bench(smoke: bool) -> list:
         if bfs.get("expand_paths_agree") is False:
             errors.append("expand paths disagree on levels "
                           "(expand_paths_agree = false)")
+        if bfs.get("direction_agree") is False:
+            errors.append("direction modes disagree on levels/preds "
+                          "(direction_agree = false)")
         # the compressed value channel must never exceed the PR-4
         # dense-channel baseline, and must STRICTLY undercut it for bitmap
         # (the codec the dense channel defeated hardest) whenever the
@@ -222,6 +253,18 @@ def validate_bench(smoke: bool) -> list:
             for path in ("reference", "pallas-interpret"):
                 if not ep.get(path):
                     errors.append(f"smoke: expand_paths[{path!r}] empty")
+            dr = bfs.get("direction") or {}
+            for mode in ("False", "adaptive", "bottomup"):
+                if mode not in dr:
+                    errors.append(f"smoke: direction[{mode!r}] missing")
+            if not bfs.get("direction_levels"):
+                errors.append("smoke: direction_levels section empty")
+            # the adaptive heuristic must actually flip at the smoke scale:
+            # at least one top-down AND one bottom-up level
+            ad = (dr.get("adaptive") or {}).get("dirs") or []
+            if not (0 in ad and 1 in ad):
+                errors.append(f"smoke: adaptive sweep exercised only one "
+                              f"direction (dirs={ad})")
 
     algos = load("BENCH_algos")
     if algos is None:
@@ -268,12 +311,15 @@ def main(argv=None) -> None:
         ("expand_paths", bfs_expand_paths.main, "expand_paths"),
         ("table2_fig8_expansion", bfs_expansion_variants.main,
          "table2_fig8_expansion_variants"),
+        ("direction_sweep", bfs_expansion_variants.direction_sweep,
+         ("direction_sweep", "direction_levels")),
         ("table3_realworld", bfs_realworld.main, "table3_realworld"),
         ("kernel_bench", kernel_bench.main, "kernel_bench"),
     ]
     if args.smoke:
         keep = {"algos_sweep", "fig4_strong_scaling", "fig5_6_breakdown",
-                "fold_codecs", "expand_paths", "kernel_bench"}
+                "fold_codecs", "expand_paths", "direction_sweep",
+                "kernel_bench"}
         suites = [s for s in suites if s[0] in keep]
     failures = 0
     for name, fn, csv_names in suites:

@@ -20,6 +20,7 @@ from repro.algos.program import (
     scatter_min_received, owned_to_front)
 from repro.algos.engine import FrontierEngine, wide_add, wide_total
 from repro.algos.bfs import BFSLevelsProgram
+from repro.algos.direction import DirectionProgram, DirState
 from repro.algos.cc import CCOutput, ConnectedComponentsProgram
 from repro.algos.sssp import SSSPOutput, SSSPProgram
 from repro.algos.multi_bfs import (
@@ -37,7 +38,8 @@ PROGRAMS = {
 __all__ = [
     "FrontierProgram", "FrontierEngine", "ValueState", "I32_MAX",
     "scan_relax", "pack_blocks", "scatter_min_received", "owned_to_front",
-    "wide_add", "wide_total", "BFSLevelsProgram",
+    "wide_add", "wide_total", "BFSLevelsProgram", "DirectionProgram",
+    "DirState",
     "ConnectedComponentsProgram", "CCOutput", "SSSPProgram", "SSSPOutput",
     "MultiSourceBFSProgram", "MultiBFSOutput", "MultiBFSState",
     "cc_reference", "sssp_reference", "multi_bfs_reference",

@@ -140,6 +140,10 @@ class BFSLevelsProgram(FrontierProgram):
             return lambda st, prev_total: topdown(st)
         return self.step_factory(engine, graph, extra, i, j, topdown)
 
+    def make_bottomup_step(self, engine, graph, extra, i, j):
+        from repro.algos.direction import make_bfs_bottomup_step
+        return make_bfs_bottomup_step(engine, graph, extra, i, j)
+
     def keep_going(self, engine, st, total):
         return (total > 0) & (st.lvl <= engine.max_levels)
 

@@ -33,6 +33,8 @@ class CCOutput:
     labels: jax.Array      # (n,) int32: min vertex id reaching each vertex
     n_iters: jax.Array     # propagation levels run (scalar int32)
     edges_scanned: Any = None  # exact Python int (64-bit safe)
+    directions: Any = None     # per-level direction trace when direction
+                               # optimisation ran (see BFSOutput), else None
 
 
 class ConnectedComponentsProgram(FrontierProgram):
@@ -54,6 +56,16 @@ class ConnectedComponentsProgram(FrontierProgram):
     def make_step(self, engine, graph, extra, i, j):
         # label propagation = the shared min-monoid step with identity relax
         return PR.make_value_step(engine, graph, i, j, relax=lambda p, w: p)
+
+    def make_bottomup_step(self, engine, graph, extra, i, j):
+        # the same step with the pull scan injected: every local row scans
+        # its CSR in-edges for frontier labels (dense Bellman-Ford pull) --
+        # candidates are bit-identical, everything downstream is shared
+        from repro.algos.direction import make_pull_scan
+        scan = make_pull_scan(engine, extra[-2], extra[-1], i, j,
+                              relax=lambda p, w: p)
+        return PR.make_value_step(engine, graph, i, j,
+                                  relax=lambda p, w: p, scan=scan)
 
     def keep_going(self, engine, st, total):
         return (total > 0) & (st.it <= engine.max_levels)

@@ -79,14 +79,21 @@ class FrontierEngine:
                 honors REPRO_FOLD and otherwise mirrors the expand rules.
                 All paths are bit-identical.
     dedup:      winner-selection method for set-valued folds.
+    bottomup:   bottom-up parent-search implementation: "reference" |
+                "pallas" | "pallas-interpret" | "auto" (DESIGN.md sec. 11).
+                "auto" honors REPRO_BOTTOMUP and otherwise mirrors the
+                expand rules.  Only consulted when the program declares
+                `uses_bottomup` (the direction-optimising driver); all
+                paths are bit-identical.
     """
 
     def __init__(self, topo, program, *, fold_codec=None,
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
-                 dedup: str = "scatter"):
+                 dedup: str = "scatter", bottomup: str = "auto"):
         from repro.dist.exchange import get_fold_codec
-        from repro.kernels.select import (resolve_expand_path,
+        from repro.kernels.select import (resolve_bottomup_path,
+                                          resolve_expand_path,
                                           resolve_fold_path)
 
         self.topo = topo
@@ -125,6 +132,21 @@ class FrontierEngine:
                     path=self.expand_path)
         self.expand_fn = expand_fn
         self.dedup = dedup
+        # bottom-up kernel hooks (the direction-optimised steps' chunk
+        # parent search); resolved for every engine so the path lands in
+        # cache keys, constructed only when the program can use them
+        self.bottomup = bottomup
+        self.bottomup_path = resolve_bottomup_path(bottomup)
+        self.bottomup_fn = None
+        self.value_bottomup_fn = None
+        if getattr(program, "uses_bottomup", False) \
+                and self.bottomup_path != "reference":
+            # same import discipline as the expand/fold kernels (package
+            # surface, outside any trace; bottomup='reference' remedy)
+            from repro.kernels import make_bottomup_fn, make_value_bottomup_fn
+            self.bottomup_fn = make_bottomup_fn(path=self.bottomup_path)
+            self.value_bottomup_fn = make_value_bottomup_fn(
+                path=self.bottomup_path)
         # traces of the level loop (scalar or batched); jit/AOT cache hits do
         # not retrace, so tests can assert a 64-root sweep compiles once
         self.trace_count = 0

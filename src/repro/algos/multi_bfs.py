@@ -58,6 +58,8 @@ class MultiBFSOutput:
                            #   sources), -1 = unreached
     n_levels: jax.Array    # waves run
     edges_scanned: Any = None  # exact Python int (64-bit safe)
+    directions: Any = None     # per-level direction trace when direction
+                               # optimisation ran (see BFSOutput), else None
 
 
 class MultiSourceBFSProgram(FrontierProgram):
@@ -88,19 +90,35 @@ class MultiSourceBFSProgram(FrontierProgram):
                              lvl=jnp.int32(1))
 
     def make_step(self, engine, graph, extra, i, j):
+        return self._make_step(engine, graph, i, j)
+
+    def make_bottomup_step(self, engine, graph, extra, i, j):
+        # the pull twin additionally masks visited rows out of the workload:
+        # their candidates are discarded by the visited discipline below
+        # anyway, so skipping their in-edges changes nothing but the work
+        from repro.algos.direction import make_pull_scan
+        scan = make_pull_scan(engine, extra[-2], extra[-1], i, j,
+                              relax=lambda p, w: p,
+                              row_mask_fn=lambda st: ~st.visited)
+        return self._make_step(engine, graph, i, j, scan=scan)
+
+    def _make_step(self, engine, graph, i, j, scan=None):
         grid, topo = engine.grid, engine.topo
         S, nrl = grid.S, grid.n_rows_local
         fold_ops = engine.fold_ops
 
         def step(st: MultiBFSState, prev_total):
-            all_front, all_pay, ftot = X.expand_exchange_values(
-                st.front, st.front_cnt, st.payload, topo=topo, fill=I32_MAX,
-                ops=fold_ops)
-            cand, scanned = PR.scan_relax(
-                graph.col_off, graph.row_idx, None, all_front, all_pay,
-                ftot, lambda p, w: p, n_rows=nrl, grid=grid,
-                edge_chunk=engine.edge_chunk,
-                expand_fn=engine.value_expand_fn)
+            if scan is not None:
+                cand, scanned = scan(st)
+            else:
+                all_front, all_pay, ftot = X.expand_exchange_values(
+                    st.front, st.front_cnt, st.payload, topo=topo,
+                    fill=I32_MAX, ops=fold_ops)
+                cand, scanned = PR.scan_relax(
+                    graph.col_off, graph.row_idx, None, all_front, all_pay,
+                    ftot, lambda p, w: p, n_rows=nrl, grid=grid,
+                    edge_chunk=engine.edge_chunk,
+                    expand_fn=engine.value_expand_fn)
             # first fold per vertex per device (the BFS visited discipline)
             improved = (cand < I32_MAX) & ~st.visited
             vis1 = st.visited | improved

@@ -45,10 +45,17 @@ class FrontierProgram:
 
     Attributes
     ----------
-    name:       short program id; part of every engine/AOT cache key.
-    codec_hint: fold wire format used when the caller does not pin one.
-    n_extra:    number of extra per-device (R, C, ...) graph arrays the
-                program consumes (e.g. per-edge weights, the CSR twin).
+    name:        short program id; part of every engine/AOT cache key.
+    codec_hint:  fold wire format used when the caller does not pin one.
+    n_extra:     number of extra per-device (R, C, ...) graph arrays the
+                 program consumes (e.g. per-edge weights).
+    n_csr_extra: how many MORE extras the bottom-up twin of the step needs
+                 appended after the regular ones -- (row_off, col_idx) of
+                 the CSR twin for everyone, plus the CSR-ordered weights
+                 for SSSP.  Only consumed via `DirectionProgram`.
+    uses_bottomup: True when `make_step` may call into the bottom-up kernel
+                 hooks (`engine.bottomup_fn` / `engine.value_bottomup_fn`);
+                 the engine only constructs those hooks when set.
 
     The engine calls, in order: `init` (per search), `make_step` (once per
     trace), the loop (`keep_going` / the step), then `finalize`; host-side
@@ -59,6 +66,8 @@ class FrontierProgram:
     name = "?"
     codec_hint = "list"
     n_extra = 0
+    n_csr_extra = 2
+    uses_bottomup = False
 
     @property
     def key(self) -> tuple:
@@ -73,6 +82,15 @@ class FrontierProgram:
     def make_step(self, engine, graph, extra, i, j):
         """Return step(state, prev_total) -> (state', total, scanned)."""
         raise NotImplementedError
+
+    def make_bottomup_step(self, engine, graph, extra, i, j):
+        """Bottom-up twin of `make_step` (same signature/return), consuming
+        the `n_csr_extra` CSR arrays at the END of `extra`.  Must be
+        bit-identical to the top-down step in its state trajectory, so the
+        direction driver may mix directions level by level."""
+        raise NotImplementedError(
+            f"{self.name} has no bottom-up step; it cannot run under "
+            f"direction optimisation")
 
     def keep_going(self, engine, st, total):
         """Convergence predicate (True = run another level)."""
@@ -215,7 +233,7 @@ def scatter_min_received(recv_ids, recv_vals, j, S: int):
 
 
 def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
-                    expand_fill=I32_MAX):
+                    expand_fill=I32_MAX, scan=None):
     """The complete min-monoid level step shared by CC and SSSP.
 
     gather frontier+payload -> scan_relax -> suppress (strict improvements
@@ -225,6 +243,11 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
     (identity for label propagation, min-plus for SSSP); `edge_vals` is the
     per-device per-edge array `relax` consumes (or None); `expand_fill`
     pads the gathered payload channel (never read under the valid mask).
+
+    scan: optional replacement for the gather + scan_relax prefix,
+    `state -> (cand (n_rows_local,), edges_scanned uint32)` -- the bottom-up
+    pull scan (`repro.algos.direction.make_pull_scan`) injects here; it must
+    produce bit-identical candidates, so everything downstream is shared.
     """
     from repro.dist import exchange as X
 
@@ -233,14 +256,17 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
     fold_ops = engine.fold_ops
 
     def step(st: ValueState, prev_total):
-        all_front, all_pay, ftot = X.expand_exchange_values(
-            st.front, st.front_cnt, st.payload, topo=topo, fill=expand_fill,
-            ops=fold_ops)
-        cand, scanned = scan_relax(
-            graph.col_off, graph.row_idx, edge_vals, all_front, all_pay,
-            ftot, relax, n_rows=nrl, grid=grid,
-            edge_chunk=engine.edge_chunk,
-            expand_fn=engine.value_expand_fn)
+        if scan is not None:
+            cand, scanned = scan(st)
+        else:
+            all_front, all_pay, ftot = X.expand_exchange_values(
+                st.front, st.front_cnt, st.payload, topo=topo,
+                fill=expand_fill, ops=fold_ops)
+            cand, scanned = scan_relax(
+                graph.col_off, graph.row_idx, edge_vals, all_front, all_pay,
+                ftot, relax, n_rows=nrl, grid=grid,
+                edge_chunk=engine.edge_chunk,
+                expand_fn=engine.value_expand_fn)
         # propose only strict improvements over what we already know
         improved = cand < st.val
         val1 = jnp.minimum(st.val, cand)

@@ -36,6 +36,8 @@ class SSSPOutput:
     dist: jax.Array        # (n,) / (B, n) int32 distances, -1 = unreachable
     n_iters: jax.Array     # relaxation levels run
     edges_scanned: Any = None  # exact Python int(s), 64-bit safe
+    directions: Any = None     # per-level direction trace when direction
+                               # optimisation ran (see BFSOutput), else None
 
 
 class SSSPProgram(FrontierProgram):
@@ -43,6 +45,7 @@ class SSSPProgram(FrontierProgram):
     name = "sssp"
     codec_hint = "list"
     n_extra = 1            # the per-device (R, C, e_max) uint8 weight array
+    n_csr_extra = 3        # CSR row_off + col_idx + the CSR-ordered weights
 
     def init(self, engine, graph, extra, root, i, j):
         grid = engine.grid
@@ -67,6 +70,17 @@ class SSSPProgram(FrontierProgram):
         return PR.make_value_step(
             engine, graph, i, j, relax=lambda p, w: p + w.astype(jnp.int32),
             edge_vals=extra[0], expand_fill=0)
+
+    def make_bottomup_step(self, engine, graph, extra, i, j):
+        # the pull twin relaxes over the CSR-ordered weight copy (same edge
+        # multiset as the CSC scan, min combine -> bit-identical candidates)
+        from repro.algos.direction import make_pull_scan
+        relax = lambda p, w: p + w.astype(jnp.int32)  # noqa: E731
+        scan = make_pull_scan(engine, extra[-3], extra[-2], i, j,
+                              relax=relax, csr_edge_vals=extra[-1])
+        return PR.make_value_step(engine, graph, i, j, relax=relax,
+                                  edge_vals=extra[0], expand_fill=0,
+                                  scan=scan)
 
     def keep_going(self, engine, st, total):
         return (total > 0) & (st.it <= engine.max_levels)

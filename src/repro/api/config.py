@@ -41,10 +41,20 @@ class BFSConfig:
     edge_chunk:  CSC scan chunk size of the expand phase.
     dedup:       winner-selection method ("scatter" | "sort").
     max_levels:  level-loop bound.
-    direction:   enable Beamer direction optimisation (plans the CSR twin
-                 partition and switches per level on frontier size).
-    alpha:       direction heuristic threshold (bottom-up when the global
+    direction:   Beamer direction optimisation.  False = pure top-down;
+                 True or "adaptive" = per-level alpha/beta switch inside the
+                 compiled loop; "bottomup" = every level bottom-up (the
+                 benchmark sweep's fixed arm).  Any non-False spelling plans
+                 the CSR twin lazily on first use.  Outputs are
+                 bit-identical to top-down in every mode.
+    alpha:       adaptive switch ENTRY threshold (bottom-up when the global
                  frontier exceeds n / alpha).
+    beta:        adaptive switch EXIT threshold (back to top-down once the
+                 frontier falls below n / beta; beta > alpha gives the
+                 hysteresis band that stops boundary thrash).
+    bottomup:    bottom-up kernel implementation (DESIGN.md sec. 11): same
+                 spellings and rules as `expand`, with REPRO_BOTTOMUP as
+                 the environment override.  Every path is bit-identical.
     row_axes /
     col_axes:    mesh axes the processor grid's rows/columns span.
     expand_fn:   explicit chunk-expansion override for the CSC scan (wins
@@ -67,13 +77,15 @@ class BFSConfig:
     edge_chunk: int = 8192
     dedup: str = "scatter"
     max_levels: int = 64
-    direction: bool = False
+    direction: Any = False
     alpha: int = 24
+    beta: int = 64
     row_axes: tuple = ("r",)
     col_axes: tuple = ("c",)
     expand_fn: Any = None
     expand: str = "auto"
     fold: str = "auto"
+    bottomup: str = "auto"
 
     def __post_init__(self):
         for f in ("row_axes", "col_axes"):
@@ -85,6 +97,21 @@ class BFSConfig:
     def codec_name(self) -> str:
         fc = self.fold_codec
         return fc if isinstance(fc, str) else getattr(fc, "name", repr(fc))
+
+    @property
+    def direction_mode(self):
+        """The direction spelling normalised: None (pure top-down),
+        "adaptive" or "bottomup"."""
+        d = self.direction
+        if d is False or d is None:
+            return None
+        if d is True:
+            return "adaptive"
+        if d in ("adaptive", "bottomup"):
+            return d
+        raise ValueError(
+            f"direction={d!r}: expected False | True | 'adaptive' | "
+            f"'bottomup'")
 
     @property
     def expand_path(self) -> str:
@@ -103,26 +130,38 @@ class BFSConfig:
         return resolve_fold_path(self.fold)
 
     @property
+    def bottomup_path(self) -> str:
+        """The concrete bottom-up implementation this config selects NOW
+        ("auto" resolves against REPRO_BOTTOMUP and the default backend)."""
+        from repro.kernels.select import resolve_bottomup_path
+
+        return resolve_bottomup_path(self.bottomup)
+
+    @property
     def engine_key(self) -> tuple:
         """What makes two configs share one DistBFSEngine (and hence one
         AOT-compile cache line, together with graph shape and batch size).
 
-        Uses the RESOLVED expand and fold paths, so "auto" configs re-key
-        correctly if REPRO_EXPAND / REPRO_FOLD changes between engine
-        builds in one process."""
-        return (self.codec_name, self.direction, self.edge_chunk, self.dedup,
-                self.max_levels, self.alpha, self.row_axes, self.col_axes,
-                self.expand_fn, self.expand_path, self.fold_path)
+        Uses the RESOLVED expand/fold/bottomup paths and direction MODE, so
+        "auto" configs re-key correctly if REPRO_EXPAND / REPRO_FOLD /
+        REPRO_BOTTOMUP changes between engine builds in one process."""
+        return (self.codec_name, self.direction_mode, self.edge_chunk,
+                self.dedup, self.max_levels, self.alpha, self.beta,
+                self.row_axes, self.col_axes, self.expand_fn,
+                self.expand_path, self.fold_path, self.bottomup_path)
 
     def algo_engine_key(self, program_key: tuple, codec_name: str,
                         max_levels: int) -> tuple:
         """Cache key for a non-BFS frontier-program engine (DESIGN.md
         sec. 8): the program's identity plus the config knobs the engine
         bakes in.  `codec_name`/`max_levels` are per-call (the program's
-        codec hint / iteration bound may override the BFS spellings)."""
+        codec hint / iteration bound may override the BFS spellings).
+        Direction mode / alpha / beta ride in via `program_key` (the
+        DirectionProgram wrapper's key); the resolved bottom-up kernel path
+        is an engine knob, so it keys here."""
         return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
                 max_levels, self.row_axes, self.col_axes, self.expand_fn,
-                self.expand_path, self.fold_path)
+                self.expand_path, self.fold_path, self.bottomup_path)
 
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""

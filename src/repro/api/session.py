@@ -2,8 +2,9 @@
 
 Phase 1 -- `DistGraph.from_edges(edges, config)` does everything that is
 per-GRAPH and per-LAYOUT: grid resolution, topology/mesh binding, the CSC
-partition (and the CSR twin only when direction optimisation is on), and
-device placement.  The result is a resident graph that answers many queries.
+partition, and device placement.  The CSR twin (what bottom-up traversal
+scans) is planned LAZILY by the first direction-enabled query and cached on
+the graph.  The result is a resident graph that answers many queries.
 
 Phase 2 -- `GraphSession.bfs(roots)` runs searches against the resident
 graph.  A scalar root returns one `BFSOutput`; a batch of roots executes as
@@ -21,12 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.algos import (
-    CCOutput, ConnectedComponentsProgram, FrontierEngine, MultiBFSOutput,
-    MultiSourceBFSProgram, SSSPOutput, SSSPProgram)
+    BFSLevelsProgram, CCOutput, ConnectedComponentsProgram, DirectionProgram,
+    FrontierEngine, MultiBFSOutput, MultiSourceBFSProgram, SSSPOutput,
+    SSSPProgram)
 from repro.api.config import BFSConfig
-from repro.core.direction import direction_step_factory
 from repro.core.partition import (partition_2d, partition_2d_csr,
-                                  partition_edge_vals)
+                                  partition_edge_vals,
+                                  partition_edge_vals_csr)
 from repro.core.types import BFSOutput, LocalGraph2D
 from repro.core.validate import validate_bfs
 from repro.dist.engine import DistBFSEngine
@@ -36,15 +38,16 @@ from repro.dist.topology import Topology
 def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
     """One engine per (topology, engine_key): the level-loop program with the
     config's codec/chunking/direction baked in, independent of graph DATA."""
-    step_factory, n_extra = None, 0
-    if config.direction:
-        step_factory = direction_step_factory(topology, config.alpha)
-        n_extra = 2
+    program = None
+    if config.direction_mode is not None:
+        program = DirectionProgram(BFSLevelsProgram(),
+                                   mode=config.direction_mode,
+                                   alpha=config.alpha, beta=config.beta)
     return DistBFSEngine(
         topology, fold_codec=config.fold_codec, edge_chunk=config.edge_chunk,
         max_levels=config.max_levels, expand=config.expand,
         expand_fn=config.expand_fn, fold=config.fold, dedup=config.dedup,
-        step_factory=step_factory, n_extra=n_extra)
+        bottomup=config.bottomup, program=program)
 
 
 class DistGraph:
@@ -57,18 +60,22 @@ class DistGraph:
 
     def __init__(self, topology: Topology, csc: LocalGraph2D, *, csr=None,
                  weights=None, edges=None, n: int | None = None,
-                 config: BFSConfig = None):
+                 config: BFSConfig = None, csr_weights=None,
+                 weights_host=None):
         self.topology = topology
         self.grid = topology.grid
         self.mesh = topology.mesh
         self.csc = csc
         self.csr = csr
         self.weights = weights       # (R, C, e_max) per-edge values or None
+        self.csr_weights = csr_weights   # the CSR-ordered copy (SSSP + dir)
         self.n = int(n) if n is not None else topology.grid.n
         self.config = config if config is not None else BFSConfig()
-        # host edge copy retained ONLY while it may still be needed to plan
-        # the CSR twin lazily (dropped once CSR exists; see release_edges)
+        # host edge/weight copies retained ONLY while they may still be
+        # needed to plan the CSR twin lazily (dropped once CSR exists; see
+        # release_edges)
         self._edges = edges if csr is None else None
+        self._weights_host = weights_host if csr is None else None
         self._engines = {}           # engine key -> engine (BFS or algo)
         self._compiled = {}          # (engine key, shapes, B) -> executable
 
@@ -93,17 +100,20 @@ class DistGraph:
         csc = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
                            jnp.asarray(lg.nnz))
         w = None
+        w_host = None
         if weights is not None:
-            w = jnp.asarray(partition_edge_vals(edges_np, weights, grid))
-        csr = None
-        if config.direction:         # CSR twin only when bottom-up can run
-            csr = {k: jnp.asarray(v)
-                   for k, v in partition_2d_csr(edges_np, grid).items()}
-        return cls(topology, csc, csr=csr, weights=w, edges=edges_np, n=n,
-                   config=config)   # edges kept only while csr is None
+            w_host = np.asarray(weights)
+            w = jnp.asarray(partition_edge_vals(edges_np, w_host, grid))
+        # the CSR twin is planned LAZILY on the first query that needs it
+        # (a direction-enabled session/algo call -> ensure_csr), so planning
+        # with direction on costs nothing until bottom-up actually runs
+        return cls(topology, csc, weights=w, edges=edges_np, n=n,
+                   config=config, weights_host=w_host)
 
     def ensure_csr(self):
-        """Plan the CSR twin on demand (a later direction=True session)."""
+        """Plan the CSR twin on demand (the first direction-enabled query);
+        also lays the per-edge weights out in CSR order when resident, so
+        direction-optimised SSSP can pull over them."""
         if self.csr is None:
             if self._edges is None:
                 raise ValueError(
@@ -112,13 +122,18 @@ class DistGraph:
             self.csr = {k: jnp.asarray(v)
                         for k, v in partition_2d_csr(self._edges,
                                                      self.grid).items()}
+            if self._weights_host is not None:
+                self.csr_weights = jnp.asarray(partition_edge_vals_csr(
+                    self._edges, self._weights_host, self.grid))
             self._edges = None       # both layouts resident -> edges done
+            self._weights_host = None
         return self.csr
 
     def release_edges(self):
-        """Drop the retained host edge copy (long-lived serving graphs that
-        will never open a direction=True session)."""
+        """Drop the retained host edge/weight copies (long-lived serving
+        graphs that will never open a direction-enabled session)."""
         self._edges = None
+        self._weights_host = None
 
     def engine_for(self, config: BFSConfig) -> DistBFSEngine:
         key = config.engine_key
@@ -148,14 +163,14 @@ class GraphSession:
                     f"session config asks for a {want.R}x{want.C} grid but "
                     f"the resident graph is planned {graph.grid.R}x"
                     f"{graph.grid.C}; re-plan with DistGraph.from_edges")
-        if self.config.direction:
+        if self.config.direction_mode is not None:
             graph.ensure_csr()
         self.engine = engine if engine is not None \
             else graph.engine_for(self.config)
 
     @property
     def _extra(self) -> tuple:
-        if self.config.direction:
+        if self.config.direction_mode is not None:
             csr = self.graph.csr
             return (csr["row_off"], csr["col_idx"])
         return ()
@@ -204,7 +219,9 @@ class GraphSession:
         if scalar:
             return BFSOutput(level=out.level[0], pred=out.pred[0],
                              n_levels=out.n_levels[0],
-                             edges_scanned=out.edges_scanned[0])
+                             edges_scanned=out.edges_scanned[0],
+                             directions=None if out.directions is None
+                             else out.directions[0])
         return out
 
     def _validate(self, out: BFSOutput, roots, validate) -> None:
@@ -228,10 +245,18 @@ class GraphSession:
     def _algo_engine(self, program, fold_codec, max_levels):
         """Fetch/build the FrontierEngine for `program`, cached on the
         DistGraph like the BFS engines (config codec/chunking apply unless
-        overridden per call)."""
+        overridden per call).  A direction-enabled session wraps the program
+        in the direction-optimising driver, so CC / SSSP / multi-source BFS
+        inherit the per-level adaptive switch."""
         codec = fold_codec if fold_codec is not None else program.codec_hint
         codec_name = codec if isinstance(codec, str) \
             else getattr(codec, "name", repr(codec))
+        if self.config.direction_mode is not None:
+            self.graph.ensure_csr()
+            program = DirectionProgram(program,
+                                       mode=self.config.direction_mode,
+                                       alpha=self.config.alpha,
+                                       beta=self.config.beta)
         key = self.config.algo_engine_key(program.key, codec_name,
                                           max_levels)
         eng = self.graph._engines.get(key)
@@ -240,9 +265,25 @@ class GraphSession:
                 self.graph.topology, program, fold_codec=codec,
                 edge_chunk=self.config.edge_chunk, max_levels=max_levels,
                 expand=self.config.expand, expand_fn=self.config.expand_fn,
-                fold=self.config.fold, dedup=self.config.dedup)
+                fold=self.config.fold, dedup=self.config.dedup,
+                bottomup=self.config.bottomup)
             self.graph._engines[key] = eng
         return eng, key
+
+    def _algo_csr_extra(self, *, weights: bool = False) -> tuple:
+        """The CSR-twin arrays a direction-enabled algo call appends after
+        its regular extras (empty when direction is off)."""
+        if self.config.direction_mode is None:
+            return ()
+        csr = self.graph.ensure_csr()
+        if not weights:
+            return (csr["row_off"], csr["col_idx"])
+        if self.graph.csr_weights is None:
+            raise ValueError(
+                "direction-optimised sssp needs the CSR-ordered weight "
+                "copy; plan the graph with DistGraph.from_edges(edges, "
+                "config, weights=w) so ensure_csr can lay it out")
+        return (csr["row_off"], csr["col_idx"], self.graph.csr_weights)
 
     def _algo_compiled(self, eng, key, arg_aval, *extra, batched=False):
         """AOT executable for one frontier program, cached on the DistGraph
@@ -270,9 +311,10 @@ class GraphSession:
         eng, key = self._algo_engine(ConnectedComponentsProgram(),
                                      fold_codec, max_levels)
         g = self.graph.csc
+        extra = self._algo_csr_extra()
         compiled = self._algo_compiled(
-            eng, key, jax.ShapeDtypeStruct((), jnp.int32))
-        outs = compiled(g.col_off, g.row_idx, g.nnz, jnp.int32(0))
+            eng, key, jax.ShapeDtypeStruct((), jnp.int32), *extra)
+        outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, jnp.int32(0))
         return eng.program.assemble(eng, outs, None)
 
     def sssp(self, roots, fold_codec=None) -> SSSPOutput:
@@ -295,14 +337,17 @@ class GraphSession:
         max_levels = self.graph.grid.n + 1     # Bellman-Ford round bound
         eng, key = self._algo_engine(SSSPProgram(), fold_codec, max_levels)
         g, w = self.graph.csc, self.graph.weights
+        extra = (w,) + self._algo_csr_extra(weights=True)
         compiled = self._algo_compiled(
-            eng, key, jax.ShapeDtypeStruct((B,), jnp.int32), w,
+            eng, key, jax.ShapeDtypeStruct((B,), jnp.int32), *extra,
             batched=True)
         out = eng.program.assemble(
-            eng, compiled(g.col_off, g.row_idx, g.nnz, w, roots_arr), B)
+            eng, compiled(g.col_off, g.row_idx, g.nnz, *extra, roots_arr), B)
         if scalar:
             return SSSPOutput(dist=out.dist[0], n_iters=out.n_iters[0],
-                              edges_scanned=out.edges_scanned[0])
+                              edges_scanned=out.edges_scanned[0],
+                              directions=None if out.directions is None
+                              else out.directions[0])
         return out
 
     def multi_bfs(self, sources, k: int | None = None,
@@ -323,7 +368,9 @@ class GraphSession:
         eng, key = self._algo_engine(MultiSourceBFSProgram(), fold_codec,
                                      max_levels)
         g = self.graph.csc
+        extra = self._algo_csr_extra()
         compiled = self._algo_compiled(
-            eng, key, jax.ShapeDtypeStruct(sources_arr.shape, jnp.int32))
-        outs = compiled(g.col_off, g.row_idx, g.nnz, sources_arr)
+            eng, key, jax.ShapeDtypeStruct(sources_arr.shape, jnp.int32),
+            *extra)
+        outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, sources_arr)
         return eng.program.assemble(eng, outs, None)

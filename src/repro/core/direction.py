@@ -1,107 +1,19 @@
-"""Direction-optimising 2D BFS (beyond-paper; Beamer et al. [7] + [20]).
+"""DEPRECATED shim: direction-optimising 2D BFS moved into the engine.
 
-The paper cites direction-optimisation as related work but does not implement
-it.  We add a bottom-up step that composes with the 2D decomposition:
+Direction optimisation (Beamer et al. [7] + [20]) is now a first-class mode
+of the frontier engine: `BFSConfig(direction=True | "adaptive" | "bottomup")`
+routes BFS -- and CC / SSSP / multi-source BFS -- through the
+`repro.algos.direction.DirectionProgram` wrapper, whose fused bottom-up
+kernels live in `repro.kernels.bottomup` (DESIGN.md sec. 11).  Nothing on
+the hot path imports this module any more.
 
-  * expand is unchanged (frontier gathered within the processor-column);
-  * instead of scanning FRONTIER columns (CSC), each device scans its
-    UNVISITED local rows (CSR) for any edge into the frontier;
-  * fold becomes a min-reduce of encoded parents within the processor-row
-    (an all_to_all of (C, S) int32 + local min), replacing vertex lists.
-
-Per-level direction choice follows Beamer's heuristic on the global frontier
-size.  TEPS accounting still uses input edges in the component (Graph500),
-matching the paper's note that bottom-up "does not traverse all edges".
-
-The driver is a thin config of `repro.dist.engine`: a `step_factory` that
-wraps the engine's own top-down step in a `lax.cond` against the bottom-up
-step below.  Top-down levels therefore inherit the engine's fold codec.
+`BFS2DDirection` remains as a deprecated drop-in for pre-session callers; it
+is a thin veneer over `BFSConfig(direction=True)` on a `GraphSession`.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import frontier as F
-from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
-from repro.dist.engine import canonical_front
+from repro.core.types import Grid2D, LocalGraph2D, BFSOutput
 from repro.dist.topology import Topology
-
-I32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
-
-
-def _bottomup_step(csr_row_off, csr_col_idx, st: BFSState, *, topo: Topology,
-                   i, j):
-    grid = topo.grid
-    S, C, ncl, nrl = grid.S, grid.C, grid.n_cols_local, grid.n_rows_local
-    e_cap = csr_col_idx.shape[0]
-
-    # expand: gather frontier, build a column bitmap for this column block
-    af_blocks = topo.row_gather(st.front).reshape(grid.R, S)
-    af_cnts = topo.row_gather(st.front_cnt).reshape(grid.R)
-    msk = jnp.arange(S, dtype=jnp.int32)[None, :] < af_cnts[:, None]
-    fmask = jnp.zeros((ncl,), bool).at[
-        jnp.where(msk, af_blocks, ncl).reshape(-1)].set(True, mode="drop")
-
-    # scan unvisited local rows for any parent in the frontier (segment-min)
-    deg = jnp.diff(csr_row_off)
-    edge_row = jnp.repeat(jnp.arange(nrl, dtype=jnp.int32), deg,
-                          total_repeat_length=e_cap)
-    valid = csr_col_idx >= 0
-    hit = valid & fmask[jnp.clip(csr_col_idx, 0, ncl - 1)]
-    enc = jnp.where(hit, csr_col_idx, I32_MAX)
-    best = jnp.full((nrl,), I32_MAX, jnp.int32).at[edge_row].min(enc)
-    row_unvis = ~st.visited
-    found = (best < I32_MAX) & row_unvis
-    # encode GLOBAL parent id; fold = min-reduce within the processor-row
-    parent_g = jnp.where(found, j * ncl + best, I32_MAX).reshape(C, S)
-    recv = topo.col_all_to_all(parent_g).reshape(C, S)
-    best_owned = recv.min(axis=0)                    # (S,) my owned block
-    rows_owned = j * S + jnp.arange(S, dtype=jnp.int32)
-    vis_owned = st.visited[rows_owned]
-    new = (best_owned < I32_MAX) & ~vis_owned
-
-    visited = st.visited.at[jnp.where(new, rows_owned, nrl)].set(
-        True, mode="drop")
-    level = st.level.at[jnp.where(new, rows_owned, nrl)].set(
-        jnp.where(new, st.lvl, 0), mode="drop")
-    pred = st.pred.at[jnp.where(new, rows_owned, nrl)].set(
-        jnp.where(new, best_owned, 0), mode="drop")
-
-    lc = i * S + jnp.arange(S, dtype=jnp.int32)      # ROW2COL of owned rows
-    nf = jnp.full((S,), -1, jnp.int32)
-    nf, nc = F.append_padded(nf, jnp.int32(0), lc, new)
-    nf, nc = canonical_front(nf, nc)
-
-    st2 = BFSState(level=level, pred=pred, visited=visited, front=nf,
-                   front_cnt=nc, lvl=st.lvl + 1)
-    total = topo.psum_all(nc)
-    edges_scanned = jnp.sum(jnp.where(valid & row_unvis[edge_row], 1, 0),
-                            dtype=jnp.uint32)
-    return st2, total, edges_scanned
-
-
-def direction_step_factory(topo: Topology, alpha: int = 24):
-    """Engine `step_factory` wrapping the top-down step in Beamer's per-level
-    direction choice (bottom-up once the global frontier exceeds n/alpha).
-
-    The two extra per-device arrays are the CSR twin (row_off, col_idx)."""
-    grid = topo.grid
-
-    def step_factory(engine, graph, extra, i, j, topdown):
-        row_off, col_idx = extra
-
-        def step(st, prev_total):
-            def bottomup(st):
-                return _bottomup_step(row_off, col_idx, st, topo=topo,
-                                      i=i, j=j)
-
-            use_bu = prev_total > (grid.n // alpha)
-            return jax.lax.cond(use_bu, bottomup, topdown, st)
-
-        return step
-
-    return step_factory
 
 
 class BFS2DDirection:

@@ -157,6 +157,64 @@ def reference_expand_chunk(gids, cumul, all_front, front_total, col_off,
     return v, u, k, addr, valid
 
 
+def test_bit_blocks(words, c, block: int):
+    """Test bit `c` of a row-gathered blocked bitmap.
+
+    words: (R * W,) uint32, R per-device blocks of W = ceil(block/32) words
+    each, every block packing `block` bits (`pack_bitmap` of one owned
+    frontier mask).  Blocked addressing -- NOT a flat n-bit bitmap -- so the
+    layout stays exact when block % 32 != 0 (each device's pad bits are
+    zero, never aliased by a neighbour's first word).
+    """
+    W = (block + 31) // 32
+    blk, off = c // block, c % block
+    w = words[blk * W + (off >> 5)]
+    return ((w >> (off & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+def reference_bottomup_chunk(gids, cumul, total, row_off, col_idx, words, *,
+                             block: int):
+    """One chunk of the bottom-up parent search in plain jnp -- THE
+    reference formulas, single source of truth (the CSR mirror of
+    `reference_expand_chunk`).  Shared by the bottom-up step's inline path
+    and `repro.kernels.bottomup`; the fused Pallas kernel mirrors these
+    formulas lane for lane (the bit-identity contract, DESIGN.md sec. 11)
+    -- edit them HERE or the paths diverge.
+
+    gids index the masked-degree workload: `cumul` is the exclusive cumsum
+    of per-row degrees with VISITED rows zeroed, so the scan walks only
+    unvisited rows' edges; `total = cumul[-1]` is the level's edge count.
+    words: row-gathered frontier bitmap, blocked layout (`test_bit_blocks`).
+
+    Returns (r, c, hit): candidate local row, its neighbour's local col
+    (masked lanes -> 0), and whether that neighbour is in the frontier.
+    """
+    nrl = cumul.shape[0] - 1
+    nnz_cap = col_idx.shape[0]
+    r = jnp.searchsorted(cumul, gids, side="right").astype(jnp.int32) - 1
+    r = jnp.clip(r, 0, nrl - 1)
+    addr = jnp.clip(row_off[r] + gids - cumul[r], 0, nnz_cap - 1)
+    valid = gids < total
+    c = jnp.where(valid, col_idx[addr], 0)
+    hit = valid & test_bit_blocks(words, c, block)
+    return r, c, hit
+
+
+def reference_bottomup_values_chunk(gids, cumul, total, row_off, col_idx,
+                                    words, dense_pay, *, block: int):
+    """`reference_bottomup_chunk` with an aligned payload gather (value
+    programs pull the sender's label/distance from a dense per-col channel).
+
+    Returns (r, pay, addr, hit) -- addr is the clipped CSR edge address so
+    callers can gather per-edge weights (SSSP)."""
+    r, c, hit = reference_bottomup_chunk(
+        gids, cumul, total, row_off, col_idx, words, block=block)
+    nnz_cap = col_idx.shape[0]
+    addr = jnp.clip(row_off[r] + gids - cumul[r], 0, nnz_cap - 1)
+    pay = dense_pay[c]
+    return r, pay, addr, hit
+
+
 def set_bits(words, v, take):
     """Set bit v[take] in the packed uint32 bitmap (the incremental twin of
     `pack_bitmap`): callers guarantee the taken v are DISTINCT and their

@@ -170,6 +170,44 @@ def partition_2d_csr(edges, grid: Grid2D, pad_to: int | None = None):
     return dict(row_off=row_off, col_idx=col_idx, nnz=nnz)
 
 
+def partition_edge_vals_csr(edges, vals, grid: Grid2D,
+                            pad_to: int | None = None):
+    """Per-edge values laid out in `partition_2d_csr`'s CSR order.
+
+    The CSR analog of `partition_edge_vals`: entry [i, j, k] is the value of
+    the edge `partition_2d_csr` put at col_idx[i, j, k].  Alignment holds
+    because both order edges with the same stable `np.lexsort((lr, dev))`.
+    Direction-optimised SSSP pulls over this copy in bottom-up levels.
+    """
+    R, C, S = grid.R, grid.C, grid.S
+    ncl = grid.n_cols_local
+    u = np.asarray(edges[0], dtype=np.int64)
+    v = np.asarray(edges[1], dtype=np.int64)
+    vals = np.asarray(vals)
+    if vals.shape[0] != u.shape[0]:
+        raise ValueError(
+            f"{vals.shape[0]} edge values for {u.shape[0]} edges")
+    pi = (v // S) % R
+    pj = u // ncl
+    lr = (v // S // R) * S + v % S
+    dev = pi * C + pj
+    e_max = pad_to if pad_to is not None else int(
+        np.bincount(dev, minlength=R * C).max())
+    out = np.zeros((R, C, e_max), vals.dtype)
+    order = np.lexsort((lr, dev))
+    dev_s, vals_s = dev[order], vals[order]
+    starts = np.searchsorted(dev_s, np.arange(R * C + 1))
+    for i in range(R):
+        for j in range(C):
+            d = i * C + j
+            a, b = starts[d], starts[d + 1]
+            if b - a > e_max:
+                raise ValueError(
+                    f"pad_to={e_max} < local nnz {b - a} at P({i},{j})")
+            out[i, j, :b - a] = vals_s[a:b]
+    return out
+
+
 # ----------------------------------------------------------------------------
 # 1D baseline partition (the paper's ORIGINAL code [1]: modulo rule)
 # ----------------------------------------------------------------------------

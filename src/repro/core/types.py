@@ -117,3 +117,6 @@ class BFSOutput:
     n_levels: jax.Array
     edges_scanned: Any = None  # exact Python int (64-bit safe), or None
                                # when the producer does not account edges
+    directions: Any = None     # (n_levels_cap,) int32 per-level direction
+                               # trace (-1 unused / 0 top-down / 1 bottom-up)
+                               # when direction optimisation ran, else None

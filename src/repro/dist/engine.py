@@ -65,26 +65,37 @@ class DistBFSEngine(FrontierEngine):
                   sec. 10) -- codec encode/decode kernels + the prefix-sum
                   compaction, REPRO_FOLD override, bit-identical paths.
     dedup:        winner-selection method ("scatter" | "sort").
+    bottomup:     bottom-up kernel implementation for direction-optimised
+                  programs (same spellings; DESIGN.md sec. 11) -- the fused
+                  parent search, REPRO_BOTTOMUP override, bit-identical
+                  paths.
     step_factory: optional `(engine, graph, extra, i, j, topdown) -> step`
                   hook replacing the default top-down per-level step.
     n_extra:      number of extra per-device (R, C, ...) graph arrays the
                   step consumes (e.g. the CSR twin for bottom-up).
+    program:      optional BFS-shaped FrontierProgram overriding the default
+                  `BFSLevelsProgram` (the session passes the
+                  direction-optimising `DirectionProgram` wrapper here);
+                  wins over step_factory/n_extra.
     """
 
     def __init__(self, topo: Topology, *, fold_codec="list",
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
-                 dedup: str = "scatter", step_factory=None, n_extra: int = 0):
+                 dedup: str = "scatter", bottomup: str = "auto",
+                 step_factory=None, n_extra: int = 0, program=None):
         from repro.algos.bfs import BFSLevelsProgram
 
+        if program is None:
+            program = BFSLevelsProgram(step_factory=step_factory,
+                                       n_extra=n_extra)
         self.step_factory = step_factory
-        self.n_extra = n_extra
+        self.n_extra = program.n_extra
         super().__init__(
-            topo, BFSLevelsProgram(step_factory=step_factory,
-                                   n_extra=n_extra),
+            topo, program,
             fold_codec=fold_codec, edge_chunk=edge_chunk,
             max_levels=max_levels, expand=expand, expand_fn=expand_fn,
-            fold=fold, dedup=dedup)
+            fold=fold, dedup=dedup, bottomup=bottomup)
 
     def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
         """One top-down level (paper Alg. 2 lines 12-18)."""

@@ -38,6 +38,11 @@ _EXPORTS = {
     "expand_chunk_values": "repro.kernels.expand",
     "make_expand_fn": "repro.kernels.expand",
     "make_value_expand_fn": "repro.kernels.expand",
+    # the fused bottom-up parent search (repro.kernels.bottomup, sec. 11)
+    "bottomup_chunk": "repro.kernels.bottomup",
+    "bottomup_chunk_values": "repro.kernels.bottomup",
+    "make_bottomup_fn": "repro.kernels.bottomup",
+    "make_value_bottomup_fn": "repro.kernels.bottomup",
     # the fused fold pipeline (repro.kernels.fold, DESIGN.md sec. 10)
     "compact_rows": "repro.kernels.fold",
     "pack_bits": "repro.kernels.fold",
@@ -50,10 +55,13 @@ _EXPORTS = {
     # on every construction, including on installs without Pallas
     "resolve_expand_path": "repro.kernels.select",
     "resolve_fold_path": "repro.kernels.select",
+    "resolve_bottomup_path": "repro.kernels.select",
     "EXPAND_PATHS": "repro.kernels.select",
     "EXPAND_ENV": "repro.kernels.select",
     "FOLD_PATHS": "repro.kernels.select",
     "FOLD_ENV": "repro.kernels.select",
+    "BOTTOMUP_PATHS": "repro.kernels.select",
+    "BOTTOMUP_ENV": "repro.kernels.select",
     # stage ops
     "binsearch_map": "repro.kernels._binsearch_map",
     "map_workload_tile": "repro.kernels._binsearch_map",
@@ -75,7 +83,8 @@ def __getattr__(name: str):
         raise ImportError(
             f"repro.kernels.{name} needs jax.experimental.pallas, which "
             f"failed to import; use BFSConfig(expand='reference') / "
-            f"BFSConfig(fold='reference') on this install ({e})") from e
+            f"BFSConfig(fold='reference') / BFSConfig(bottomup='reference') "
+            f"on this install ({e})") from e
     return getattr(mod, name)
 
 

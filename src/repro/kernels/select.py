@@ -8,11 +8,11 @@ import without it.  The kernels themselves live in `repro.kernels.expand` /
 `repro.kernels.fold` and are only imported once a non-reference path is
 selected.
 
-Both knobs share one spelling set ("reference" | "pallas" |
+All knobs share one spelling set ("reference" | "pallas" |
 "pallas-interpret" | "auto") and one resolution rule; they differ only in
 the environment override that CI matrix legs use to force a path
 process-wide (REPRO_EXPAND for the expand scan, REPRO_FOLD for the fold
-pipeline).
+pipeline, REPRO_BOTTOMUP for the bottom-up parent search).
 """
 from __future__ import annotations
 
@@ -23,6 +23,9 @@ EXPAND_ENV = "REPRO_EXPAND"
 
 FOLD_PATHS = EXPAND_PATHS
 FOLD_ENV = "REPRO_FOLD"
+
+BOTTOMUP_PATHS = EXPAND_PATHS
+BOTTOMUP_ENV = "REPRO_BOTTOMUP"
 
 
 def _resolve(spec, *, env: str, knob: str, platform: str | None) -> str:
@@ -61,3 +64,10 @@ def resolve_expand_path(spec="auto", *, platform: str | None = None) -> str:
 def resolve_fold_path(spec="auto", *, platform: str | None = None) -> str:
     """Concretise a fold-path spelling (same rules, REPRO_FOLD override)."""
     return _resolve(spec, env=FOLD_ENV, knob="fold", platform=platform)
+
+
+def resolve_bottomup_path(spec="auto", *, platform: str | None = None) -> str:
+    """Concretise a bottom-up-path spelling (same rules, REPRO_BOTTOMUP
+    override)."""
+    return _resolve(spec, env=BOTTOMUP_ENV, knob="bottomup",
+                    platform=platform)

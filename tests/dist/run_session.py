@@ -65,7 +65,22 @@ graph.session().bfs(int(roots[0]), validate=True)
 dsess = graph.session(BFSConfig(grid=(R, C), edge_chunk=2048,
                                 direction=True))
 assert graph.csr is not None
-check_batch(dsess, "direction")
+dout = check_batch(dsess, "direction")
+dirs = np.asarray(dout.directions)
+assert dirs.shape == (len(roots), dsess.config.max_levels), "directions shape"
+live = dirs[0][dirs[0] >= 0]
+assert live.size == int(dout.n_levels[0]) - 1, "one decision per level"
+assert (live == 0).any() and (live == 1).any(), \
+    f"adaptive must exercise both directions on RMAT, got {live}"
+
+# --- forced bottom-up: every level pulls, still bit-identical ---------------
+bsess = graph.session(BFSConfig(grid=(R, C), edge_chunk=2048,
+                                direction="bottomup"))
+bout = bsess.bfs(roots)
+assert (np.asarray(bout.level) == np.asarray(dout.level)).all(), "bottomup"
+assert (np.asarray(bout.pred) == np.asarray(dout.pred)).all(), "bottomup"
+bdirs = np.asarray(bout.directions)
+assert (bdirs[bdirs >= 0] == 1).all(), "bottomup mode must never push"
 
 # --- fold codecs agree through the session, bit-exact ----------------------
 base = graph.session().bfs(roots)

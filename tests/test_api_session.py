@@ -145,12 +145,15 @@ def test_csr_required_when_graph_has_no_edges(graph_data):
 
 def test_csr_planning_releases_host_edges(graph_data):
     """The retained host edge copy exists only to plan the CSR twin lazily:
-    gone once CSR is resident (eagerly or lazily) or on release_edges()."""
+    gone once CSR is resident, and `from_edges` never plans CSR eagerly --
+    even for a direction config it waits for the first bottom-up consumer."""
     edges_np = graph_data[0]
-    eager = DistGraph.from_edges(
+    lazy_dir = DistGraph.from_edges(
         edges_np, BFSConfig(grid=(1, 1), edge_chunk=512, direction=True),
         n=N)
-    assert eager.csr is not None and eager._edges is None
+    assert lazy_dir.csr is None and lazy_dir._edges is not None
+    lazy_dir.session()                 # first direction session plans it
+    assert lazy_dir.csr is not None and lazy_dir._edges is None
     lazy = DistGraph.from_edges(
         edges_np, BFSConfig(grid=(1, 1), edge_chunk=512), n=N)
     assert lazy._edges is not None
