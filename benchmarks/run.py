@@ -18,6 +18,14 @@ expand times per expand path) is trackable across PRs.
   kernels Pallas-kernel parity + oracle timings
 
 CLI:
+  --serve     run ONLY the serve-load suite (benchmarks/serve_load.py: a
+              GraphServer under an offered-load sweep with mixed
+              BFS/CC/SSSP/multi-BFS traffic on 2x2 simulated devices) and
+              gate its bench_out/BENCH_serve.json: schema, >= 3 load
+              points, all bit-exact, zero failed queries, mean batch
+              occupancy > 1 at the highest offered load, and the fault
+              drill failing exactly the poisoned request -- never
+              wall-clock
   --scale N   force every honoring suite to graph scale N (REPRO_BENCH_SCALE)
   --smoke     reduced CI suite list (fold codecs on 2x2 simulated devices,
               strong-scaling mini sweep, per-level breakdown + fold wire
@@ -181,6 +189,63 @@ def write_bench_json() -> None:
     print(f"\nwrote {path}")
 
 
+def validate_serve() -> list:
+    """Gates over bench_out/BENCH_serve.json (the --serve mode artifact).
+
+    Correctness and coalescing-shape gates only -- zero failed queries,
+    every point bit-identical to direct GraphSession calls, the highest
+    offered-load point actually batching (mean occupancy > 1), and the
+    fault drill failing exactly its one poisoned request -- NEVER
+    wall-clock (the p50/p99 columns are trajectory data, not gates).
+    """
+    errors = []
+    p = os.path.join(common.OUT_DIR, "BENCH_serve.json")
+    if not os.path.exists(p):
+        return ["BENCH_serve.json missing"]
+    try:
+        with open(p) as f:
+            serve = json.load(f)
+    except json.JSONDecodeError as e:
+        return [f"BENCH_serve.json: invalid JSON ({e})"]
+    if serve.get("schema") != "BENCH_serve/v1":
+        errors.append(f"BENCH_serve schema {serve.get('schema')!r} != "
+                      f"'BENCH_serve/v1'")
+    for key in ("load", "fault", "aot_cache", "tenants"):
+        if key not in serve:
+            errors.append(f"BENCH_serve missing key {key!r}")
+    load = serve.get("load") or []
+    if len(load) < 3:
+        errors.append(f"BENCH_serve: {len(load)} offered-load points < 3")
+    for p_ in load:
+        if p_.get("bitexact") is not True:
+            errors.append(f"BENCH_serve: point offered_qps="
+                          f"{p_.get('offered_qps')} not bit-exact")
+        if p_.get("n_failed"):
+            errors.append(f"BENCH_serve: {p_['n_failed']} failed queries at "
+                          f"offered_qps={p_.get('offered_qps')}")
+    if load:
+        top = max(load, key=lambda p_: p_.get("offered_qps") or 0)
+        if not ((top.get("mean_occupancy") or 0) > 1):
+            errors.append(
+                f"BENCH_serve: highest offered load did not coalesce "
+                f"(mean_occupancy={top.get('mean_occupancy')} <= 1)")
+    drill = serve.get("fault")
+    if not drill:
+        errors.append("BENCH_serve: fault drill missing")
+    else:
+        if drill.get("injected") != 1 or drill.get("failed") != 1:
+            errors.append(f"BENCH_serve: fault drill must fail exactly the "
+                          f"poisoned request, got {drill}")
+        if not drill.get("ok_after"):
+            errors.append(f"BENCH_serve: no queries served after the fault "
+                          f"({drill})")
+    if not serve.get("aot_cache"):
+        errors.append("BENCH_serve: aot_cache section empty")
+    if len(serve.get("tenants") or {}) < 2:
+        errors.append("BENCH_serve: expected >= 2 tenants in accounting")
+    return errors
+
+
 def validate_bench(smoke: bool) -> list:
     """Schema + correctness-counter gates over the emitted JSON artifacts.
 
@@ -288,11 +353,32 @@ def main(argv=None) -> None:
                     help="force graph scale for suites that honor it")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced CI suite list; correctness gates in full")
+    ap.add_argument("--serve", action="store_true",
+                    help="run only the serve-load suite and gate "
+                         "BENCH_serve.json")
     args = ap.parse_args(argv)
     if args.scale is not None:
         os.environ["REPRO_BENCH_SCALE"] = str(args.scale)
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    if args.serve:
+        from benchmarks import serve_load
+        print("\n=== serve_load ===")
+        t0 = time.time()
+        try:
+            serve_load.main()
+            print(f"--- serve_load done in {time.time() - t0:.0f}s")
+        except Exception:
+            print(f"--- serve_load FAILED:\n{traceback.format_exc()[-1500:]}")
+            sys.exit(1)
+        errors = validate_serve()
+        for e in errors:
+            print(f"VALIDATION: {e}")
+        if errors:
+            sys.exit(1)
+        print("serve validation OK")
+        return
 
     from benchmarks import (bfs_weak_scaling, bfs_strong_scaling,
                             bfs_breakdown, bfs_1d_vs_2d, bfs_fold_codecs,

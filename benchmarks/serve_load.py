@@ -1,0 +1,74 @@
+"""Serve-load suite: offered-load sweep against a GraphServer
+(benchmarks/workers/serve_worker.py on 2x2 simulated devices) -> CSVs +
+bench_out/BENCH_serve.json.
+
+Emits:
+  serve_load.csv    one row per offered-load point (latency percentiles,
+                    achieved qps, occupancy, bit-exactness)
+  serve_fault.csv   the fault-drill outcome (one poisoned request must fail
+                    alone while the server keeps serving)
+  BENCH_serve.json  schema BENCH_serve/v1 -- the machine-readable artifact
+                    `benchmarks/run.py --serve` gates on (zero failed
+                    queries, all points bit-exact, mean batch occupancy > 1
+                    at the highest offered load; never wall-clock)
+"""
+from benchmarks.common import bench_scale, emit, emit_json, run_worker, \
+    smoke_mode
+
+LOAD_HEADER = ("offered_qps", "qps", "p50_ms", "p99_ms", "n_ok", "n_failed",
+               "mean_occupancy", "bitexact")
+FAULT_HEADER = ("injected", "failed", "ok_after", "retries")
+
+
+def _f(x):
+    try:
+        return float(x)
+    except (TypeError, ValueError):
+        return None
+
+
+def main() -> None:
+    scale = bench_scale(12)
+    n_req = 24 if smoke_mode() else 96
+    out = run_worker("serve_worker.py", scale, 8, 2, 2, n_req, timeout=1800)
+    load, fault, cache, tenants = [], [], {}, {}
+    for line in out.splitlines():
+        tag, _, rest = line.partition(",")
+        cells = rest.split(",")
+        if tag == "LOAD":
+            load.append(cells)
+        elif tag == "FAULT":
+            fault.append(cells)
+        elif tag == "CACHE":
+            cache[cells[0]] = {
+                "size": _f(cells[1]), "maxsize": _f(cells[2]),
+                "hits": _f(cells[3]), "misses": _f(cells[4]),
+                "evictions": _f(cells[5])}
+        elif tag == "TENANT":
+            tenants[cells[0]] = {
+                "queries": int(cells[1]), "ok": int(cells[2]),
+                "failed": int(cells[3]), "rejected": int(cells[4]),
+                "edges_scanned": int(cells[5])}
+    emit([LOAD_HEADER] + load, "serve_load")
+    emit([FAULT_HEADER] + fault, "serve_fault")
+
+    points = [dict(zip(LOAD_HEADER, row)) for row in load]
+    for p in points:
+        for k in ("offered_qps", "qps", "p50_ms", "p99_ms",
+                  "mean_occupancy"):
+            p[k] = _f(p[k])
+        for k in ("n_ok", "n_failed"):
+            p[k] = int(p[k])
+        p["bitexact"] = p["bitexact"] == "true"
+    drill = dict(zip(FAULT_HEADER, map(int, fault[0]))) if fault else None
+    path = emit_json({
+        "schema": "BENCH_serve/v1",
+        "scale": scale,
+        "grid": "2x2",
+        "n_requests_per_point": n_req,
+        "load": points,            # offered-load sweep, low -> high
+        "fault": drill,            # injected / failed / ok_after / retries
+        "aot_cache": cache,        # per resident graph
+        "tenants": tenants,        # accumulated over the whole run
+    }, "BENCH_serve")
+    print(f"wrote {path}")

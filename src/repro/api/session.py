@@ -16,6 +16,8 @@ Graph500-style 64-root sweep traces the level loop exactly once.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
+
 import numpy as np
 
 import jax
@@ -33,6 +35,78 @@ from repro.core.types import BFSOutput, LocalGraph2D
 from repro.core.validate import validate_bfs
 from repro.dist.engine import DistBFSEngine
 from repro.dist.topology import Topology
+
+
+def check_vertex_ids(ids, n: int, what: str = "roots") -> None:
+    """Session-boundary input validation (DESIGN.md sec. 12).
+
+    Out-of-range or wrong-dtype vertex ids used to surface as opaque JAX
+    errors mid-trace (or, worse, silently wrap once cast to int32); a
+    serving layer must reject a bad request before it reaches a compiled
+    program.  Raises ValueError naming the graph's n and the expected
+    dtype; accepts anything integer-typed convertible to int32.
+    """
+    arr = np.asarray(ids)
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"{what} must be integer vertex ids (int32-convertible), got "
+            f"dtype {arr.dtype}")
+    if arr.size:
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 0 or hi >= n:
+            bad = lo if lo < 0 else hi
+            raise ValueError(
+                f"{what} contain out-of-range vertex id {bad}; this graph "
+                f"has n = {n} vertices, valid ids are 0 <= id < {n}")
+
+
+class AOTCache:
+    """Bounded LRU over AOT-compiled executables, with serve-grade stats.
+
+    One entry per (engine key, graph shapes, batch size) -- before the
+    bound, a sweep over many batch sizes B (or many engine configs) grew
+    the per-DistGraph executable cache without limit.  Eviction recompiles
+    on next use, so the bound trades compile time for memory, never
+    correctness.  `hits` / `misses` / `evictions` feed `repro.serve`
+    accounting.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        if maxsize < 1:
+            raise ValueError(f"AOTCache needs maxsize >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._entries = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        try:
+            value = self._entries[key]
+        except KeyError:
+            self.misses += 1
+            return default
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def __setitem__(self, key, value):
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self):
+        return len(self._entries)
+
+    def __contains__(self, key):          # no stats: introspection only
+        return key in self._entries
+
+    def stats(self) -> dict:
+        return {"size": len(self._entries), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
 
 
 def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
@@ -61,7 +135,7 @@ class DistGraph:
     def __init__(self, topology: Topology, csc: LocalGraph2D, *, csr=None,
                  weights=None, edges=None, n: int | None = None,
                  config: BFSConfig = None, csr_weights=None,
-                 weights_host=None):
+                 weights_host=None, aot_cache_size: int = 32):
         self.topology = topology
         self.grid = topology.grid
         self.mesh = topology.mesh
@@ -77,17 +151,23 @@ class DistGraph:
         self._edges = edges if csr is None else None
         self._weights_host = weights_host if csr is None else None
         self._engines = {}           # engine key -> engine (BFS or algo)
-        self._compiled = {}          # (engine key, shapes, B) -> executable
+        # (engine key, shapes, B) -> executable; bounded LRU so a sweep over
+        # many batch sizes / engine configs cannot grow without limit (the
+        # deprecated driver shims may swap in a plain shared dict)
+        self._compiled = AOTCache(aot_cache_size)
 
     @classmethod
     def from_edges(cls, edges, config: BFSConfig = None, *, mesh=None,
-                   n: int | None = None, weights=None) -> "DistGraph":
+                   n: int | None = None, weights=None,
+                   aot_cache_size: int = 32) -> "DistGraph":
         """Plan a graph into residency: partition + place on the mesh.
 
         edges: (2, E) [src, dst] array (host or device).  n defaults to
         max vertex id + 1; the grid pads it up to a multiple of R*C.
         weights: optional (E,) per-edge values (uint8 for SSSP), laid out in
         the CSC partition order and made resident alongside the graph.
+        aot_cache_size: bound of the per-graph AOT-executable LRU (one
+        entry per (engine key, shapes, batch size); see `AOTCache`).
         """
         config = config if config is not None else BFSConfig()
         edges_np = np.asarray(edges)
@@ -108,7 +188,8 @@ class DistGraph:
         # (a direction-enabled session/algo call -> ensure_csr), so planning
         # with direction on costs nothing until bottom-up actually runs
         return cls(topology, csc, weights=w, edges=edges_np, n=n,
-                   config=config, weights_host=w_host)
+                   config=config, weights_host=w_host,
+                   aot_cache_size=aot_cache_size)
 
     def ensure_csr(self):
         """Plan the CSR twin on demand (the first direction-enabled query);
@@ -134,6 +215,16 @@ class DistGraph:
         graphs that will never open a direction-enabled session)."""
         self._edges = None
         self._weights_host = None
+
+    def aot_cache_stats(self) -> dict:
+        """Hit/miss/eviction counters of the AOT-executable cache (surfaced
+        in `repro.serve` accounting).  The deprecated driver shims share a
+        plain dict here; stats then degrade to size-only."""
+        cache = self._compiled
+        if isinstance(cache, AOTCache):
+            return cache.stats()
+        return {"size": len(cache), "maxsize": None, "hits": None,
+                "misses": None, "evictions": None}
 
     def engine_for(self, config: BFSConfig) -> DistBFSEngine:
         key = config.engine_key
@@ -175,9 +266,16 @@ class GraphSession:
             return (csr["row_off"], csr["col_idx"])
         return ()
 
-    def _compiled_for(self, B: int):
+    def compiled_for(self, B: int):
         """AOT executable for a (B,)-roots sweep, cached on the DistGraph
-        keyed by (engine key, graph array shapes, B)."""
+        keyed by (engine key, graph array shapes, B).
+
+        Public capacity surface: `repro.serve` warms its padding classes
+        through this before admitting traffic, so the first live batch of
+        each size pays no compile.  Returns the executable (callers rarely
+        invoke it directly -- `bfs` is the ergonomic path)."""
+        if B < 1:
+            raise ValueError(f"batch capacity B must be >= 1, got {B}")
         g = self.graph.csc
         key = (self.config.engine_key, g.col_off.shape, g.row_idx.shape, B)
         compiled = self.graph._compiled.get(key)
@@ -205,13 +303,14 @@ class GraphSession:
         AssertionError on any rule violation.
         """
         scalar = np.ndim(roots) == 0
+        check_vertex_ids(roots, self.graph.n, "roots")
         roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
         if roots_arr.ndim != 1:
             raise ValueError(f"roots must be a scalar or 1D batch, got "
                              f"shape {roots_arr.shape}")
         B = roots_arr.shape[0]
         g = self.graph.csc
-        outs = self._compiled_for(B)(
+        outs = self.compiled_for(B)(
             g.col_off, g.row_idx, g.nnz, *self._extra, roots_arr)
         out = self.engine.assemble_batch(outs, B)
         if validate is not False and validate is not None:
@@ -329,6 +428,7 @@ class GraphSession:
                 "sssp needs resident per-edge weights; plan the graph with "
                 "DistGraph.from_edges(edges, config, weights=w)")
         scalar = np.ndim(roots) == 0
+        check_vertex_ids(roots, self.graph.n, "roots")
         roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
         if roots_arr.ndim != 1:
             raise ValueError(f"roots must be a scalar or 1D batch, got "
@@ -360,6 +460,7 @@ class GraphSession:
         of the sources (the models/gnn sampling primitive).  Contrast
         `bfs(roots)`, which runs K independent full searches.
         """
+        check_vertex_ids(sources, self.graph.n, "sources")
         sources_arr = jnp.asarray(sources, jnp.int32)
         if sources_arr.ndim != 1 or sources_arr.shape[0] == 0:
             raise ValueError(f"sources must be a non-empty 1D array, got "

@@ -1,0 +1,114 @@
+"""Per-tenant and per-batch serve accounting (DESIGN.md sec. 12).
+
+Everything the load generator, the CI gates and a capacity planner need to
+read back out of a serving run: per-tenant query/edge/wall-time counters,
+per-batch occupancy records (live slots vs padded capacity -- the
+continuous-batching win is literally `occupancy() > 1`), and the resident
+graphs' AOT-cache hit/miss/eviction counters folded into one snapshot.
+
+Thread-safe: the scheduler worker threads and any number of client threads
+record concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Counters for one tenant (accounting unit = one query)."""
+    queries: int = 0         # admitted
+    ok: int = 0
+    failed: int = 0
+    rejected: int = 0        # refused at admission (backpressure)
+    edges_scanned: int = 0   # exact per-slot counts (CC riders count 0)
+    exec_s: float = 0.0      # summed batch-execution wall per query
+    queued_s: float = 0.0    # summed admission -> execution-start wall
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """One executed batch (or isolation replay slot)."""
+    graph: str
+    program: str
+    live: int                # real requests served
+    padded_to: int           # compiled capacity class B it ran at
+    exec_s: float
+    isolated: bool = False   # True for a post-fault singleton replay
+
+
+class ServeAccounting:
+    """Aggregates tenants, batches and cache stats for one GraphServer."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.tenants: dict[str, TenantStats] = {}
+        self.batches: list[BatchRecord] = []
+
+    def _tenant(self, tenant: str) -> TenantStats:
+        stats = self.tenants.get(tenant)
+        if stats is None:
+            stats = self.tenants[tenant] = TenantStats()
+        return stats
+
+    def record_admit(self, tenant: str) -> None:
+        with self._lock:
+            self._tenant(tenant).queries += 1
+
+    def record_reject(self, tenant: str) -> None:
+        with self._lock:
+            self._tenant(tenant).rejected += 1
+
+    def record_batch(self, record: BatchRecord) -> None:
+        with self._lock:
+            self.batches.append(record)
+
+    def record_result(self, result, edges: int = 0) -> None:
+        """Fold one fulfilled QueryResult into its tenant's counters.
+        `edges` is the request's own scanned-edge count: the exact per-slot
+        number for bfs/sssp/multi_bfs, the whole search for the first CC
+        caller in a shared run and 0 for the riders."""
+        with self._lock:
+            stats = self._tenant(result.tenant)
+            if result.ok:
+                stats.ok += 1
+                stats.edges_scanned += int(edges)
+            else:
+                stats.failed += 1
+            stats.exec_s += result.exec_s
+            stats.queued_s += result.queued_s
+
+    def occupancy(self) -> "float | None":
+        """Mean live requests per executed batch (isolation replays
+        excluded -- they are the fault path, not the steady state)."""
+        with self._lock:
+            live = [b.live for b in self.batches if not b.isolated]
+        return sum(live) / len(live) if live else None
+
+    def reset(self) -> None:
+        """Zero everything (the load generator resets between offered-load
+        points so each point's occupancy/latency stands alone)."""
+        with self._lock:
+            self.tenants = {}
+            self.batches = []
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            batches = list(self.batches)
+            tenants = {t: s.as_dict() for t, s in self.tenants.items()}
+        live = [b.live for b in batches if not b.isolated]
+        padded = [b.padded_to for b in batches if not b.isolated]
+        return {
+            "tenants": tenants,
+            "n_batches": len(live),
+            "n_isolated": sum(1 for b in batches if b.isolated),
+            "mean_occupancy": sum(live) / len(live) if live else None,
+            "mean_padded_to": sum(padded) / len(padded) if padded else None,
+            # padding waste: compiled slots that carried no live request
+            "pad_waste_frac": (1 - sum(live) / sum(padded)) if padded and
+                              sum(padded) else None,
+        }

@@ -1,0 +1,454 @@
+"""GraphServer: concurrent graph queries over resident DistGraphs
+(DESIGN.md sec. 12).
+
+One server holds N resident graphs; each graph gets one executor thread
+driving a `ContinuousBatcher`.  Clients `submit()` BFS / CC / SSSP /
+multi-source-BFS requests from any thread and block on the returned
+`QueryTicket`; the executor coalesces compatible requests (same graph,
+program, config) into the session layer's AOT-cached batched multi-root
+programs, padding to the nearest capacity class, and demuxes each slot
+back to its caller -- bit-identical to a direct `GraphSession` call by
+construction (`lax.map` searches are independent, and padding slots repeat
+a live root and are discarded).
+
+Fault path: every batch runs through `repro.runtime.fault.StepRunner`
+(retry + exponential backoff + straggler watchdog).  A batch whose retries
+are exhausted is replayed one request at a time, so a poisoned query fails
+alone -- the isolation replay -- while the server keeps serving; transient
+faults are absorbed by the retries and the request never notices.
+Admission is validated (`check_vertex_ids`) and bounded (`max_pending`
+backpressure -> `ServerSaturated`), so bad or excess requests never reach
+a compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+
+import numpy as np
+
+import jax
+
+from repro.api.session import DistGraph, GraphSession, check_vertex_ids
+from repro.core.types import BFSOutput
+from repro.runtime.fault import RetryPolicy, StepRunner, StragglerWatchdog
+from repro.serve.accounting import BatchRecord, ServeAccounting
+from repro.serve.protocol import (PROGRAMS, QueryRequest, QueryResult,
+                                  QueryTicket, pad_class, pad_classes)
+from repro.serve.scheduler import ContinuousBatcher, Entry, batch_key
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Server-wide knobs (per-query knobs ride in each request's
+    BFSConfig).
+
+    max_batch:  coalescing cap = the largest compiled roots-batch capacity
+                class (powers of two up to this are warmed/cached).
+    window_s:   max-latency admission window: a non-full batch dispatches
+                once its oldest request has waited this long.
+    max_pending: admission-queue bound per graph; beyond it `submit`
+                raises ServerSaturated (backpressure).
+    retry:      StepRunner retry/backoff policy for batch execution.
+    straggler_factor: StragglerWatchdog flag threshold (x p99).
+    """
+    max_batch: int = 8
+    window_s: float = 0.01
+    max_pending: int = 1024
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    straggler_factor: float = 3.0
+
+
+class _Outstanding:
+    """Tickets admitted but not yet fulfilled (what `drain()` waits on)."""
+
+    def __init__(self):
+        self.n = 0
+        self.cond = threading.Condition()
+
+    def inc(self):
+        with self.cond:
+            self.n += 1
+
+    def dec(self):
+        with self.cond:
+            self.n -= 1
+            self.cond.notify_all()
+
+    def wait_zero(self, timeout=None) -> bool:
+        with self.cond:
+            return self.cond.wait_for(lambda: self.n == 0, timeout)
+
+
+class _GraphWorker:
+    """One resident graph's executor: queue -> batch -> demux."""
+
+    def __init__(self, name: str, graph: DistGraph, cfg: ServeConfig,
+                 acct: ServeAccounting, outstanding: _Outstanding,
+                 exec_lock: threading.Lock):
+        self.name = name
+        self.graph = graph
+        self.cfg = cfg
+        self.acct = acct
+        self.outstanding = outstanding
+        self.exec_lock = exec_lock
+        self.batcher = ContinuousBatcher(window_s=cfg.window_s,
+                                         max_pending=cfg.max_pending)
+        self.runner = StepRunner(
+            self._step, policy=cfg.retry,
+            watchdog=StragglerWatchdog(factor=cfg.straggler_factor))
+        self._sessions: dict = {}        # resolved BFSConfig -> GraphSession
+        self._session_lock = threading.Lock()
+        self._step_no = 0
+        self._thread = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self):
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name=f"serve-{self.name}", daemon=True)
+            self._thread.start()
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+
+    def _loop(self):
+        while True:
+            item = self.batcher.next_batch()
+            if item is None:
+                return
+            self._serve_batch(*item)
+
+    # -- execution -----------------------------------------------------------
+
+    def session_for(self, config) -> GraphSession:
+        with self._session_lock:
+            sess = self._sessions.get(config)
+            if sess is None:
+                sess = GraphSession(self.graph, config)
+                self._sessions[config] = sess
+            return sess
+
+    def _step(self, state, batch):
+        """StepRunner step fn: execute ONE coalesced batch.  Raises on any
+        fault (injected or real); StepRunner owns retry/backoff."""
+        key, entries = batch
+        # per-request fault hook: a FaultInjector keyed by this request's
+        # attempt counter (see repro.serve.protocol.QueryRequest.injector)
+        for e in entries:
+            if e.req.injector is not None:
+                attempt = e.req.attempts
+                e.req.attempts += 1
+                e.req.injector.check(attempt)
+        return state, self._execute(key, entries)
+
+    def _execute(self, key, entries):
+        """Run the batch through the session layer; returns per-slot
+        (values, edges) plus the padded capacity class."""
+        sess = self.session_for(key.config)
+        program = key.program
+        if program == "bfs":
+            roots = [int(e.req.arg) for e in entries]
+            B = pad_class(len(roots), key.cap)
+            padded = roots + [roots[0]] * (B - len(roots))
+            out = sess.bfs(np.asarray(padded, np.int32))
+            jax.block_until_ready(out.level)
+            values = [
+                BFSOutput(level=out.level[s], pred=out.pred[s],
+                          n_levels=out.n_levels[s],
+                          edges_scanned=out.edges_scanned[s],
+                          directions=None if out.directions is None
+                          else out.directions[s])
+                for s in range(len(roots))]
+            edges = [v.edges_scanned for v in values]
+            return values, edges, B
+        if program == "sssp":
+            from repro.algos import SSSPOutput
+            roots = [int(e.req.arg) for e in entries]
+            B = pad_class(len(roots), key.cap)
+            padded = roots + [roots[0]] * (B - len(roots))
+            out = sess.sssp(np.asarray(padded, np.int32))
+            jax.block_until_ready(out.dist)
+            values = [
+                SSSPOutput(dist=out.dist[s], n_iters=out.n_iters[s],
+                           edges_scanned=out.edges_scanned[s],
+                           directions=None if out.directions is None
+                           else out.directions[s])
+                for s in range(len(roots))]
+            edges = [v.edges_scanned for v in values]
+            return values, edges, B
+        if program == "cc":
+            # argument-free: ONE execution, every caller gets the result;
+            # the whole search's edges are accounted to the first caller
+            out = sess.connected_components()
+            jax.block_until_ready(out.labels)
+            values = [out] * len(entries)
+            edges = [out.edges_scanned] + [0] * (len(entries) - 1)
+            return values, edges, 1
+        if program == "multi_bfs":
+            assert len(entries) == 1, "multi_bfs requests never coalesce"
+            req = entries[0].req
+            out = sess.multi_bfs(np.asarray(req.arg, np.int32), k=req.k)
+            jax.block_until_ready(out.level)
+            return [out], [out.edges_scanned], 1
+        raise ValueError(f"unknown program {program!r}")
+
+    def _serve_batch(self, key, entries):
+        # one multi-device program at a time across ALL resident graphs:
+        # concurrent executables over one shared device set interleave
+        # their collective rendezvous and deadlock, so execution
+        # serializes here (lock wait counts as queued_s, not exec_s) while
+        # admission and batch assembly stay concurrent
+        with self.exec_lock:
+            self._serve_batch_locked(key, entries)
+
+    def _serve_batch_locked(self, key, entries):
+        t_start = time.perf_counter()
+        try:
+            _, infos = self.runner.run(None, [(key, entries)],
+                                       start_step=self._step_no)
+            values, edges, padded = infos[0]
+        except Exception:
+            self._step_no += 1
+            self._isolate(key, entries)
+            return
+        self._step_no += 1
+        exec_s = time.perf_counter() - t_start
+        self.acct.record_batch(BatchRecord(
+            graph=self.name, program=key.program, live=len(entries),
+            padded_to=padded, exec_s=exec_s))
+        for e, value, n_edges in zip(entries, values, edges):
+            self._fulfil(e, ok=True, value=value, edges=n_edges,
+                         exec_s=exec_s, t_start=t_start,
+                         live=len(entries), padded=padded)
+
+    def _isolate(self, key, entries):
+        """Batch retries exhausted: replay each request alone so only the
+        poisoned one fails (transient faults were already retried)."""
+        for e in entries:
+            t0 = time.perf_counter()
+            try:
+                _, (values, edges, padded) = self._step(None, (key, [e]))
+            except Exception as exc:
+                self.acct.record_batch(BatchRecord(
+                    graph=self.name, program=key.program, live=1,
+                    padded_to=1, exec_s=time.perf_counter() - t0,
+                    isolated=True))
+                self._fulfil(e, ok=False, error=f"{type(exc).__name__}: "
+                             f"{exc}", exec_s=time.perf_counter() - t0,
+                             t_start=t0, live=1, padded=1)
+                continue
+            exec_s = time.perf_counter() - t0
+            self.acct.record_batch(BatchRecord(
+                graph=self.name, program=key.program, live=1,
+                padded_to=padded, exec_s=exec_s, isolated=True))
+            self._fulfil(e, ok=True, value=values[0], edges=edges[0],
+                         exec_s=exec_s, t_start=t0, live=1, padded=padded)
+
+    def _fulfil(self, entry, *, ok, exec_s, t_start, live, padded,
+                value=None, edges=0, error=None):
+        req = entry.req
+        result = QueryResult(
+            ok=ok, seq=req.seq, tenant=req.tenant, graph=self.name,
+            program=req.program, value=value, error=error,
+            queued_s=max(t_start - entry.t_admit, 0.0), exec_s=exec_s,
+            batch_size=live, padded_to=padded, t_done=time.perf_counter())
+        self.acct.record_result(result, edges=edges)
+        entry.ticket._fulfil(result)
+        self.outstanding.dec()
+
+
+class GraphServer:
+    """N resident graphs behind one concurrent query frontend.
+
+        server = GraphServer({"web": graph_a, "road": graph_b}).start()
+        t1 = server.bfs("web", root=17, tenant="alice")
+        t2 = server.sssp("road", root=3, tenant="bob")
+        out = t1.result(timeout=60).value        # BFSOutput, bit-identical
+        server.stop()                            #   to session.bfs(17)
+
+    Also usable as a context manager (`with GraphServer(...) as s:`).
+    Construction does not start the executors -- tests exploit that to
+    pre-fill the queue and observe full-batch coalescing.
+    """
+
+    def __init__(self, graphs: "dict[str, DistGraph] | None" = None,
+                 config: "ServeConfig | None" = None):
+        self.config = config if config is not None else ServeConfig()
+        self.accounting = ServeAccounting()
+        # serializes device execution across graph workers (they share one
+        # device set; see _GraphWorker._serve_batch)
+        self._exec_lock = threading.Lock()
+        self._outstanding = _Outstanding()
+        self._workers: dict[str, _GraphWorker] = {}
+        self._seq = itertools.count()
+        self._started = False
+        for name, graph in (graphs or {}).items():
+            self.add_graph(name, graph)
+
+    # -- residency -----------------------------------------------------------
+
+    def add_graph(self, name: str, graph: DistGraph) -> None:
+        if name in self._workers:
+            raise ValueError(f"graph {name!r} already resident")
+        worker = _GraphWorker(name, graph, self.config, self.accounting,
+                              self._outstanding, self._exec_lock)
+        self._workers[name] = worker
+        if self._started:
+            worker.start()
+
+    def graph(self, name: str) -> DistGraph:
+        return self._worker(name).graph
+
+    @property
+    def graphs(self) -> tuple:
+        return tuple(self._workers)
+
+    def _worker(self, name: str) -> _GraphWorker:
+        worker = self._workers.get(name)
+        if worker is None:
+            raise ValueError(f"no resident graph {name!r}; serving "
+                             f"{sorted(self._workers)}")
+        return worker
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "GraphServer":
+        self._started = True
+        for worker in self._workers.values():
+            worker.start()
+        return self
+
+    def stop(self) -> None:
+        """Flush the queues (remaining requests are still served), then
+        stop the executors.  The server does not restart."""
+        for worker in self._workers.values():
+            worker.batcher.close()
+        for worker in self._workers.values():
+            worker.join()
+        self._started = False
+
+    def drain(self, timeout: "float | None" = 120) -> None:
+        """Block until every admitted request has been fulfilled."""
+        if not self._outstanding.wait_zero(timeout):
+            raise TimeoutError(
+                f"{self._outstanding.n} requests still outstanding after "
+                f"{timeout}s")
+
+    def __enter__(self) -> "GraphServer":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, graph: str, program: str, arg=None, *,
+               tenant: str = "default", config=None, k: "int | None" = None,
+               injector=None) -> QueryTicket:
+        """Admit one query; returns immediately with a ticket.
+
+        Validation happens HERE, before anything reaches a compiled
+        program: unknown graph/program, out-of-range or wrong-dtype ids,
+        and SSSP on a weightless graph all raise ValueError at the caller;
+        a full queue raises ServerSaturated (backpressure).
+        """
+        worker = self._worker(graph)
+        if program not in PROGRAMS:
+            raise ValueError(f"unknown program {program!r}; serving "
+                             f"{PROGRAMS}")
+        n = worker.graph.n
+        if program in ("bfs", "sssp"):
+            if arg is None or np.ndim(arg) != 0:
+                raise ValueError(f"{program} serves one root per request; "
+                                 f"got {arg!r}")
+            check_vertex_ids(arg, n, "roots")
+            arg = int(arg)
+            if program == "sssp" and worker.graph.weights is None:
+                raise ValueError(
+                    f"sssp on graph {graph!r} needs resident per-edge "
+                    f"weights; plan it with DistGraph.from_edges(edges, "
+                    f"config, weights=w)")
+        elif program == "multi_bfs":
+            arg = np.asarray(arg)
+            if arg.ndim != 1 or arg.shape[0] == 0:
+                raise ValueError(f"multi_bfs needs a non-empty (K,) "
+                                 f"sources vector, got shape {arg.shape}")
+            check_vertex_ids(arg, n, "sources")
+            arg = arg.astype(np.int32)
+        elif arg is not None:    # cc
+            raise ValueError(f"cc is argument-free, got arg={arg!r}")
+        cfg = config if config is not None else worker.graph.config
+        req = QueryRequest(seq=next(self._seq), tenant=tenant, graph=graph,
+                           program=program, arg=arg, config=cfg, k=k,
+                           injector=injector)
+        key = batch_key(graph, program, cfg, arg, k, self.config.max_batch)
+        entry = Entry(key=key, req=req, ticket=QueryTicket(req))
+        self._outstanding.inc()
+        try:
+            worker.batcher.put(entry)
+        except Exception:
+            self._outstanding.dec()
+            self.accounting.record_reject(tenant)
+            raise
+        self.accounting.record_admit(tenant)
+        return entry.ticket
+
+    # ergonomic per-program spellings
+    def bfs(self, graph, root, **kw) -> QueryTicket:
+        return self.submit(graph, "bfs", root, **kw)
+
+    def connected_components(self, graph, **kw) -> QueryTicket:
+        return self.submit(graph, "cc", **kw)
+
+    def sssp(self, graph, root, **kw) -> QueryTicket:
+        return self.submit(graph, "sssp", root, **kw)
+
+    def multi_bfs(self, graph, sources, k=None, **kw) -> QueryTicket:
+        return self.submit(graph, "multi_bfs", sources, k=k, **kw)
+
+    # -- capacity ------------------------------------------------------------
+
+    def warm(self, programs=("bfs",), batch_classes=None) -> None:
+        """Precompile the padding capacity classes through the session
+        layer's public `compiled_for` surface so the first live batch of
+        each size pays no compile.  "sssp" warms by running root 0 at each
+        class, "cc" by one labelling; multi_bfs depends on the request's
+        (K, k) and warms on first traffic.
+        """
+        classes = batch_classes if batch_classes is not None \
+            else pad_classes(self.config.max_batch)
+        for worker in self._workers.values():
+            sess = worker.session_for(worker.graph.config)
+            for program in programs:
+                if program == "bfs":
+                    for B in classes:
+                        sess.compiled_for(B)
+                elif program == "sssp" and worker.graph.weights is not None:
+                    for B in classes:
+                        sess.sssp(np.zeros(B, np.int32))
+                elif program == "cc":
+                    sess.connected_components()
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Accounting snapshot + per-graph cache/runner/queue state."""
+        snap = self.accounting.snapshot()
+        snap["pending"] = {n: w.batcher.pending
+                           for n, w in self._workers.items()}
+        snap["aot_cache"] = {n: w.graph.aot_cache_stats()
+                             for n, w in self._workers.items()}
+        snap["runners"] = {
+            n: {"retries": w.runner.retries, "restores": w.runner.restores,
+                "straggler_flagged": len(w.runner.watchdog.flagged)}
+            for n, w in self._workers.items()}
+        snap["trace_counts"] = {
+            n: {str(key): eng.trace_count
+                for key, eng in w.graph._engines.items()}
+            for n, w in self._workers.items()}
+        return snap

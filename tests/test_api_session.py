@@ -166,6 +166,58 @@ def test_csr_planning_releases_host_edges(graph_data):
         rel.session(BFSConfig(direction=True))
 
 
+def test_aot_cache_bounded_with_stats(graph_data):
+    """Satellite (DESIGN.md sec. 12): a sweep over many batch sizes B stays
+    under the AOT-cache cap (LRU eviction), with hit/miss/eviction counters
+    surfaced for serve accounting; eviction costs a recompile, never
+    correctness."""
+    edges_np, co, ri, roots = graph_data
+    cfg = BFSConfig(grid=(1, 1), fold_codec="list", edge_chunk=512)
+    graph = DistGraph.from_edges(edges_np, cfg, n=N, aot_cache_size=3)
+    sess = graph.session()
+    for B in range(1, 7):                    # 6 distinct capacity classes
+        sess.bfs(roots[:B])
+    stats = graph.aot_cache_stats()
+    assert len(graph._compiled) <= 3, "cache exceeded its cap"
+    assert stats["size"] <= 3 and stats["maxsize"] == 3
+    assert stats["misses"] == 6 and stats["evictions"] == 3
+    # resident entry -> hit, no retrace; evicted entry -> miss + recompile,
+    # and the recompiled sweep is still bit-identical
+    traces = sess.engine.trace_count
+    out6 = sess.bfs(roots[:6])
+    assert graph.aot_cache_stats()["hits"] == stats["hits"] + 1
+    assert sess.engine.trace_count == traces
+    out1 = sess.bfs(roots[:1])               # B=1 was evicted
+    assert graph.aot_cache_stats()["misses"] == stats["misses"] + 1
+    assert (np.asarray(out1.level[0]) == np.asarray(out6.level[0])).all()
+
+
+def test_roots_validated_at_session_boundary(graph_data):
+    """Satellite (DESIGN.md sec. 12): bad roots/sources raise clear
+    ValueErrors naming n and the expected dtype instead of opaque JAX
+    errors mid-trace (serving rejects bad requests before they reach a
+    compiled program)."""
+    edges_np = graph_data[0]
+    sess = _session(edges_np)
+    with pytest.raises(ValueError, match=f"n = {N}"):
+        sess.bfs(N)
+    with pytest.raises(ValueError, match="out-of-range"):
+        sess.bfs(np.array([0, -3]))
+    with pytest.raises(ValueError, match="integer"):
+        sess.bfs(1.5)
+    with pytest.raises(ValueError, match="int32"):
+        sess.bfs(np.array([0.0, 1.0]))
+    with pytest.raises(ValueError, match=f"n = {N}"):
+        sess.multi_bfs([0, N + 7])
+    with pytest.raises(ValueError, match="integer"):
+        sess.multi_bfs(np.array([0.5]))
+    cfg = BFSConfig(grid=(1, 1), edge_chunk=512)
+    w = (np.arange(edges_np.shape[1]) % 200 + 1).astype(np.uint8)
+    wsess = DistGraph.from_edges(edges_np, cfg, n=N, weights=w).session()
+    with pytest.raises(ValueError, match=f"n = {N}"):
+        wsess.sssp(np.array([1, N]))
+
+
 def test_session_rejects_mismatched_grid(graph_data):
     edges_np = graph_data[0]
     graph = DistGraph.from_edges(

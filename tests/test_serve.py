@@ -1,0 +1,370 @@
+"""Serve-layer coverage (DESIGN.md sec. 12).
+
+  * coalescing correctness: interleaved requests across programs/codecs,
+    served through the continuous-batching scheduler with padding, return
+    bit-identical results to direct `GraphSession` calls (deterministic
+    matrix + a hypothesis property over random interleavings);
+  * trace discipline: engine `trace_count` proves no recompiles beyond the
+    first batch per (program, padded capacity class);
+  * fault path: a transient fault is absorbed by StepRunner retries; a
+    poisoned request fails ALONE via the isolation replay while the server
+    keeps serving;
+  * admission: validation rejects bad requests before they reach a
+    compiled program; `max_pending` backpressure raises ServerSaturated;
+  * CC dedup-coalescing: concurrent CC callers share ONE execution;
+  * scheduler unit behavior (window dispatch, pad classes).
+
+Multi-device serving runs in the bench harness (`benchmarks/run.py
+--serve`, CI serve-smoke).
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api import BFSConfig, DistGraph
+from repro.runtime.fault import FaultInjector, RetryPolicy
+from repro.serve import (BatchKey, ContinuousBatcher, Entry, GraphServer,
+                         QueryRequest, QueryTicket, ServeConfig,
+                         ServerSaturated, pad_class, pad_classes)
+
+SCALE, EF = 7, 8
+N = 1 << SCALE
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    """Two resident graphs: 'a' unweighted, 'b' weighted (SSSP-capable)."""
+    from repro.graphgen import rmat_edges
+
+    edges = np.asarray(rmat_edges(jax.random.key(0), SCALE, EF))
+    w = (np.abs(edges[0] * 31 + edges[1]) % 255 + 1).astype(np.uint8)
+    cfg = BFSConfig(grid=(1, 1), edge_chunk=256)
+    ga = DistGraph.from_edges(edges, cfg, n=N)
+    gb = DistGraph.from_edges(edges, cfg, n=N, weights=w)
+    deg = np.bincount(edges[0], minlength=N)
+    roots = np.random.default_rng(1).choice(np.flatnonzero(deg > 0), 16,
+                                            replace=False)
+    return ga, gb, roots
+
+
+def _server(ga, gb, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("window_s", 0.01)
+    return GraphServer({"a": ga, "b": gb}, ServeConfig(**kw))
+
+
+def _value(ticket, timeout=120):
+    res = ticket.result(timeout)
+    assert res.ok, f"query failed: {res.error}"
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Coalescing correctness: served == direct GraphSession, bit-identical
+# ---------------------------------------------------------------------------
+
+def test_mixed_programs_bitexact(graphs):
+    """BFS / CC / SSSP / multi-BFS on two resident graphs, interleaved,
+    each result bit-identical to the direct session call."""
+    ga, gb, roots = graphs
+    with _server(ga, gb) as srv:
+        tickets = []
+        for i, r in enumerate(roots[:6]):
+            tickets.append(("bfs", r, srv.bfs("a", int(r), tenant=f"t{i % 2}")))
+            if i % 2 == 0:
+                tickets.append(("sssp", r, srv.sssp("b", int(r))))
+            if i % 3 == 0:
+                tickets.append(("cc", None, srv.connected_components("a")))
+        tickets.append(("mb", None,
+                        srv.multi_bfs("a", roots[:3].astype(int), k=2)))
+        srv.drain()
+    sa, sb = ga.session(), gb.session()
+    cc = sa.connected_components()
+    mb = sa.multi_bfs(roots[:3].astype(int), k=2)
+    for kind, r, t in tickets:
+        out = _value(t).value
+        if kind == "bfs":
+            direct = sa.bfs(int(r))
+            assert (np.asarray(out.level) == np.asarray(direct.level)).all()
+            assert (np.asarray(out.pred) == np.asarray(direct.pred)).all()
+            assert int(out.n_levels) == int(direct.n_levels)
+            assert out.edges_scanned == direct.edges_scanned
+        elif kind == "sssp":
+            direct = sb.sssp(int(r))
+            assert (np.asarray(out.dist) == np.asarray(direct.dist)).all()
+            assert out.edges_scanned == direct.edges_scanned
+        elif kind == "cc":
+            assert (np.asarray(out.labels) == np.asarray(cc.labels)).all()
+        else:
+            assert (np.asarray(out.level) == np.asarray(mb.level)).all()
+            assert (np.asarray(out.src) == np.asarray(mb.src)).all()
+
+
+def test_full_batch_coalesces_and_traces_once(graphs):
+    """max_batch pre-queued BFS roots run as ONE padded batch through ONE
+    trace; a second identical wave recompiles nothing."""
+    ga, gb, roots = graphs
+    srv = _server(ga, gb)                      # NOT started: queue fills
+    tickets = [srv.bfs("a", int(r)) for r in roots[:4]]
+    srv.start()
+    srv.drain()
+    engine = ga.session().engine
+    first_traces = engine.trace_count
+    for t in tickets:
+        res = _value(t)
+        assert res.batch_size == 4 and res.padded_to == 4
+    occ = srv.accounting.occupancy()
+    assert occ == 4.0, f"expected full occupancy, got {occ}"
+    # second wave: same (program, B class) -> zero new traces
+    tickets = [srv.bfs("a", int(r)) for r in roots[4:8]]
+    srv.drain()
+    for t in tickets:
+        _value(t)
+    assert engine.trace_count == first_traces, \
+        "repeat batch of the same capacity class must not retrace"
+    srv.stop()
+
+
+def test_padding_demux_discards_pad_slots(graphs):
+    """A 3-live batch pads to class 4; every live slot demuxes to its own
+    root's result (padding repeats root 0 and is discarded)."""
+    ga, gb, roots = graphs
+    srv = _server(ga, gb)
+    tickets = [srv.bfs("a", int(r)) for r in roots[:3]]
+    srv.start()
+    srv.drain()
+    sess = ga.session()
+    for t, r in zip(tickets, roots[:3]):
+        res = _value(t)
+        assert res.batch_size == 3 and res.padded_to == 4
+        assert (np.asarray(res.value.level)
+                == np.asarray(sess.bfs(int(r)).level)).all()
+    srv.stop()
+
+
+def test_cc_requests_share_one_run(graphs):
+    """Argument-free CC coalesces by dedup: K callers, ONE execution."""
+    ga, gb, roots = graphs
+    srv = _server(ga, gb)
+    tickets = [srv.connected_components("a", tenant=f"t{i}")
+               for i in range(3)]
+    srv.start()
+    srv.drain()
+    direct = ga.session().connected_components()
+    for t in tickets:
+        res = _value(t)
+        assert res.batch_size == 3
+        assert (np.asarray(res.value.labels)
+                == np.asarray(direct.labels)).all()
+    batches = [b for b in srv.accounting.batches if b.program == "cc"]
+    assert len(batches) == 1 and batches[0].live == 3
+    srv.stop()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["bfs-list", "bfs-bitmap", "cc"]),
+                          st.integers(0, 15)),
+                min_size=1, max_size=10))
+def test_interleaved_requests_property(graphs, reqs):
+    """Property (satellite): K interleaved requests across programs AND
+    codecs, served with padding, are bit-identical to direct session
+    calls, and trace counts prove no recompiles beyond the first batch
+    per (program, padded B)."""
+    ga, gb, roots = graphs
+    cfg_bitmap = BFSConfig(grid=(1, 1), edge_chunk=256, fold_codec="bitmap")
+    srv = _server(ga, gb)
+    tickets = []
+    for kind, ridx in reqs:
+        root = int(roots[ridx])
+        if kind == "bfs-list":
+            tickets.append((kind, root, srv.bfs("a", root)))
+        elif kind == "bfs-bitmap":
+            tickets.append((kind, root,
+                            srv.bfs("a", root, config=cfg_bitmap)))
+        else:
+            tickets.append((kind, None, srv.connected_components("a")))
+    srv.start()
+    srv.drain()
+    srv.stop()
+    sess_list = ga.session()
+    sess_bitmap = ga.session(cfg_bitmap)
+    cc = sess_list.connected_components()
+    for kind, root, t in tickets:
+        out = _value(t).value
+        if kind == "cc":
+            assert (np.asarray(out.labels) == np.asarray(cc.labels)).all()
+        else:
+            sess = sess_list if kind == "bfs-list" else sess_bitmap
+            direct = sess.bfs(root)
+            assert (np.asarray(out.level) == np.asarray(direct.level)).all()
+            assert (np.asarray(out.pred) == np.asarray(direct.pred)).all()
+            assert out.edges_scanned == direct.edges_scanned
+    # no recompiles beyond the first batch per (program, padded B): every
+    # engine's trace count is bounded by its distinct padded capacity
+    # classes (the direct comparison sessions share these engines/caches)
+    classes = set(pad_classes(srv.config.max_batch)) | {1}
+    for key, eng in ga._engines.items():
+        assert eng.trace_count <= len(classes) + 1, \
+            f"engine {key} traced {eng.trace_count}x"
+
+
+# ---------------------------------------------------------------------------
+# Fault path
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_retried_invisibly(graphs):
+    """A fault on the first attempt is absorbed by StepRunner retries; the
+    request succeeds and the retry is visible in runner stats."""
+    ga, gb, roots = graphs
+    with _server(ga, gb, retry=RetryPolicy(max_retries=2,
+                                           backoff_s=0.001)) as srv:
+        t = srv.bfs("a", int(roots[0]),
+                    injector=FaultInjector({0: RuntimeError}))
+        res = _value(t)
+        assert (np.asarray(res.value.level)
+                == np.asarray(ga.session().bfs(int(roots[0])).level)).all()
+        assert srv.stats()["runners"]["a"]["retries"] >= 1
+
+
+def test_poisoned_request_fails_alone(graphs):
+    """Acceptance: an injected mid-query fault fails ONLY its own request
+    (isolation replay); batchmates succeed and the server keeps serving."""
+    ga, gb, roots = graphs
+    srv = _server(ga, gb, retry=RetryPolicy(max_retries=1, backoff_s=0.001))
+    poisoned = FaultInjector({i: RuntimeError for i in range(16)})
+    good = [srv.bfs("a", int(r)) for r in roots[:2]]
+    bad = srv.bfs("a", int(roots[2]), injector=poisoned)
+    more = [srv.bfs("a", int(r)) for r in roots[3:4]]
+    srv.start()
+    srv.drain()
+    sess = ga.session()
+    for t, r in zip(good + more, list(roots[:2]) + list(roots[3:4])):
+        res = _value(t)
+        assert (np.asarray(res.value.level)
+                == np.asarray(sess.bfs(int(r)).level)).all()
+    res = bad.result(120)
+    assert not res.ok and "RuntimeError" in res.error
+    assert "injected" in res.error
+    # the server keeps serving after the fault
+    after = srv.bfs("a", int(roots[5]))
+    srv.drain()
+    assert _value(after).ok
+    stats = srv.stats()
+    assert stats["tenants"]["default"]["failed"] == 1
+    assert stats["n_isolated"] >= 1
+    srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Admission: validation + backpressure
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_before_compiled_program(graphs):
+    ga, gb, roots = graphs
+    srv = _server(ga, gb)
+    with pytest.raises(ValueError, match="no resident graph"):
+        srv.bfs("nope", 0)
+    with pytest.raises(ValueError, match="unknown program"):
+        srv.submit("a", "pagerank", 0)
+    with pytest.raises(ValueError, match=f"n = {N}"):
+        srv.bfs("a", N + 3)
+    with pytest.raises(ValueError, match="integer"):
+        srv.bfs("a", 1.5)
+    with pytest.raises(ValueError, match="one root per request"):
+        srv.bfs("a", np.array([1, 2]))
+    with pytest.raises(ValueError, match="weights"):
+        srv.sssp("a", 0)              # graph 'a' is weightless
+    with pytest.raises(ValueError, match=f"n = {N}"):
+        srv.multi_bfs("a", [0, N])
+    with pytest.raises(ValueError, match="argument-free"):
+        srv.submit("a", "cc", 5)
+    assert srv.accounting.snapshot()["tenants"] == {}, \
+        "rejected requests must not be admitted"
+
+
+def test_backpressure_raises_server_saturated(graphs):
+    ga, gb, roots = graphs
+    srv = _server(ga, gb, max_pending=2)     # not started: queue holds
+    srv.bfs("a", int(roots[0]))
+    srv.bfs("a", int(roots[1]))
+    with pytest.raises(ServerSaturated, match="max_pending"):
+        srv.bfs("a", int(roots[2]))
+    assert srv.stats()["tenants"]["default"]["rejected"] == 1
+    srv.start()
+    srv.drain()
+    srv.stop()
+
+
+def test_stop_flushes_pending_requests(graphs):
+    """stop() on a started server serves what was admitted, then exits."""
+    ga, gb, roots = graphs
+    srv = _server(ga, gb)
+    tickets = [srv.bfs("a", int(r)) for r in roots[:2]]
+    srv.start()
+    srv.stop()
+    for t in tickets:
+        assert _value(t, timeout=10).ok
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / protocol units (no device work)
+# ---------------------------------------------------------------------------
+
+def _entry(key, seq=0):
+    req = QueryRequest(seq=seq, tenant="t", graph=key.graph,
+                       program=key.program, arg=0, config=key.config)
+    return Entry(key=key, req=req, ticket=QueryTicket(req))
+
+
+def test_pad_classes():
+    assert pad_class(1, 8) == 1 and pad_class(3, 8) == 4
+    assert pad_class(5, 8) == 8 and pad_class(5, 6) == 6
+    assert pad_classes(8) == (1, 2, 4, 8)
+    assert pad_classes(6) == (1, 2, 4, 6)
+    with pytest.raises(ValueError):
+        pad_class(0, 8)
+
+
+def test_batcher_dispatches_full_batch_immediately():
+    b = ContinuousBatcher(window_s=60.0, max_pending=16)
+    key = BatchKey("g", "bfs", None, (), cap=2)
+    for i in range(3):
+        b.put(_entry(key, i))
+    t0 = time.perf_counter()
+    got_key, entries = b.next_batch()
+    assert time.perf_counter() - t0 < 1.0, "full batch must not wait window"
+    assert got_key == key and len(entries) == 2
+    assert [e.req.seq for e in entries] == [0, 1], "FIFO order"
+    b.close()
+    _, rest = b.next_batch()            # flush: window not waited out
+    assert [e.req.seq for e in rest] == [2]
+    assert b.next_batch() is None
+
+
+def test_batcher_window_dispatches_partial_batch():
+    b = ContinuousBatcher(window_s=0.05, max_pending=16)
+    key = BatchKey("g", "bfs", None, (), cap=8)
+    b.put(_entry(key))
+    t0 = time.perf_counter()
+    _, entries = b.next_batch()
+    waited = time.perf_counter() - t0
+    assert len(entries) == 1
+    assert waited >= 0.03, f"partial batch dispatched too early ({waited})"
+    b.close()
+
+
+def test_batcher_wakes_blocked_consumer():
+    b = ContinuousBatcher(window_s=0.01, max_pending=16)
+    key = BatchKey("g", "bfs", None, (), cap=8)
+    out = []
+    consumer = threading.Thread(target=lambda: out.append(b.next_batch()))
+    consumer.start()
+    time.sleep(0.05)
+    b.put(_entry(key, 7))
+    consumer.join(timeout=5)
+    assert not consumer.is_alive() and out[0][1][0].req.seq == 7
+    b.close()
