@@ -1,11 +1,18 @@
-"""Fig. 5/6 analog: per-LEVEL four-phase breakdown of a real BFS (expand
-exchange, frontier expansion, fold exchange, frontier update) plus the fold
-wire-byte accounting per codec, before/after the single-message fold
-overhaul (DESIGN.md sec. 10).
+"""Fig. 5/6 analog: per-LEVEL traversal breakdown of a real BFS from the
+in-program telemetry channel (DESIGN.md sec. 13) plus the fold wire-byte
+accounting per codec, before/after the single-message fold overhaul
+(DESIGN.md sec. 10).
+
+Since the telemetry subsystem the per-level numbers are read from ONE
+traced production search (`LevelTrace`: frontier, scanned edges, folded
+entries, fold wire bytes, direction) instead of a host-side phase replay --
+the worker cross-checks every channel against an independent recomputation
+(np.bincount of the output levels, the codec's static wire formula, the
+64-bit edges_scanned total) and this suite asserts those agreement rows.
 
 Emits two CSVs:
-  fig5_6_breakdown  scale,R,C,level,frontier,expand_s,scan_s,fold_s,
-                    update_s,transfer_frac     (one row per level)
+  fig5_6_breakdown  scale,R,C,level,frontier,scanned,folded,wire_bytes,dir
+                    (one row per level, list codec)
   fold_wire         scale,R,C,codec,level,folded,msgs_before,msgs_after,
                     set_bytes_before,set_bytes_after,value_bytes_dense,
                     value_bytes_sent,edges     (one row per codec x level)
@@ -13,7 +20,11 @@ Emits two CSVs:
 `*_before` / `*_dense` price the PR-4 layout (payload + separate count
 collective, dense (C, S) int32 value channel); `*_after` / `*_sent` the
 fused single message (header-word counts, front-packed count-proportional
-value channel) using each level's measured fold counts.
+value channel).  `set_bytes_after` is the trace's OWN wire channel (P x the
+codec's static frame -- the worker asserts the equality); `value_bytes_sent`
+follows from the per-level folded counts by linearity of
+`wire_bytes_values_sent`: sum over P devices of (wb + 4*folded_dev)
+= P*wb + 4*folded_global.
 """
 from benchmarks.common import bench_scale, emit, run_worker, smoke_mode
 
@@ -26,36 +37,48 @@ MSGS_VALUE_BEFORE = {"list": 3, "bitmap": 2, "delta": 3}
 def main():
     grids = [(2, 2, bench_scale(10))] if smoke_mode() \
         else [(2, 2, bench_scale(14)), (2, 4, bench_scale(15))]
-    phase_rows = [("scale", "R", "C", "level", "frontier", "expand_s",
-                   "scan_s", "fold_s", "update_s", "transfer_frac")]
+    phase_rows = [("scale", "R", "C", "level", "frontier", "scanned",
+                   "folded", "wire_bytes", "dir")]
     wire_rows = [("scale", "R", "C", "codec", "level", "folded",
                   "set_msgs_before", "value_msgs_before", "msgs_after",
                   "set_bytes_before", "set_bytes_after", "value_bytes_dense",
                   "value_bytes_sent", "edges")]
     for (r, c, scale) in grids:
-        out = run_worker("phases_worker.py", r, c, scale, 16).strip()
-        levels, wires, edges = [], [], None
+        out = run_worker("trace_worker.py", r, c, scale, 16).strip()
+        P = r * c
+        traces, static, agree, edges = {}, {}, {}, None
         for line in out.splitlines():
             parts = line.strip().split(",")
-            if parts[0] == "P":
-                levels.append(parts[1:])
-            elif parts[0] == "B":
-                wires.append(parts[1:])
+            if parts[0] == "T":
+                traces.setdefault(parts[1], []).append(
+                    [int(x) for x in parts[2:]])
+            elif parts[0] == "W":
+                static[parts[1]] = (int(parts[2]), int(parts[3]))
+            elif parts[0] == "A":
+                agree[parts[1]] = parts[2:]
+            elif parts[0] == "D":
+                agree["direction"] = parts[1:]
             elif parts[0] == "M":
                 edges = int(parts[2])
-        if not levels or edges is None:
+        if not traces or edges is None:
             raise AssertionError(
-                f"phases_worker {r}x{c} produced no parseable rows")
-        for s, R, C, lvl, frontier, e, sc, f, u in levels:
-            comp = float(sc) + float(u)
-            tr = float(e) + float(f)
+                f"trace_worker {r}x{c} produced no parseable rows")
+        # the worker's trace-vs-recomputation agreement rows are a gate
+        bad = {k: v for k, v in agree.items() if not all(
+            x == "True" for x in v)}
+        if bad:
+            raise AssertionError(f"trace disagrees with independent "
+                                 f"recomputation at {r}x{c}: {bad}")
+        for lvl, frontier, scanned, folded, wire, d in traces["list"]:
             phase_rows.append(
-                (s, R, C, lvl, frontier, e, sc, f, u,
-                 f"{tr / (comp + tr):.3f}"))
-        for codec, lvl, folded, sb, sa, vb, va in wires:
-            wire_rows.append(
-                (scale, r, c, codec, lvl, folded, MSGS_BEFORE[codec],
-                 MSGS_VALUE_BEFORE[codec], 1, sb, sa, vb, va, edges))
+                (scale, r, c, lvl, frontier, scanned, folded, wire, d))
+        for codec, rows in traces.items():
+            wb, wbv = static[codec]
+            for lvl, frontier, scanned, folded, wire, d in rows:
+                wire_rows.append(
+                    (scale, r, c, codec, lvl, folded, MSGS_BEFORE[codec],
+                     MSGS_VALUE_BEFORE[codec], 1, wb * P, wire, wbv * P,
+                     wb * P + 4 * folded, edges))
     emit(phase_rows, "fig5_6_breakdown")
     emit(wire_rows, "fold_wire")
     # the fused value channel must undercut the dense baseline (the BENCH

@@ -1,0 +1,99 @@
+"""Telemetry contract suite -> bench_out/BENCH_obs.json (DESIGN.md sec. 13).
+
+Drives `workers/trace_worker.py` in obs mode and aggregates the evidence
+the obs-smoke CI job gates on:
+
+  agreement    every LevelTrace channel matches an independent
+               recomputation (frontier vs np.bincount of the output levels,
+               wire bytes vs the codec's static formula x P, scanned vs the
+               64-bit edges_scanned total, trace.direction vs the engine's
+               own directions output)
+  bitexact     telemetry on vs off produce bit-identical level/pred arrays
+               per codec (checksummed in the worker)
+  trace_counts per codec: engine.trace_count after the first batched sweep
+               vs after a repeat -- equal counts prove telemetry costs no
+               retrace on cache hits
+  overhead     median over alternating traced/untraced batched sweeps;
+               `overhead_frac` = (on - off) / off clipped at 0.  The gate
+               allows 5% plus a small absolute epsilon for timer noise --
+               the ONLY timing-derived gate in CI, and it is a ratio of
+               the same program on the same host, not a wall-clock floor.
+  spans        serve request traces tile queue/coalesce/execute/demux in
+               lifecycle order, the JSONL event log recorded the batches
+               (uploaded as a CI artifact), the Prometheus text renders.
+"""
+import os
+
+from benchmarks import common
+from benchmarks.common import bench_scale, emit_json, run_worker, smoke_mode
+
+EVENTS_NAME = "obs_events.jsonl"
+
+
+def main():
+    r, c = 2, 2
+    scale = bench_scale(10 if smoke_mode() else 12)
+    events_path = os.path.join(common.OUT_DIR, EVENTS_NAME)
+    if os.path.exists(events_path):
+        os.remove(events_path)
+    out = run_worker("trace_worker.py", r, c, scale, 16, "obs",
+                     events_path).strip()
+
+    agreement, checksums, trace_counts, reps, spans = {}, {}, {}, [], None
+    dir_ok = None
+    for line in out.splitlines():
+        parts = line.strip().split(",")
+        if parts[0] == "A":
+            agreement[parts[1]] = {
+                "frontier_ok": parts[2] == "True",
+                "wire_ok": parts[3] == "True",
+                "scanned_ok": parts[4] == "True"}
+        elif parts[0] == "D":
+            dir_ok = parts[1] == "True"
+        elif parts[0] == "E":
+            checksums.setdefault(parts[1], {})[parts[2]] = \
+                (int(parts[3]), int(parts[4]))
+        elif parts[0] == "C":
+            trace_counts[parts[1]] = {
+                "after_first_sweep": int(parts[2]),
+                "after_second_sweep": int(parts[3])}
+        elif parts[0] == "O":
+            reps.append((float(parts[2]), float(parts[3])))
+        elif parts[0] == "S":
+            spans = {"ok": parts[1] == "True", "n_events": int(parts[2]),
+                     "prometheus_ok": parts[3] == "True"}
+    if not (agreement and checksums and trace_counts and reps and spans):
+        raise AssertionError("trace_worker obs mode produced an incomplete "
+                             f"row set:\n{out}")
+
+    def median(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    on_med = median([t for t, _ in reps])
+    off_med = median([t for _, t in reps])
+    result = {
+        "schema": "BENCH_obs/v1",
+        "grid": f"{r}x{c}",
+        "scale": scale,
+        "agreement": agreement,
+        "direction_agreement": dir_ok,
+        "bitexact": {codec: cs.get("on") == cs.get("off")
+                     for codec, cs in checksums.items()},
+        "trace_counts": trace_counts,
+        "overhead": {
+            "reps": len(reps),
+            "on_median_s": on_med,
+            "off_median_s": off_med,
+            "overhead_frac": max(0.0, on_med / off_med - 1.0)
+            if off_med else None,
+        },
+        "spans": spans,
+        "events_artifact": EVENTS_NAME,
+    }
+    path = emit_json(result, "BENCH_obs")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

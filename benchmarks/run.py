@@ -6,8 +6,10 @@ expand times per expand path) is trackable across PRs.
 
   fig3   weak scaling (TEPS vs devices, scale/device fixed)
   fig4   strong scaling (fixed graph; minimal 1x1-vs-2x2 sweep in smoke)
-  fig5/6 per-level four-phase breakdown + fold wire bytes before/after the
-         single-message overhaul per codec (DESIGN.md sec. 10)
+  fig5/6 per-level traversal counters from the in-program telemetry trace
+         (frontier/scanned/folded/wire/direction; DESIGN.md sec. 13) + fold
+         wire bytes before/after the single-message overhaul per codec
+         (DESIGN.md sec. 10)
   fig7   1D baseline (degenerate 1xP grid of the shared engine) vs 2D
   fold   list/bitmap/delta fold codec head-to-head (+ equality check)
   fig8/t2 atomic-style vs sort/compact expansion
@@ -26,6 +28,12 @@ CLI:
               occupancy > 1 at the highest offered load, and the fault
               drill failing exactly the poisoned request -- never
               wall-clock
+  --obs       run ONLY the telemetry contract suite (benchmarks/obs_bench.py)
+              and gate its bench_out/BENCH_obs.json: schema, trace-vs-
+              recomputation agreement per codec, telemetry on/off
+              bit-identity, no-retrace trace counts, serve spans + events,
+              and traced-sweep overhead <= 5% (a same-host ratio, the only
+              timing-derived gate; never a wall-clock floor)
   --scale N   force every honoring suite to graph scale N (REPRO_BENCH_SCALE)
   --smoke     reduced CI suite list (fold codecs on 2x2 simulated devices,
               strong-scaling mini sweep, per-level breakdown + fold wire
@@ -92,14 +100,14 @@ def write_bench_json() -> None:
             "lvl_sum": r.get("lvl_sum"), "pred_sum": r.get("pred_sum"),
             "scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}'}
 
-    # per-LEVEL expand/scan/fold/update wall times of a real search (v5:
-    # the long-empty phases field, fed by benchmarks/bfs_breakdown.py)
+    # per-LEVEL traversal counters of a real search (v7: read from the
+    # in-program LevelTrace -- work counters, not wall times; fed by
+    # benchmarks/bfs_breakdown.py through workers/trace_worker.py)
     phases = [
         {"scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}',
          "level": _f(r.get("level")), "frontier": _f(r.get("frontier")),
-         "expand_s": _f(r.get("expand_s")), "scan_s": _f(r.get("scan_s")),
-         "fold_s": _f(r.get("fold_s")), "update_s": _f(r.get("update_s")),
-         "transfer_frac": _f(r.get("transfer_frac"))}
+         "scanned": _f(r.get("scanned")), "folded": _f(r.get("folded")),
+         "wire_bytes": _f(r.get("wire_bytes")), "dir": _f(r.get("dir"))}
         for r in read_csv("fig5_6_breakdown")]
 
     # fold wire-byte accounting per codec, summed over the measured levels:
@@ -157,10 +165,10 @@ def write_bench_json() -> None:
         for r in read_csv("direction_levels")]
 
     out = {
-        "schema": "BENCH_bfs/v6",   # v6: + direction (per-mode search times
-                                    # with bit-equality checksums, adaptive
-                                    # per-level decisions, bottom-up phase
-                                    # times); v5: per-LEVEL phases+fold_wire
+        "schema": "BENCH_bfs/v7",   # v7: phases = in-program LevelTrace
+                                    # counters (frontier/scanned/folded/
+                                    # wire_bytes/dir) instead of host-replay
+                                    # wall times; v6: + direction
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),
@@ -246,6 +254,74 @@ def validate_serve() -> list:
     return errors
 
 
+def validate_obs() -> list:
+    """Gates over bench_out/BENCH_obs.json (the --obs mode artifact).
+
+    Correctness gates: trace-vs-recomputation agreement for every codec,
+    telemetry on/off bit-identity, the no-retrace trace-count proof, serve
+    spans + a non-empty event log, a rendering Prometheus endpoint -- plus
+    the one timing-DERIVED gate in CI: the traced batched sweep may cost at
+    most 5% over the untraced one (medians of alternating repeats, with a
+    10ms absolute epsilon for timer noise).  That is a same-host ratio of
+    the same program, not a wall-clock floor.
+    """
+    errors = []
+    p = os.path.join(common.OUT_DIR, "BENCH_obs.json")
+    if not os.path.exists(p):
+        return ["BENCH_obs.json missing"]
+    try:
+        with open(p) as f:
+            obs = json.load(f)
+    except json.JSONDecodeError as e:
+        return [f"BENCH_obs.json: invalid JSON ({e})"]
+    if obs.get("schema") != "BENCH_obs/v1":
+        errors.append(f"BENCH_obs schema {obs.get('schema')!r} != "
+                      f"'BENCH_obs/v1'")
+    agreement = obs.get("agreement") or {}
+    if len(agreement) < 3:
+        errors.append(f"BENCH_obs: agreement covers {len(agreement)} codecs "
+                      f"< 3")
+    for codec, checks in agreement.items():
+        for name, ok in checks.items():
+            if ok is not True:
+                errors.append(f"BENCH_obs: {codec} trace {name} != true "
+                              f"(trace disagrees with recomputation)")
+    if obs.get("direction_agreement") is not True:
+        errors.append("BENCH_obs: trace.direction disagrees with the "
+                      "engine's directions output")
+    bitexact = obs.get("bitexact") or {}
+    if len(bitexact) < 3:
+        errors.append(f"BENCH_obs: bitexact covers {len(bitexact)} codecs "
+                      f"< 3")
+    for codec, ok in bitexact.items():
+        if ok is not True:
+            errors.append(f"BENCH_obs: telemetry on/off NOT bit-identical "
+                          f"for codec {codec}")
+    for codec, tc in (obs.get("trace_counts") or {}).items():
+        if tc.get("after_first_sweep") != tc.get("after_second_sweep"):
+            errors.append(f"BENCH_obs: {codec} retraced on a repeat sweep "
+                          f"({tc})")
+    if not obs.get("trace_counts"):
+        errors.append("BENCH_obs: trace_counts section empty")
+    ov = obs.get("overhead") or {}
+    frac, on, off = (ov.get("overhead_frac"), ov.get("on_median_s"),
+                     ov.get("off_median_s"))
+    if frac is None or on is None or off is None:
+        errors.append(f"BENCH_obs: overhead section incomplete ({ov})")
+    elif frac > 0.05 and (on - off) > 0.010:
+        errors.append(f"BENCH_obs: traced sweep overhead {frac:.1%} > 5% "
+                      f"(on={on:.4f}s off={off:.4f}s)")
+    spans = obs.get("spans") or {}
+    if spans.get("ok") is not True:
+        errors.append("BENCH_obs: serve request-trace spans malformed")
+    if not spans.get("n_events"):
+        errors.append("BENCH_obs: serve event log recorded no events")
+    if spans.get("prometheus_ok") is not True:
+        errors.append("BENCH_obs: Prometheus exposition missing expected "
+                      "series")
+    return errors
+
+
 def validate_bench(smoke: bool) -> list:
     """Schema + correctness-counter gates over the emitted JSON artifacts.
 
@@ -271,9 +347,9 @@ def validate_bench(smoke: bool) -> list:
     if bfs is None:
         errors.append("BENCH_bfs.json missing")
     else:
-        if bfs.get("schema") != "BENCH_bfs/v6":
+        if bfs.get("schema") != "BENCH_bfs/v7":
             errors.append(f"BENCH_bfs schema {bfs.get('schema')!r} != "
-                          f"'BENCH_bfs/v6'")
+                          f"'BENCH_bfs/v7'")
         for key in ("teps", "fold_codecs", "codecs_agree", "phases",
                     "fold_wire", "expand_paths", "expand_paths_agree",
                     "direction", "direction_levels", "direction_agree"):
@@ -307,6 +383,11 @@ def validate_bench(smoke: bool) -> list:
                 errors.append("smoke: fold_codecs section empty")
             if not bfs.get("phases"):
                 errors.append("smoke: phases section empty")
+            for row in bfs.get("phases") or []:
+                if not (row.get("wire_bytes") or 0) > 0:
+                    errors.append(f"smoke: phases row without trace wire "
+                                  f"bytes: {row}")
+                    break
             if not bfs.get("fold_wire"):
                 errors.append("smoke: fold_wire section empty")
             if not any(c.get("codec") == "bitmap"
@@ -356,11 +437,32 @@ def main(argv=None) -> None:
     ap.add_argument("--serve", action="store_true",
                     help="run only the serve-load suite and gate "
                          "BENCH_serve.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="run only the telemetry contract suite and gate "
+                         "BENCH_obs.json")
     args = ap.parse_args(argv)
     if args.scale is not None:
         os.environ["REPRO_BENCH_SCALE"] = str(args.scale)
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    if args.obs:
+        from benchmarks import obs_bench
+        print("\n=== obs_bench ===")
+        t0 = time.time()
+        try:
+            obs_bench.main()
+            print(f"--- obs_bench done in {time.time() - t0:.0f}s")
+        except Exception:
+            print(f"--- obs_bench FAILED:\n{traceback.format_exc()[-1500:]}")
+            sys.exit(1)
+        errors = validate_obs()
+        for e in errors:
+            print(f"VALIDATION: {e}")
+        if errors:
+            sys.exit(1)
+        print("obs validation OK")
+        return
 
     if args.serve:
         from benchmarks import serve_load

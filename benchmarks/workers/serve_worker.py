@@ -188,7 +188,7 @@ ok_after = sum(1 for i, t in enumerate(after)
                if t.result(timeout=60).ok
                and check("web", "bfs", int(roots[i]),
                          t.result(timeout=60).value))
-stats = server.stats()
+stats = server.metrics_snapshot()
 fold_tenants()
 print(f"FAULT,1,{n_failed + 1},{ok_after},"
       f"{stats['runners']['web']['retries']}")

@@ -1,0 +1,69 @@
+"""Telemetry quickstart (DESIGN.md sec. 13): a traced BFS printing the
+per-level LevelTrace table, then a small served run dumping the request's
+span lifecycle, the Prometheus exposition and the event-log tail.
+
+    PYTHONPATH=src python examples/obs_quickstart.py [scale] [edge_factor]
+
+Single-process, single-device (grid 1x1) so it runs anywhere; the trace
+carry and the serve spans are identical on a real mesh -- see
+benchmarks/workers/trace_worker.py for the 2x2 multi-device driver.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.api import BFSConfig, DistGraph
+from repro.graphgen import rmat_edges
+from repro.serve import GraphServer, ServeConfig
+
+
+def main(scale=12, ef=8):
+    n = 1 << scale
+    edges = np.asarray(rmat_edges(jax.random.key(42), scale, ef))
+    config = BFSConfig(grid=(1, 1), edge_chunk=16384, telemetry=True)
+    graph = DistGraph.from_edges(edges, config, n=n)
+    deg = np.bincount(edges[0], minlength=n)
+    roots = np.flatnonzero(deg > 0)[:32:4].astype(np.int32)
+
+    # --- layer 1: the in-program per-level trace ---------------------------
+    sess = graph.session()
+    out = sess.bfs(int(roots[0]))
+    trace = sess.last_trace()           # also out.trace
+    print(f"BFS from root {int(roots[0])}: {int(out.n_levels)} levels, "
+          f"{out.edges_scanned} edges scanned")
+    print(f"{'level':>5} {'frontier':>9} {'scanned':>9} {'folded':>7} "
+          f"{'wire_B':>7} {'dir':>4}")
+    for row in trace.levels():
+        print(f"{row['level']:>5} {row['frontier']:>9} {row['scanned']:>9} "
+              f"{row['folded']:>7} {row['wire_bytes']:>7} {row['dir']:>4}")
+    assert trace.total_scanned == out.edges_scanned
+
+    # --- layers 2+3: the server's registry, spans and event log ------------
+    with GraphServer({"g": graph},
+                     ServeConfig(max_batch=4, window_s=0.01)) as server:
+        tickets = [server.bfs("g", int(r), tenant=("alice", "bob")[i % 2])
+                   for i, r in enumerate(roots[:6])]
+        results = [t.result(timeout=300) for t in tickets]
+        assert all(r.ok for r in results)
+
+        r0 = results[0]
+        print(f"\nrequest seq={r0.seq} spans "
+              f"(batch of {r0.batch_size}, padded to {r0.padded_to}):")
+        for span in r0.trace.spans:
+            print(f"  {span.name:>9} {span.dur_s * 1e3:8.2f} ms")
+
+        print("\nPrometheus exposition (first 12 lines):")
+        for line in server.prometheus().splitlines()[:12]:
+            print(f"  {line}")
+
+        print("\nevent-log tail:")
+        for event in server.events.tail(3):
+            print(f"  {event}")
+    print("\nOK")
+
+
+if __name__ == "__main__":
+    main(*(int(a) for a in sys.argv[1:3]))

@@ -59,7 +59,7 @@ def main(scale=12, ef=8):
                   f"{res.batch_size} (padded to {res.padded_to}), "
                   f"queued {res.queued_s * 1e3:5.1f} ms")
 
-        stats = server.stats()
+        stats = server.metrics_snapshot()
         occ = stats["mean_occupancy"]
         print(f"batches: {stats['n_batches']}  mean occupancy: {occ:.2f}  "
               f"pad waste: {stats['pad_waste_frac']:.0%}")

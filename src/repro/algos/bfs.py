@@ -65,20 +65,27 @@ def canonical_front(front, cnt):
 
 
 def topdown_step(engine, graph: LocalGraph2D, st: BFSState, *, i, j):
-    """One top-down level (paper Alg. 2 lines 12-18)."""
+    """One top-down level (paper Alg. 2 lines 12-18).
+
+    Returns (state', total, scanned, aux); aux is the per-level telemetry
+    channel (DESIGN.md sec. 13) -- a SET fold, so the wire stamp is the
+    codec's static `wire_bytes(grid)` and `folded` counts the entries
+    routed to remote owners (the own column never travels).
+    """
     topo, grid = engine.topo, engine.grid
     S = grid.S
 
-    # expand exchange: gather frontiers within the processor-column
-    all_front, front_total = X.expand_exchange(
-        st.front, st.front_cnt, topo=topo, ops=engine.fold_ops)
+    with jax.named_scope("repro/expand"):
+        # expand exchange: gather frontiers within the processor-column
+        all_front, front_total = X.expand_exchange(
+            st.front, st.front_cnt, topo=topo, ops=engine.fold_ops)
 
-    # frontier expansion (local CSC column scan)
-    ex = F.expand_frontier(
-        graph.col_off, graph.row_idx, st.visited, st.level, st.pred,
-        all_front, front_total, st.lvl, grid=grid, i=i, j=j,
-        edge_chunk=engine.edge_chunk, expand_fn=engine.expand_fn,
-        dedup=engine.dedup)
+        # frontier expansion (local CSC column scan)
+        ex = F.expand_frontier(
+            graph.col_off, graph.row_idx, st.visited, st.level, st.pred,
+            all_front, front_total, st.lvl, grid=grid, i=i, j=j,
+            edge_chunk=engine.edge_chunk, expand_fn=engine.expand_fn,
+            dedup=engine.dedup)
 
     # own-column vertices go straight to the frontier (lines 15-16)
     own_rows = jnp.take(ex.dst, j, axis=0)      # (S,) local rows, block j
@@ -88,23 +95,28 @@ def topdown_step(engine, graph: LocalGraph2D, st: BFSState, *, i, j):
     dst = ex.dst.at[j].set(-1)
     dst_cnt = ex.dst_cnt.at[j].set(0)
 
-    # fold exchange: route discoveries to their owners (same grid row)
-    int_verts, int_cnt = engine.codec.fold(dst, dst_cnt, topo=topo, j=j)
+    with jax.named_scope("repro/fold"):
+        # fold exchange: route discoveries to their owners (same grid row)
+        int_verts, int_cnt = engine.codec.fold(dst, dst_cnt, topo=topo, j=j)
 
-    # frontier update (paper sec. 3.5)
-    up = F.update_frontier(int_verts, int_cnt, ex.visited, ex.level,
-                           ex.pred, st.lvl, grid=grid, i=i, j=j)
+    with jax.named_scope("repro/update"):
+        # frontier update (paper sec. 3.5)
+        up = F.update_frontier(int_verts, int_cnt, ex.visited, ex.level,
+                               ex.pred, st.lvl, grid=grid, i=i, j=j)
 
-    nf = jnp.full((S,), -1, jnp.int32)
-    nc = jnp.int32(0)
-    nf, nc = F.append_padded(nf, nc, own_cols, own_valid)
-    up_valid = jnp.arange(S, dtype=jnp.int32) < up.new_cnt
-    nf, nc = F.append_padded(nf, nc, up.new_front, up_valid)
-    nf, nc = canonical_front(nf, nc)
+        nf = jnp.full((S,), -1, jnp.int32)
+        nc = jnp.int32(0)
+        nf, nc = F.append_padded(nf, nc, own_cols, own_valid)
+        up_valid = jnp.arange(S, dtype=jnp.int32) < up.new_cnt
+        nf, nc = F.append_padded(nf, nc, up.new_front, up_valid)
+        nf, nc = canonical_front(nf, nc)
 
     st2 = BFSState(level=up.level, pred=up.pred, visited=up.visited,
                    front=nf, front_cnt=nc, lvl=st.lvl + 1)
-    return st2, topo.psum_all(nc), ex.edges_scanned
+    aux = {"folded": dst_cnt.sum(dtype=jnp.int32),
+           "wire": jnp.uint32(engine.codec.wire_bytes(grid)),
+           "dir": jnp.int32(0)}
+    return st2, topo.psum_all(nc), ex.edges_scanned, aux
 
 
 # ----------------------------------------------------------------------------

@@ -35,6 +35,7 @@ class CCOutput:
     edges_scanned: Any = None  # exact Python int (64-bit safe)
     directions: Any = None     # per-level direction trace when direction
                                # optimisation ran (see BFSOutput), else None
+    trace: Any = None          # LevelTrace when telemetry ran, else None
 
 
 class ConnectedComponentsProgram(FrontierProgram):

@@ -165,30 +165,33 @@ def make_bfs_bottomup_step(engine, graph, extra, i, j):
     snd = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, S))
 
     def step(st: BFSState, prev_total):
-        all_words = frontier_words(topo, st.front, i)
-        # masked-degree workload: only unvisited rows' in-edges are scanned
-        # (the visited cache is consistent across the processor-row, so
-        # these are exactly the globally-undiscovered rows of this block)
-        deg = jnp.where(~st.visited, jnp.diff(row_off), 0)
-        cumul = F.exclusive_cumsum(deg)
-        total = cumul[nrl]
+        with jax.named_scope("repro/expand"):
+            all_words = frontier_words(topo, st.front, i)
+            # masked-degree workload: only unvisited rows' in-edges are
+            # scanned (the visited cache is consistent across the
+            # processor-row, so these are exactly the globally-undiscovered
+            # rows of this block)
+            deg = jnp.where(~st.visited, jnp.diff(row_off), 0)
+            cumul = F.exclusive_cumsum(deg)
+            total = cumul[nrl]
 
-        def chunk_body(state):
-            start, best = state
-            gids = start + jnp.arange(chunk, dtype=jnp.int32)
-            if bu_fn is None:
-                r, c, hit = F.reference_bottomup_chunk(
-                    gids, cumul, total, row_off, col_idx, all_words, block=S)
-            else:
-                r, c, hit = bu_fn(gids, cumul, total, row_off, col_idx,
-                                  all_words, block=S)
-            best = best.at[jnp.where(hit, r, nrl)].min(
-                jnp.where(hit, c, I32_MAX), mode="drop")
-            return start + chunk, best
+            def chunk_body(state):
+                start, best = state
+                gids = start + jnp.arange(chunk, dtype=jnp.int32)
+                if bu_fn is None:
+                    r, c, hit = F.reference_bottomup_chunk(
+                        gids, cumul, total, row_off, col_idx, all_words,
+                        block=S)
+                else:
+                    r, c, hit = bu_fn(gids, cumul, total, row_off, col_idx,
+                                      all_words, block=S)
+                best = best.at[jnp.where(hit, r, nrl)].min(
+                    jnp.where(hit, c, I32_MAX), mode="drop")
+                return start + chunk, best
 
-        _, best = jax.lax.while_loop(
-            lambda s: s[0] < total, chunk_body,
-            (jnp.int32(0), jnp.full((nrl,), I32_MAX, jnp.int32)))
+            _, best = jax.lax.while_loop(
+                lambda s: s[0] < total, chunk_body,
+                (jnp.int32(0), jnp.full((nrl,), I32_MAX, jnp.int32)))
 
         found = best < I32_MAX                 # rows with a frontier parent
         visited1 = st.visited | found          # the send-suppression cache
@@ -196,8 +199,11 @@ def make_bfs_bottomup_step(engine, graph, extra, i, j):
 
         # value-fold (vertex, encoded parent) to the owners -- the same
         # exchange the value programs use, so every codec works here
-        ids, cnt, vals = PR.pack_blocks(found, parent_g, grid, ops=fold_ops)
-        ri, rc, rv = engine.codec.fold_values(ids, cnt, vals, topo=topo, j=j)
+        with jax.named_scope("repro/fold"):
+            ids, cnt, vals = PR.pack_blocks(found, parent_g, grid,
+                                            ops=fold_ops)
+            ri, rc, rv = engine.codec.fold_values(ids, cnt, vals, topo=topo,
+                                                  j=j)
 
         # dense (C, S) per-sender parent table of my owned block (dump col S
         # swallows the pads; senders propose each row at most once)
@@ -227,7 +233,12 @@ def make_bfs_bottomup_step(engine, graph, extra, i, j):
         nf, nc = canonical_front(nf, nc)
         st2 = BFSState(level=level2, pred=pred2, visited=visited2, front=nf,
                        front_cnt=nc, lvl=st.lvl + 1)
-        return st2, topo.psum_all(nc), total.astype(jnp.uint32)
+        folded = cnt.sum(dtype=jnp.int32)   # value fold: count-proportional
+        aux = {"folded": folded,
+               "wire": jnp.uint32(engine.codec.wire_bytes(grid))
+               + 4 * folded.astype(jnp.uint32),
+               "dir": jnp.int32(1)}
+        return st2, topo.psum_all(nc), total.astype(jnp.uint32), aux
 
     return step
 
@@ -288,20 +299,25 @@ class DirectionProgram(FrontierProgram):
         def step(st: DirState, prev_total):
             if self.mode == "bottomup":
                 use_bu = jnp.bool_(True)
-                inner2, total, scanned = bu(st.inner, prev_total)
+                inner2, total, scanned, aux = bu(st.inner, prev_total)
             else:
                 use_bu = jnp.where(st.dir == 1, prev_total > lo_thr,
                                    prev_total > hi_thr)
-                inner2, total, scanned = jax.lax.cond(
+                # both branches return (state, total, scanned, aux) with
+                # identical aux structure, so telemetry rides the cond
+                inner2, total, scanned, aux = jax.lax.cond(
                     use_bu, lambda s: bu(s, prev_total),
                     lambda s: td(s, prev_total), st.inner)
             dirs = st.dirs.at[jnp.minimum(st.k, L - 1)].set(
                 use_bu.astype(jnp.int32))
             st2 = DirState(inner=inner2, dir=use_bu.astype(jnp.int32),
                            dirs=dirs, k=st.k + 1)
-            return st2, total, scanned
+            return st2, total, scanned, aux
 
         return step
+
+    def front_count(self, st):
+        return self.inner.front_count(st.inner)
 
     def keep_going(self, engine, st, total):
         return self.inner.keep_going(engine, st.inner, total)

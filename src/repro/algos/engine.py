@@ -85,12 +85,19 @@ class FrontierEngine:
                 expand rules.  Only consulted when the program declares
                 `uses_bottomup` (the direction-optimising driver); all
                 paths are bit-identical.
+    telemetry:  when True, thread the per-level `repro.obs.trace` carry
+                through the while_loop and return a `LevelTrace` with every
+                search (DESIGN.md sec. 13).  Off by default; the flag is
+                part of every engine/AOT cache key, so the off path
+                compiles to exactly the untraced program.  Outputs are
+                bit-identical either way.
     """
 
     def __init__(self, topo, program, *, fold_codec=None,
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
-                 dedup: str = "scatter", bottomup: str = "auto"):
+                 dedup: str = "scatter", bottomup: str = "auto",
+                 telemetry: bool = False):
         from repro.dist.exchange import get_fold_codec
         from repro.kernels.select import (resolve_bottomup_path,
                                           resolve_expand_path,
@@ -147,6 +154,10 @@ class FrontierEngine:
             self.bottomup_fn = make_bottomup_fn(path=self.bottomup_path)
             self.value_bottomup_fn = make_value_bottomup_fn(
                 path=self.bottomup_path)
+        self.telemetry = bool(telemetry)
+        # last assembled LevelTrace (scalar) or tuple of traces (batched);
+        # None until a telemetry-enabled search completes
+        self.last_trace = None
         # traces of the level loop (scalar or batched); jit/AOT cache hits do
         # not retrace, so tests can assert a 64-root sweep compiles once
         self.trace_count = 0
@@ -163,6 +174,8 @@ class FrontierEngine:
         slowest), so a multi-root sweep is ONE compiled executable.
         """
         topo, prog = self.topo, self.program
+        telemetry = self.telemetry
+        from repro.obs import trace as T
 
         def device_fn(col_off, row_idx, nnz, *rest):
             extra, arg = rest[:-1], rest[-1]
@@ -176,20 +189,41 @@ class FrontierEngine:
                 step = prog.make_step(self, graph, extra, i, j)
 
                 def cond(carry):
-                    st, total, hi, lo = carry
+                    st, total = carry[0], carry[1]
                     return prog.keep_going(self, st, total)
 
+                def run_step(st, total):
+                    # steps return (st', total, scanned[, aux]); aux is the
+                    # per-level telemetry channel (folded / wire / dir).
+                    # Untraced engines drop it right here, so XLA dead-code
+                    # eliminates the aux reductions and the off path
+                    # compiles to exactly the pre-telemetry program.
+                    res = step(st, total)
+                    aux = res[3] if len(res) > 3 else None
+                    return res[0], res[1], res[2], aux
+
                 def body(carry):
-                    st, total, hi, lo = carry
-                    st2, total2, scanned = step(st, total)
+                    st, total, hi, lo = carry[:4]
+                    st2, total2, scanned, aux = run_step(st, total)
                     hi, lo = wide_add(hi, lo, scanned)
-                    return st2, total2, hi, lo
+                    if not telemetry:
+                        return st2, total2, hi, lo
+                    tr = T.record_level(
+                        carry[4], frontier=total,
+                        front_dev=prog.front_count(st), scanned=scanned,
+                        aux=T.normalize_aux(aux))
+                    return st2, total2, hi, lo, tr
 
                 init_total = prog.init_total(self, st)
-                st, _, hi, lo = jax.lax.while_loop(
-                    cond, body,
-                    (st, init_total, jnp.uint32(0), jnp.uint32(0)))
-                return tuple(prog.finalize(self, st, i, j)) + (hi, lo)
+                carry = (st, init_total, jnp.uint32(0), jnp.uint32(0))
+                if telemetry:
+                    carry += (T.init_trace(self.max_levels),)
+                carry = jax.lax.while_loop(cond, body, carry)
+                st, hi, lo = carry[0], carry[2], carry[3]
+                outs = tuple(prog.finalize(self, st, i, j)) + (hi, lo)
+                if telemetry:
+                    outs += T.trace_outputs(carry[4])
+                return outs
 
             if batched:
                 outs = jax.lax.map(search, arg)
@@ -198,10 +232,13 @@ class FrontierEngine:
             return tuple(o[None, None] for o in outs)
 
         dev = topo.dev_spec
+        out_specs = tuple(prog.out_specs(self)) + (dev, dev)
+        if telemetry:
+            out_specs += (dev,) * T.N_TRACE_OUTS
         mapped = topo.shard_map(
             device_fn,
             in_specs=(dev,) * (3 + prog.n_extra) + (P(),),
-            out_specs=tuple(prog.out_specs(self)) + (dev, dev))
+            out_specs=out_specs)
 
         def counted(*args):
             # runs at TRACE time only (jit / .lower()); cache hits skip it
@@ -210,16 +247,39 @@ class FrontierEngine:
 
         return counted
 
+    def assemble(self, outs, B):
+        """Gathered device outputs -> output object, with telemetry split
+        off, assembled into a host `LevelTrace`, attached to the output's
+        `trace` field and kept as `self.last_trace`.
+
+        This is the ONE funnel both invocation paths share: `run` /
+        `run_batch` here, and the session layer's AOT executables (which
+        call the compiled artifact directly and assemble through this).
+        """
+        trace = None
+        if self.telemetry:
+            from repro.obs import trace as T
+            outs, traw = outs[:-T.N_TRACE_OUTS], outs[-T.N_TRACE_OUTS:]
+            trace = T.assemble_traces(traw, B, grid=self.grid,
+                                      program=self.program.name,
+                                      codec=self.codec.name)
+        out = self.program.assemble(self, tuple(outs), B)
+        if trace is not None:
+            import dataclasses
+            out = dataclasses.replace(out, trace=trace)
+            self.last_trace = trace
+        return out
+
     def run(self, graph: LocalGraph2D, arg, *extra):
         """One search; extra = the program's per-device graph arrays.
 
         `arg` is the program's search argument (a root, a sources vector, a
         dummy scalar for argument-free programs like CC)."""
         outs = self._run(graph.col_off, graph.row_idx, graph.nnz, *extra, arg)
-        return self.program.assemble(self, outs, None)
+        return self.assemble(outs, None)
 
     def run_batch(self, graph: LocalGraph2D, args, *extra):
         """A leading-axis batch of searches as ONE compiled program."""
         outs = self._run_batch(graph.col_off, graph.row_idx, graph.nnz,
                                *extra, args)
-        return self.program.assemble(self, outs, int(args.shape[0]))
+        return self.assemble(outs, int(args.shape[0]))

@@ -60,6 +60,7 @@ class MultiBFSOutput:
     edges_scanned: Any = None  # exact Python int (64-bit safe)
     directions: Any = None     # per-level direction trace when direction
                                # optimisation ran (see BFSOutput), else None
+    trace: Any = None          # LevelTrace when telemetry ran, else None
 
 
 class MultiSourceBFSProgram(FrontierProgram):
@@ -106,6 +107,8 @@ class MultiSourceBFSProgram(FrontierProgram):
         grid, topo = engine.grid, engine.topo
         S, nrl = grid.S, grid.n_rows_local
         fold_ops = engine.fold_ops
+        step_dir = jnp.int32(1 if scan is not None else 0)
+        wire_base = jnp.uint32(engine.codec.wire_bytes(grid))
 
         def step(st: MultiBFSState, prev_total):
             if scan is not None:
@@ -148,7 +151,13 @@ class MultiSourceBFSProgram(FrontierProgram):
             st2 = MultiBFSState(visited=vis2, level=lvl2, src=src2,
                                 front=front, payload=payload, front_cnt=nc,
                                 lvl=st.lvl + 1)
-            return st2, topo.psum_all(nc), scanned
+            # per-level telemetry channel: value folds ship 4 extra payload
+            # bytes per folded entry on top of the codec's static frame
+            folded = cnt.sum(dtype=jnp.int32)
+            aux = {"folded": folded,
+                   "wire": wire_base + 4 * folded.astype(jnp.uint32),
+                   "dir": step_dir}
+            return st2, topo.psum_all(nc), scanned, aux
 
         return step
 

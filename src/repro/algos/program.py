@@ -80,7 +80,15 @@ class FrontierProgram:
         raise NotImplementedError
 
     def make_step(self, engine, graph, extra, i, j):
-        """Return step(state, prev_total) -> (state', total, scanned)."""
+        """Return step(state, prev_total) -> (state', total, scanned[, aux]).
+
+        The optional 4th element is the per-level telemetry channel
+        (DESIGN.md sec. 13): a dict with scalar entries `folded` (entries
+        this device folded to owners), `wire` (fold wire bytes sent) and
+        `dir` (0 top-down / 1 bottom-up).  Untraced engines drop it before
+        the loop carry, so returning it costs nothing when telemetry is
+        off; legacy 3-tuple steps remain valid (the trace records zeros).
+        """
         raise NotImplementedError
 
     def make_bottomup_step(self, engine, graph, extra, i, j):
@@ -91,6 +99,12 @@ class FrontierProgram:
         raise NotImplementedError(
             f"{self.name} has no bottom-up step; it cannot run under "
             f"direction optimisation")
+
+    def front_count(self, st):
+        """This device's own frontier count entering a level (the telemetry
+        carry's `front_dev` channel).  Every state pytree in the repo
+        carries `front_cnt`; wrappers delegate to their inner program."""
+        return st.front_cnt
 
     def keep_going(self, engine, st, total):
         """Convergence predicate (True = run another level)."""
@@ -255,36 +269,50 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
     S, nrl = grid.S, grid.n_rows_local
     fold_ops = engine.fold_ops
 
+    # telemetry channel constants: pull scans are the bottom-up direction,
+    # and a value fold's wire bytes are count-proportional (PR 5's
+    # wire_bytes_values_sent = static header + 4 bytes per folded entry)
+    step_dir = jnp.int32(1 if scan is not None else 0)
+    wire_base = jnp.uint32(engine.codec.wire_bytes(grid))
+
     def step(st: ValueState, prev_total):
-        if scan is not None:
-            cand, scanned = scan(st)
-        else:
-            all_front, all_pay, ftot = X.expand_exchange_values(
-                st.front, st.front_cnt, st.payload, topo=topo,
-                fill=expand_fill, ops=fold_ops)
-            cand, scanned = scan_relax(
-                graph.col_off, graph.row_idx, edge_vals, all_front, all_pay,
-                ftot, relax, n_rows=nrl, grid=grid,
-                edge_chunk=engine.edge_chunk,
-                expand_fn=engine.value_expand_fn)
+        with jax.named_scope("repro/expand"):
+            if scan is not None:
+                cand, scanned = scan(st)
+            else:
+                all_front, all_pay, ftot = X.expand_exchange_values(
+                    st.front, st.front_cnt, st.payload, topo=topo,
+                    fill=expand_fill, ops=fold_ops)
+                cand, scanned = scan_relax(
+                    graph.col_off, graph.row_idx, edge_vals, all_front,
+                    all_pay, ftot, relax, n_rows=nrl, grid=grid,
+                    edge_chunk=engine.edge_chunk,
+                    expand_fn=engine.value_expand_fn)
         # propose only strict improvements over what we already know
         improved = cand < st.val
         val1 = jnp.minimum(st.val, cand)
-        ids, cnt, vals = pack_blocks(improved, cand, grid, ops=fold_ops)
-        ri, rc, rv = engine.codec.fold_values(ids, cnt, vals, topo=topo, j=j)
-        inc = scatter_min_received(ri, rv, j, S)
-        # merge against the PRE-scan owned block: this device's own
-        # proposals travel through the self all_to_all block, so comparing
-        # with val1 would mask them out of `changed`
-        owned_prev = jax.lax.dynamic_slice_in_dim(st.val, j * S, S)
-        new_owned = jnp.minimum(owned_prev, inc)
-        changed = new_owned < owned_prev
-        val2 = jax.lax.dynamic_update_slice(val1, new_owned, (j * S,))
-        front, payload, nc = owned_to_front(changed, new_owned, i, S,
-                                            ops=fold_ops)
+        with jax.named_scope("repro/fold"):
+            ids, cnt, vals = pack_blocks(improved, cand, grid, ops=fold_ops)
+            ri, rc, rv = engine.codec.fold_values(ids, cnt, vals, topo=topo,
+                                                  j=j)
+        with jax.named_scope("repro/update"):
+            inc = scatter_min_received(ri, rv, j, S)
+            # merge against the PRE-scan owned block: this device's own
+            # proposals travel through the self all_to_all block, so
+            # comparing with val1 would mask them out of `changed`
+            owned_prev = jax.lax.dynamic_slice_in_dim(st.val, j * S, S)
+            new_owned = jnp.minimum(owned_prev, inc)
+            changed = new_owned < owned_prev
+            val2 = jax.lax.dynamic_update_slice(val1, new_owned, (j * S,))
+            front, payload, nc = owned_to_front(changed, new_owned, i, S,
+                                                ops=fold_ops)
         st2 = ValueState(val=val2, front=front, payload=payload,
                          front_cnt=nc, it=st.it + 1)
-        return st2, topo.psum_all(nc), scanned
+        folded = cnt.sum(dtype=jnp.int32)
+        aux = {"folded": folded,
+               "wire": wire_base + 4 * folded.astype(jnp.uint32),
+               "dir": step_dir}
+        return st2, topo.psum_all(nc), scanned, aux
 
     return step
 

@@ -38,6 +38,8 @@ class SSSPOutput:
     edges_scanned: Any = None  # exact Python int(s), 64-bit safe
     directions: Any = None     # per-level direction trace when direction
                                # optimisation ran (see BFSOutput), else None
+    trace: Any = None          # LevelTrace when telemetry ran (scalar: one
+                               # LevelTrace; batched: tuple of B), else None
 
 
 class SSSPProgram(FrontierProgram):

@@ -71,6 +71,14 @@ class BFSConfig:
                  that replaces the per-level argsorts.  Same spellings and
                  rules as `expand`, with REPRO_FOLD as the environment
                  override.  Every path is bit-identical.
+    telemetry:   per-level trace channel (DESIGN.md sec. 13).  When True,
+                 every search also returns a `repro.obs.LevelTrace` (per
+                 level: global + per-device frontier counts, scanned edges,
+                 folded entries, fold wire bytes, direction), readable as
+                 `output.trace` / `GraphSession.last_trace()`.  Static: it
+                 participates in every engine/AOT cache key, so the off
+                 path compiles to exactly the untraced program.  Outputs
+                 are bit-identical either way.
     """
     grid: Any = None
     fold_codec: Any = "list"
@@ -86,6 +94,7 @@ class BFSConfig:
     expand: str = "auto"
     fold: str = "auto"
     bottomup: str = "auto"
+    telemetry: bool = False
 
     def __post_init__(self):
         for f in ("row_axes", "col_axes"):
@@ -148,7 +157,8 @@ class BFSConfig:
         return (self.codec_name, self.direction_mode, self.edge_chunk,
                 self.dedup, self.max_levels, self.alpha, self.beta,
                 self.row_axes, self.col_axes, self.expand_fn,
-                self.expand_path, self.fold_path, self.bottomup_path)
+                self.expand_path, self.fold_path, self.bottomup_path,
+                self.telemetry)
 
     def algo_engine_key(self, program_key: tuple, codec_name: str,
                         max_levels: int) -> tuple:
@@ -161,7 +171,8 @@ class BFSConfig:
         is an engine knob, so it keys here."""
         return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
                 max_levels, self.row_axes, self.col_axes, self.expand_fn,
-                self.expand_path, self.fold_path, self.bottomup_path)
+                self.expand_path, self.fold_path, self.bottomup_path,
+                self.telemetry)
 
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""

@@ -16,6 +16,7 @@ Graph500-style 64-root sweep traces the level loop exactly once.
 """
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -121,7 +122,8 @@ def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
         topology, fold_codec=config.fold_codec, edge_chunk=config.edge_chunk,
         max_levels=config.max_levels, expand=config.expand,
         expand_fn=config.expand_fn, fold=config.fold, dedup=config.dedup,
-        bottomup=config.bottomup, program=program)
+        bottomup=config.bottomup, program=program,
+        telemetry=config.telemetry)
 
 
 class DistGraph:
@@ -216,15 +218,24 @@ class DistGraph:
         self._edges = None
         self._weights_host = None
 
-    def aot_cache_stats(self) -> dict:
+    def cache_stats(self) -> dict:
         """Hit/miss/eviction counters of the AOT-executable cache (surfaced
-        in `repro.serve` accounting).  The deprecated driver shims share a
-        plain dict here; stats then degrade to size-only."""
+        in `repro.serve` accounting / the metrics registry).  The deprecated
+        driver shims share a plain dict here; stats then degrade to
+        size-only."""
         cache = self._compiled
         if isinstance(cache, AOTCache):
             return cache.stats()
         return {"size": len(cache), "maxsize": None, "hits": None,
                 "misses": None, "evictions": None}
+
+    def aot_cache_stats(self) -> dict:
+        """Deprecated spelling of `cache_stats()` (same dict)."""
+        warnings.warn(
+            "DistGraph.aot_cache_stats() is deprecated; use "
+            "DistGraph.cache_stats() (same dict)", DeprecationWarning,
+            stacklevel=2)
+        return self.cache_stats()
 
     def engine_for(self, config: BFSConfig) -> DistBFSEngine:
         key = config.engine_key
@@ -258,6 +269,16 @@ class GraphSession:
             graph.ensure_csr()
         self.engine = engine if engine is not None \
             else graph.engine_for(self.config)
+        # last LevelTrace (scalar) / tuple of traces (batched) any query of
+        # THIS session produced; None until a telemetry=True query completes
+        self._last_trace = None
+
+    def last_trace(self):
+        """The per-level `repro.obs.LevelTrace` of this session's most
+        recent query (DESIGN.md sec. 13): a single trace for scalar queries,
+        a tuple of B for batched ones.  None unless the session config has
+        telemetry=True and a query has run."""
+        return self._last_trace
 
     @property
     def _extra(self) -> tuple:
@@ -316,11 +337,15 @@ class GraphSession:
         if validate is not False and validate is not None:
             self._validate(out, np.asarray(roots_arr), validate)
         if scalar:
-            return BFSOutput(level=out.level[0], pred=out.pred[0],
-                             n_levels=out.n_levels[0],
-                             edges_scanned=out.edges_scanned[0],
-                             directions=None if out.directions is None
-                             else out.directions[0])
+            out = BFSOutput(level=out.level[0], pred=out.pred[0],
+                            n_levels=out.n_levels[0],
+                            edges_scanned=out.edges_scanned[0],
+                            directions=None if out.directions is None
+                            else out.directions[0],
+                            trace=None if out.trace is None
+                            else out.trace[0])
+        if out.trace is not None:
+            self._last_trace = out.trace
         return out
 
     def _validate(self, out: BFSOutput, roots, validate) -> None:
@@ -365,7 +390,8 @@ class GraphSession:
                 edge_chunk=self.config.edge_chunk, max_levels=max_levels,
                 expand=self.config.expand, expand_fn=self.config.expand_fn,
                 fold=self.config.fold, dedup=self.config.dedup,
-                bottomup=self.config.bottomup)
+                bottomup=self.config.bottomup,
+                telemetry=self.config.telemetry)
             self.graph._engines[key] = eng
         return eng, key
 
@@ -414,7 +440,10 @@ class GraphSession:
         compiled = self._algo_compiled(
             eng, key, jax.ShapeDtypeStruct((), jnp.int32), *extra)
         outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, jnp.int32(0))
-        return eng.program.assemble(eng, outs, None)
+        out = eng.assemble(outs, None)
+        if out.trace is not None:
+            self._last_trace = out.trace
+        return out
 
     def sssp(self, roots, fold_codec=None) -> SSSPOutput:
         """Shortest distances over the planned per-edge uint8 weights.
@@ -441,13 +470,17 @@ class GraphSession:
         compiled = self._algo_compiled(
             eng, key, jax.ShapeDtypeStruct((B,), jnp.int32), *extra,
             batched=True)
-        out = eng.program.assemble(
-            eng, compiled(g.col_off, g.row_idx, g.nnz, *extra, roots_arr), B)
+        out = eng.assemble(
+            compiled(g.col_off, g.row_idx, g.nnz, *extra, roots_arr), B)
         if scalar:
-            return SSSPOutput(dist=out.dist[0], n_iters=out.n_iters[0],
-                              edges_scanned=out.edges_scanned[0],
-                              directions=None if out.directions is None
-                              else out.directions[0])
+            out = SSSPOutput(dist=out.dist[0], n_iters=out.n_iters[0],
+                             edges_scanned=out.edges_scanned[0],
+                             directions=None if out.directions is None
+                             else out.directions[0],
+                             trace=None if out.trace is None
+                             else out.trace[0])
+        if out.trace is not None:
+            self._last_trace = out.trace
         return out
 
     def multi_bfs(self, sources, k: int | None = None,
@@ -474,4 +507,7 @@ class GraphSession:
             eng, key, jax.ShapeDtypeStruct(sources_arr.shape, jnp.int32),
             *extra)
         outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, sources_arr)
-        return eng.program.assemble(eng, outs, None)
+        out = eng.assemble(outs, None)
+        if out.trace is not None:
+            self._last_trace = out.trace
+        return out

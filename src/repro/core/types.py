@@ -120,3 +120,6 @@ class BFSOutput:
     directions: Any = None     # (n_levels_cap,) int32 per-level direction
                                # trace (-1 unused / 0 top-down / 1 bottom-up)
                                # when direction optimisation ran, else None
+    trace: Any = None          # repro.obs.LevelTrace when telemetry ran
+                               # (scalar: one LevelTrace; batched: tuple of
+                               # B), else None

@@ -83,7 +83,8 @@ class DistBFSEngine(FrontierEngine):
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter", bottomup: str = "auto",
-                 step_factory=None, n_extra: int = 0, program=None):
+                 step_factory=None, n_extra: int = 0, program=None,
+                 telemetry: bool = False):
         from repro.algos.bfs import BFSLevelsProgram
 
         if program is None:
@@ -95,7 +96,7 @@ class DistBFSEngine(FrontierEngine):
             topo, program,
             fold_codec=fold_codec, edge_chunk=edge_chunk,
             max_levels=max_levels, expand=expand, expand_fn=expand_fn,
-            fold=fold, dedup=dedup, bottomup=bottomup)
+            fold=fold, dedup=dedup, bottomup=bottomup, telemetry=telemetry)
 
     def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
         """One top-down level (paper Alg. 2 lines 12-18)."""
@@ -112,4 +113,4 @@ class DistBFSEngine(FrontierEngine):
 
     def assemble_batch(self, outs, B: int) -> BFSOutput:
         """Gathered batched device outputs -> global (B, n) BFSOutput."""
-        return self.program.assemble(self, outs, B)
+        return self.assemble(outs, B)

@@ -59,22 +59,60 @@ class StragglerWatchdog:
 
 
 class StepRunner:
-    """run(state, batch) -> state with retry/restore semantics."""
+    """run(state, batch) -> state with retry/restore semantics.
+
+    Accounting is label-aware (DESIGN.md sec. 13): `run(..., labels=)`
+    attributes every retry / straggler flag of those batches to each label
+    (the serve layer passes the batch's tenants), accumulated in
+    `retries_by` / `straggler_by` and mirrored to the optional `on_retry` /
+    `on_straggler` callbacks (what the GraphServer wires into its metrics
+    registry + event log).  `reset_stats()` zeroes everything, so a load
+    generator's per-point windows (and a fresh server over a long-lived
+    graph) start clean.
+    """
 
     def __init__(self, step_fn, *, policy: RetryPolicy = RetryPolicy(),
                  ckpt=None, ckpt_every: int = 50,
                  injector: FaultInjector | None = None,
-                 watchdog: StragglerWatchdog | None = None):
+                 watchdog: StragglerWatchdog | None = None,
+                 on_retry=None, on_straggler=None):
         self.step_fn = step_fn
         self.policy = policy
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.injector = injector
         self.watchdog = watchdog or StragglerWatchdog()
+        self.on_retry = on_retry        # called (labels) per retry
+        self.on_straggler = on_straggler  # called (labels, seconds) per flag
         self.restores = 0
         self.retries = 0
+        self.retries_by: dict = {}      # label -> retries attributed
+        self.straggler_by: dict = {}    # label -> straggler flags attributed
 
-    def run(self, state, batches, *, start_step: int = 0):
+    def reset_stats(self) -> None:
+        """Zero the retry/restore/straggler accounting (watchdog latency
+        window included), leaving policy and hooks in place."""
+        self.restores = 0
+        self.retries = 0
+        self.retries_by = {}
+        self.straggler_by = {}
+        self.watchdog.lat = []
+        self.watchdog.flagged = []
+
+    def _count_retry(self, labels):
+        self.retries += 1
+        for lab in labels:
+            self.retries_by[lab] = self.retries_by.get(lab, 0) + 1
+        if self.on_retry is not None:
+            self.on_retry(labels)
+
+    def _count_straggler(self, labels, seconds):
+        for lab in labels:
+            self.straggler_by[lab] = self.straggler_by.get(lab, 0) + 1
+        if self.on_straggler is not None:
+            self.on_straggler(labels, seconds)
+
+    def run(self, state, batches, *, start_step: int = 0, labels=()):
         step = start_step
         infos = []
         for batch in batches:
@@ -96,12 +134,14 @@ class StepRunner:
                                 state = restored
                                 break
                         raise
-                    self.retries += 1
+                    self._count_retry(labels)
                     time.sleep(delay)
                     delay *= self.policy.backoff_mult
             else:
                 pass
-            self.watchdog.record(step, time.perf_counter() - t0)
+            seconds = time.perf_counter() - t0
+            if self.watchdog.record(step, seconds):
+                self._count_straggler(labels, seconds)
             if self.ckpt is not None and step % self.ckpt_every == 0:
                 self.ckpt.save(step, state)
             infos.append(info if "info" in dir() else None)

@@ -1,4 +1,4 @@
-"""Per-tenant and per-batch serve accounting (DESIGN.md sec. 12).
+"""Per-tenant and per-batch serve accounting (DESIGN.md sec. 12 + 13).
 
 Everything the load generator, the CI gates and a capacity planner need to
 read back out of a serving run: per-tenant query/edge/wall-time counters,
@@ -6,8 +6,15 @@ per-batch occupancy records (live slots vs padded capacity -- the
 continuous-batching win is literally `occupancy() > 1`), and the resident
 graphs' AOT-cache hit/miss/eviction counters folded into one snapshot.
 
+Since the telemetry subsystem (DESIGN.md sec. 13) the counters themselves
+live in a `repro.obs.MetricsRegistry` -- `ServeAccounting` is a writer plus
+a snapshot VIEW over that registry, so the same numbers serve the legacy
+`snapshot()` dict, the JSON exposition and the Prometheus text endpoint
+without double bookkeeping.  A `GraphServer` passes its own registry (and
+its JSONL `EventLog`); standalone construction makes a private one.
+
 Thread-safe: the scheduler worker threads and any number of client threads
-record concurrently.
+record concurrently (the registry lock; the `batches` list keeps its own).
 """
 from __future__ import annotations
 
@@ -41,46 +48,113 @@ class BatchRecord:
     isolated: bool = False   # True for a post-fault singleton replay
 
 
+# the per-tenant registry counters backing TenantStats, in field order
+_TENANT_COUNTERS = (
+    ("queries", "serve_admitted_total", "Queries admitted"),
+    ("ok", "serve_ok_total", "Queries fulfilled ok"),
+    ("failed", "serve_failed_total", "Queries fulfilled failed"),
+    ("rejected", "serve_rejected_total",
+     "Queries refused at admission (backpressure)"),
+    ("edges_scanned", "serve_edges_scanned_total",
+     "Exact scanned edges attributed per request"),
+    ("exec_s", "serve_exec_seconds_total",
+     "Summed batch-execution wall per query"),
+    ("queued_s", "serve_queued_seconds_total",
+     "Summed admission -> execution-start wall"),
+)
+
+
 class ServeAccounting:
-    """Aggregates tenants, batches and cache stats for one GraphServer."""
+    """Registry-backed tenant/batch accounting for one GraphServer.
 
-    def __init__(self):
+    registry: the `repro.obs.MetricsRegistry` the counters live in (the
+              owning GraphServer's; a private one when None).
+    events:   optional `repro.obs.EventLog`; batch executions, rejections
+              and failures are emitted as JSONL events.
+    """
+
+    def __init__(self, registry=None, events=None):
+        from repro.obs import MetricsRegistry
+
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.events = events
         self._lock = threading.Lock()
-        self.tenants: dict[str, TenantStats] = {}
         self.batches: list[BatchRecord] = []
+        r = self.registry
+        self._tenant_c = {
+            field: r.counter(name, help, labelnames=("tenant",))
+            for field, name, help in _TENANT_COUNTERS}
+        bl = ("graph", "program")
+        self._batches_c = r.counter(
+            "serve_batches_total", "Executed batches", labelnames=bl)
+        self._batch_live_c = r.counter(
+            "serve_batch_live_total", "Live requests over executed batches",
+            labelnames=bl)
+        self._batch_padded_c = r.counter(
+            "serve_batch_padded_total",
+            "Compiled capacity slots over executed batches", labelnames=bl)
+        self._isolated_c = r.counter(
+            "serve_isolated_total", "Isolation-replay slots", labelnames=bl)
+        self._batch_exec_h = r.histogram(
+            "serve_batch_exec_seconds", "Batch device-execution wall",
+            labelnames=bl)
 
-    def _tenant(self, tenant: str) -> TenantStats:
-        stats = self.tenants.get(tenant)
-        if stats is None:
-            stats = self.tenants[tenant] = TenantStats()
-        return stats
+    @property
+    def tenants(self) -> "dict[str, TenantStats]":
+        """Per-tenant stats reconstructed FROM the registry (a view: the
+        registry's series are the authority)."""
+        out: dict[str, TenantStats] = {}
+        for field, counter in self._tenant_c.items():
+            for key, value in counter.series().items():
+                stats = out.setdefault(key[0], TenantStats())
+                setattr(stats, field, value)
+        return out
 
     def record_admit(self, tenant: str) -> None:
-        with self._lock:
-            self._tenant(tenant).queries += 1
+        self._tenant_c["queries"].labels(tenant=tenant).inc()
 
     def record_reject(self, tenant: str) -> None:
-        with self._lock:
-            self._tenant(tenant).rejected += 1
+        self._tenant_c["rejected"].labels(tenant=tenant).inc()
+        if self.events is not None:
+            self.events.emit("reject", tenant=tenant)
 
     def record_batch(self, record: BatchRecord) -> None:
         with self._lock:
             self.batches.append(record)
+        kv = {"graph": record.graph, "program": record.program}
+        if record.isolated:
+            self._isolated_c.labels(**kv).inc()
+        else:
+            self._batches_c.labels(**kv).inc()
+            self._batch_live_c.labels(**kv).inc(record.live)
+            self._batch_padded_c.labels(**kv).inc(record.padded_to)
+        self._batch_exec_h.labels(**kv).observe(record.exec_s)
+        if self.events is not None:
+            self.events.emit("batch", graph=record.graph,
+                             program=record.program, live=record.live,
+                             padded_to=record.padded_to,
+                             exec_s=record.exec_s,
+                             isolated=record.isolated)
 
     def record_result(self, result, edges: int = 0) -> None:
         """Fold one fulfilled QueryResult into its tenant's counters.
         `edges` is the request's own scanned-edge count: the exact per-slot
         number for bfs/sssp/multi_bfs, the whole search for the first CC
         caller in a shared run and 0 for the riders."""
-        with self._lock:
-            stats = self._tenant(result.tenant)
-            if result.ok:
-                stats.ok += 1
-                stats.edges_scanned += int(edges)
-            else:
-                stats.failed += 1
-            stats.exec_s += result.exec_s
-            stats.queued_s += result.queued_s
+        tenant = result.tenant
+        if result.ok:
+            self._tenant_c["ok"].labels(tenant=tenant).inc()
+            self._tenant_c["edges_scanned"].labels(tenant=tenant).inc(
+                int(edges))
+        else:
+            self._tenant_c["failed"].labels(tenant=tenant).inc()
+            if self.events is not None:
+                self.events.emit("request_failed", tenant=tenant,
+                                 graph=result.graph, program=result.program,
+                                 seq=result.seq, error=result.error)
+        self._tenant_c["exec_s"].labels(tenant=tenant).inc(result.exec_s)
+        self._tenant_c["queued_s"].labels(tenant=tenant).inc(result.queued_s)
 
     def occupancy(self) -> "float | None":
         """Mean live requests per executed batch (isolation replays
@@ -90,16 +164,22 @@ class ServeAccounting:
         return sum(live) / len(live) if live else None
 
     def reset(self) -> None:
-        """Zero everything (the load generator resets between offered-load
-        points so each point's occupancy/latency stands alone)."""
+        """Zero the serve_* series and the batch records (the load
+        generator resets between offered-load points so each point's
+        occupancy/latency stands alone).  Other registry metrics and
+        collectors are untouched."""
         with self._lock:
-            self.tenants = {}
             self.batches = []
+        for counter in self._tenant_c.values():
+            counter.clear()
+        for m in (self._batches_c, self._batch_live_c, self._batch_padded_c,
+                  self._isolated_c, self._batch_exec_h):
+            m.clear()
 
     def snapshot(self) -> dict:
         with self._lock:
             batches = list(self.batches)
-            tenants = {t: s.as_dict() for t, s in self.tenants.items()}
+        tenants = {t: s.as_dict() for t, s in self.tenants.items()}
         live = [b.live for b in batches if not b.isolated]
         padded = [b.padded_to for b in batches if not b.isolated]
         return {

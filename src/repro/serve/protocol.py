@@ -90,6 +90,8 @@ class QueryResult:
     batch_size: int = 1      # live requests in the executed batch
     padded_to: int = 1       # compiled capacity class B the batch ran at
     t_done: float = 0.0      # perf_counter stamp at fulfilment
+    trace: Any = None        # repro.obs.RequestTrace span lifecycle
+                             #   (queue/coalesce/execute/demux)
 
 
 class QueryTicket:

@@ -26,6 +26,7 @@ import dataclasses
 import itertools
 import threading
 import time
+import warnings
 
 import numpy as np
 
@@ -33,6 +34,7 @@ import jax
 
 from repro.api.session import DistGraph, GraphSession, check_vertex_ids
 from repro.core.types import BFSOutput
+from repro.obs import EventLog, MetricsRegistry, request_trace, to_prometheus
 from repro.runtime.fault import RetryPolicy, StepRunner, StragglerWatchdog
 from repro.serve.accounting import BatchRecord, ServeAccounting
 from repro.serve.protocol import (PROGRAMS, QueryRequest, QueryResult,
@@ -53,12 +55,16 @@ class ServeConfig:
                 raises ServerSaturated (backpressure).
     retry:      StepRunner retry/backoff policy for batch execution.
     straggler_factor: StragglerWatchdog flag threshold (x p99).
+    event_log_path: optional JSONL path the server's `repro.obs.EventLog`
+                appends batch / reject / retry / straggler / failure events
+                to (None = in-memory ring only).
     """
     max_batch: int = 8
     window_s: float = 0.01
     max_pending: int = 1024
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     straggler_factor: float = 3.0
+    event_log_path: "str | None" = None
 
 
 class _Outstanding:
@@ -87,22 +93,56 @@ class _GraphWorker:
 
     def __init__(self, name: str, graph: DistGraph, cfg: ServeConfig,
                  acct: ServeAccounting, outstanding: _Outstanding,
-                 exec_lock: threading.Lock):
+                 exec_lock: threading.Lock, metrics: MetricsRegistry = None,
+                 events: EventLog = None):
         self.name = name
         self.graph = graph
         self.cfg = cfg
         self.acct = acct
         self.outstanding = outstanding
         self.exec_lock = exec_lock
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.events = events
         self.batcher = ContinuousBatcher(window_s=cfg.window_s,
                                          max_pending=cfg.max_pending)
+        # per-tenant fault attribution: every retry / straggler flag of a
+        # batch counts once for each tenant riding it (DESIGN.md sec. 13)
+        self._retry_c = self.metrics.counter(
+            "fault_retries_total", "Batch execution retries",
+            labelnames=("graph", "tenant"))
+        self._straggler_c = self.metrics.counter(
+            "fault_straggler_total", "Straggler-flagged batch executions",
+            labelnames=("graph", "tenant"))
         self.runner = StepRunner(
             self._step, policy=cfg.retry,
-            watchdog=StragglerWatchdog(factor=cfg.straggler_factor))
+            watchdog=StragglerWatchdog(factor=cfg.straggler_factor),
+            on_retry=self._on_retry, on_straggler=self._on_straggler)
+        # request-lifecycle latency breakdown (queue-wait vs execute)
+        self._queue_h = self.metrics.histogram(
+            "serve_queue_wait_seconds",
+            "Admission -> execution-start wall per request",
+            labelnames=("graph", "program"))
+        self._exec_h = self.metrics.histogram(
+            "serve_execute_seconds",
+            "Batch execution wall attributed per request",
+            labelnames=("graph", "program"))
         self._sessions: dict = {}        # resolved BFSConfig -> GraphSession
         self._session_lock = threading.Lock()
         self._step_no = 0
         self._thread = None
+
+    def _on_retry(self, tenants):
+        for t in tenants:
+            self._retry_c.labels(graph=self.name, tenant=t).inc()
+        if self.events is not None:
+            self.events.emit("retry", graph=self.name, tenants=list(tenants))
+
+    def _on_straggler(self, tenants, seconds):
+        for t in tenants:
+            self._straggler_c.labels(graph=self.name, tenant=t).inc()
+        if self.events is not None:
+            self.events.emit("straggler", graph=self.name,
+                             tenants=list(tenants), seconds=seconds)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -148,21 +188,29 @@ class _GraphWorker:
 
     def _execute(self, key, entries):
         """Run the batch through the session layer; returns per-slot
-        (values, edges) plus the padded capacity class."""
+        (values, edges) plus the padded capacity class.
+
+        Each jitted execution runs under a `jax.profiler.TraceAnnotation`
+        named serve/<program>, so device profiles line up with the span
+        names on `QueryResult.trace`; telemetry-enabled sessions also
+        demux their per-slot `LevelTrace` onto each value.
+        """
         sess = self.session_for(key.config)
         program = key.program
         if program == "bfs":
             roots = [int(e.req.arg) for e in entries]
             B = pad_class(len(roots), key.cap)
             padded = roots + [roots[0]] * (B - len(roots))
-            out = sess.bfs(np.asarray(padded, np.int32))
-            jax.block_until_ready(out.level)
+            with jax.profiler.TraceAnnotation("serve/bfs"):
+                out = sess.bfs(np.asarray(padded, np.int32))
+                jax.block_until_ready(out.level)
             values = [
                 BFSOutput(level=out.level[s], pred=out.pred[s],
                           n_levels=out.n_levels[s],
                           edges_scanned=out.edges_scanned[s],
                           directions=None if out.directions is None
-                          else out.directions[s])
+                          else out.directions[s],
+                          trace=None if out.trace is None else out.trace[s])
                 for s in range(len(roots))]
             edges = [v.edges_scanned for v in values]
             return values, edges, B
@@ -171,29 +219,33 @@ class _GraphWorker:
             roots = [int(e.req.arg) for e in entries]
             B = pad_class(len(roots), key.cap)
             padded = roots + [roots[0]] * (B - len(roots))
-            out = sess.sssp(np.asarray(padded, np.int32))
-            jax.block_until_ready(out.dist)
+            with jax.profiler.TraceAnnotation("serve/sssp"):
+                out = sess.sssp(np.asarray(padded, np.int32))
+                jax.block_until_ready(out.dist)
             values = [
                 SSSPOutput(dist=out.dist[s], n_iters=out.n_iters[s],
                            edges_scanned=out.edges_scanned[s],
                            directions=None if out.directions is None
-                           else out.directions[s])
+                           else out.directions[s],
+                           trace=None if out.trace is None else out.trace[s])
                 for s in range(len(roots))]
             edges = [v.edges_scanned for v in values]
             return values, edges, B
         if program == "cc":
             # argument-free: ONE execution, every caller gets the result;
             # the whole search's edges are accounted to the first caller
-            out = sess.connected_components()
-            jax.block_until_ready(out.labels)
+            with jax.profiler.TraceAnnotation("serve/cc"):
+                out = sess.connected_components()
+                jax.block_until_ready(out.labels)
             values = [out] * len(entries)
             edges = [out.edges_scanned] + [0] * (len(entries) - 1)
             return values, edges, 1
         if program == "multi_bfs":
             assert len(entries) == 1, "multi_bfs requests never coalesce"
             req = entries[0].req
-            out = sess.multi_bfs(np.asarray(req.arg, np.int32), k=req.k)
-            jax.block_until_ready(out.level)
+            with jax.profiler.TraceAnnotation("serve/multi_bfs"):
+                out = sess.multi_bfs(np.asarray(req.arg, np.int32), k=req.k)
+                jax.block_until_ready(out.level)
             return [out], [out.edges_scanned], 1
         raise ValueError(f"unknown program {program!r}")
 
@@ -203,30 +255,35 @@ class _GraphWorker:
         # their collective rendezvous and deadlock, so execution
         # serializes here (lock wait counts as queued_s, not exec_s) while
         # admission and batch assembly stay concurrent
+        t_dispatch = time.perf_counter()
         with self.exec_lock:
-            self._serve_batch_locked(key, entries)
+            self._serve_batch_locked(key, entries, t_dispatch)
 
-    def _serve_batch_locked(self, key, entries):
+    def _serve_batch_locked(self, key, entries, t_dispatch):
+        tenants = tuple(sorted({e.req.tenant for e in entries}))
         t_start = time.perf_counter()
         try:
             _, infos = self.runner.run(None, [(key, entries)],
-                                       start_step=self._step_no)
+                                       start_step=self._step_no,
+                                       labels=tenants)
             values, edges, padded = infos[0]
         except Exception:
             self._step_no += 1
-            self._isolate(key, entries)
+            self._isolate(key, entries, t_dispatch)
             return
         self._step_no += 1
-        exec_s = time.perf_counter() - t_start
+        t_exec_end = time.perf_counter()
+        exec_s = t_exec_end - t_start
         self.acct.record_batch(BatchRecord(
             graph=self.name, program=key.program, live=len(entries),
             padded_to=padded, exec_s=exec_s))
         for e, value, n_edges in zip(entries, values, edges):
             self._fulfil(e, ok=True, value=value, edges=n_edges,
                          exec_s=exec_s, t_start=t_start,
+                         t_dispatch=t_dispatch, t_exec_end=t_exec_end,
                          live=len(entries), padded=padded)
 
-    def _isolate(self, key, entries):
+    def _isolate(self, key, entries, t_dispatch):
         """Batch retries exhausted: replay each request alone so only the
         poisoned one fails (transient faults were already retried)."""
         for e in entries:
@@ -234,29 +291,49 @@ class _GraphWorker:
             try:
                 _, (values, edges, padded) = self._step(None, (key, [e]))
             except Exception as exc:
+                t1 = time.perf_counter()
                 self.acct.record_batch(BatchRecord(
                     graph=self.name, program=key.program, live=1,
-                    padded_to=1, exec_s=time.perf_counter() - t0,
-                    isolated=True))
+                    padded_to=1, exec_s=t1 - t0, isolated=True))
                 self._fulfil(e, ok=False, error=f"{type(exc).__name__}: "
-                             f"{exc}", exec_s=time.perf_counter() - t0,
-                             t_start=t0, live=1, padded=1)
+                             f"{exc}", exec_s=t1 - t0, t_start=t0,
+                             t_dispatch=t_dispatch, t_exec_end=t1,
+                             live=1, padded=1, isolated=True)
                 continue
-            exec_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            exec_s = t1 - t0
             self.acct.record_batch(BatchRecord(
                 graph=self.name, program=key.program, live=1,
                 padded_to=padded, exec_s=exec_s, isolated=True))
             self._fulfil(e, ok=True, value=values[0], edges=edges[0],
-                         exec_s=exec_s, t_start=t0, live=1, padded=padded)
+                         exec_s=exec_s, t_start=t0, t_dispatch=t_dispatch,
+                         t_exec_end=t1, live=1, padded=padded,
+                         isolated=True)
 
     def _fulfil(self, entry, *, ok, exec_s, t_start, live, padded,
-                value=None, edges=0, error=None):
+                t_dispatch=None, t_exec_end=None, value=None, edges=0,
+                error=None, isolated=False):
         req = entry.req
+        t_done = time.perf_counter()
+        queued_s = max(t_start - entry.t_admit, 0.0)
+        if t_dispatch is None:
+            t_dispatch = t_start
+        if t_exec_end is None:
+            t_exec_end = t_start + exec_s
+        trace = request_trace(
+            req.seq, self.name, req.program, t_admit=entry.t_admit,
+            t_dispatch=t_dispatch, t_exec_start=t_start,
+            t_exec_end=t_exec_end, t_done=t_done, live=live, padded=padded,
+            isolated=isolated)
+        self._queue_h.labels(graph=self.name,
+                             program=req.program).observe(queued_s)
+        self._exec_h.labels(graph=self.name,
+                            program=req.program).observe(exec_s)
         result = QueryResult(
             ok=ok, seq=req.seq, tenant=req.tenant, graph=self.name,
             program=req.program, value=value, error=error,
-            queued_s=max(t_start - entry.t_admit, 0.0), exec_s=exec_s,
-            batch_size=live, padded_to=padded, t_done=time.perf_counter())
+            queued_s=queued_s, exec_s=exec_s,
+            batch_size=live, padded_to=padded, t_done=t_done, trace=trace)
         self.acct.record_result(result, edges=edges)
         entry.ticket._fulfil(result)
         self.outstanding.dec()
@@ -279,7 +356,14 @@ class GraphServer:
     def __init__(self, graphs: "dict[str, DistGraph] | None" = None,
                  config: "ServeConfig | None" = None):
         self.config = config if config is not None else ServeConfig()
-        self.accounting = ServeAccounting()
+        # one metrics registry + event log per server (DESIGN.md sec. 13):
+        # every counter this server emits lives here, so a fresh server
+        # over long-lived graphs starts its accounting from zero
+        self.metrics = MetricsRegistry()
+        self.events = EventLog(self.config.event_log_path)
+        self.metrics.register_collector(self._collect)
+        self.accounting = ServeAccounting(registry=self.metrics,
+                                          events=self.events)
         # serializes device execution across graph workers (they share one
         # device set; see _GraphWorker._serve_batch)
         self._exec_lock = threading.Lock()
@@ -296,7 +380,8 @@ class GraphServer:
         if name in self._workers:
             raise ValueError(f"graph {name!r} already resident")
         worker = _GraphWorker(name, graph, self.config, self.accounting,
-                              self._outstanding, self._exec_lock)
+                              self._outstanding, self._exec_lock,
+                              metrics=self.metrics, events=self.events)
         self._workers[name] = worker
         if self._started:
             worker.start()
@@ -436,19 +521,70 @@ class GraphServer:
 
     # -- observability -------------------------------------------------------
 
-    def stats(self) -> dict:
-        """Accounting snapshot + per-graph cache/runner/queue state."""
+    def _collect(self):
+        """Registry collector: pull-time samples from sources that keep
+        their own authoritative counters (queue depths, the AOT caches,
+        engine trace counts, runner retry/straggler totals)."""
+        for n, w in self._workers.items():
+            yield ("serve_pending", "gauge",
+                   "Requests admitted, not yet dispatched", {"graph": n},
+                   w.batcher.pending)
+            for k, v in w.graph.cache_stats().items():
+                if v is not None:
+                    yield (f"aot_cache_{k}", "gauge",
+                           "AOT executable cache state", {"graph": n}, v)
+            for key, eng in w.graph._engines.items():
+                yield ("engine_trace_count", "gauge",
+                       "Level-loop traces this engine has paid",
+                       {"graph": n, "engine": str(key)}, eng.trace_count)
+            yield ("runner_retries", "gauge", "StepRunner retries",
+                   {"graph": n}, w.runner.retries)
+            yield ("runner_restores", "gauge", "StepRunner restores",
+                   {"graph": n}, w.runner.restores)
+            yield ("runner_straggler_flagged", "gauge",
+                   "Straggler-flagged steps", {"graph": n},
+                   len(w.runner.watchdog.flagged))
+
+    def metrics_snapshot(self) -> dict:
+        """Accounting snapshot + per-graph cache/runner/queue state -- every
+        number a view over the server's one metrics registry (plus the
+        runners' own attribution dicts).  Same dict shape the deprecated
+        `stats()` always returned, with per-tenant retry attribution added
+        under runners.<graph>.retries_by_tenant."""
         snap = self.accounting.snapshot()
         snap["pending"] = {n: w.batcher.pending
                            for n, w in self._workers.items()}
-        snap["aot_cache"] = {n: w.graph.aot_cache_stats()
+        snap["aot_cache"] = {n: w.graph.cache_stats()
                              for n, w in self._workers.items()}
         snap["runners"] = {
             n: {"retries": w.runner.retries, "restores": w.runner.restores,
-                "straggler_flagged": len(w.runner.watchdog.flagged)}
+                "straggler_flagged": len(w.runner.watchdog.flagged),
+                "retries_by_tenant": dict(w.runner.retries_by),
+                "straggler_by_tenant": dict(w.runner.straggler_by)}
             for n, w in self._workers.items()}
         snap["trace_counts"] = {
             n: {str(key): eng.trace_count
                 for key, eng in w.graph._engines.items()}
             for n, w in self._workers.items()}
         return snap
+
+    def stats(self) -> dict:
+        """Deprecated spelling of `metrics_snapshot()` (same dict)."""
+        warnings.warn(
+            "GraphServer.stats() is deprecated; use metrics_snapshot() "
+            "(same dict), prometheus() for text exposition, or the "
+            "server's .metrics registry directly", DeprecationWarning,
+            stacklevel=2)
+        return self.metrics_snapshot()
+
+    def prometheus(self) -> str:
+        """Prometheus text-format exposition of the server's registry."""
+        return to_prometheus(self.metrics)
+
+    def reset_metrics(self) -> None:
+        """Zero the serve counters AND the per-graph runner attribution
+        (the load generator's between-points reset; collectors pull from
+        live sources and are unaffected)."""
+        self.accounting.reset()
+        for w in self._workers.values():
+            w.runner.reset_stats()

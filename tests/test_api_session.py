@@ -177,7 +177,7 @@ def test_aot_cache_bounded_with_stats(graph_data):
     sess = graph.session()
     for B in range(1, 7):                    # 6 distinct capacity classes
         sess.bfs(roots[:B])
-    stats = graph.aot_cache_stats()
+    stats = graph.cache_stats()
     assert len(graph._compiled) <= 3, "cache exceeded its cap"
     assert stats["size"] <= 3 and stats["maxsize"] == 3
     assert stats["misses"] == 6 and stats["evictions"] == 3
@@ -185,10 +185,10 @@ def test_aot_cache_bounded_with_stats(graph_data):
     # and the recompiled sweep is still bit-identical
     traces = sess.engine.trace_count
     out6 = sess.bfs(roots[:6])
-    assert graph.aot_cache_stats()["hits"] == stats["hits"] + 1
+    assert graph.cache_stats()["hits"] == stats["hits"] + 1
     assert sess.engine.trace_count == traces
     out1 = sess.bfs(roots[:1])               # B=1 was evicted
-    assert graph.aot_cache_stats()["misses"] == stats["misses"] + 1
+    assert graph.cache_stats()["misses"] == stats["misses"] + 1
     assert (np.asarray(out1.level[0]) == np.asarray(out6.level[0])).all()
 
 

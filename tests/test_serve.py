@@ -227,7 +227,7 @@ def test_transient_fault_retried_invisibly(graphs):
         res = _value(t)
         assert (np.asarray(res.value.level)
                 == np.asarray(ga.session().bfs(int(roots[0])).level)).all()
-        assert srv.stats()["runners"]["a"]["retries"] >= 1
+        assert srv.metrics_snapshot()["runners"]["a"]["retries"] >= 1
 
 
 def test_poisoned_request_fails_alone(graphs):
@@ -253,7 +253,7 @@ def test_poisoned_request_fails_alone(graphs):
     after = srv.bfs("a", int(roots[5]))
     srv.drain()
     assert _value(after).ok
-    stats = srv.stats()
+    stats = srv.metrics_snapshot()
     assert stats["tenants"]["default"]["failed"] == 1
     assert stats["n_isolated"] >= 1
     srv.stop()
@@ -293,7 +293,7 @@ def test_backpressure_raises_server_saturated(graphs):
     srv.bfs("a", int(roots[1]))
     with pytest.raises(ServerSaturated, match="max_pending"):
         srv.bfs("a", int(roots[2]))
-    assert srv.stats()["tenants"]["default"]["rejected"] == 1
+    assert srv.metrics_snapshot()["tenants"]["default"]["rejected"] == 1
     srv.start()
     srv.drain()
     srv.stop()
