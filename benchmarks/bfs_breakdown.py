@@ -11,8 +11,8 @@ the worker cross-checks every channel against an independent recomputation
 64-bit edges_scanned total) and this suite asserts those agreement rows.
 
 Emits two CSVs:
-  fig5_6_breakdown  scale,R,C,level,frontier,scanned,folded,wire_bytes,dir
-                    (one row per level, list codec)
+  fig5_6_breakdown  scale,R,C,level,frontier,scanned,folded,wire_bytes,
+                    msgs,dir   (one row per level, list codec)
   fold_wire         scale,R,C,codec,level,folded,msgs_before,msgs_after,
                     set_bytes_before,set_bytes_after,value_bytes_dense,
                     value_bytes_sent,edges     (one row per codec x level)
@@ -38,7 +38,7 @@ def main():
     grids = [(2, 2, bench_scale(10))] if smoke_mode() \
         else [(2, 2, bench_scale(14)), (2, 4, bench_scale(15))]
     phase_rows = [("scale", "R", "C", "level", "frontier", "scanned",
-                   "folded", "wire_bytes", "dir")]
+                   "folded", "wire_bytes", "msgs", "dir")]
     wire_rows = [("scale", "R", "C", "codec", "level", "folded",
                   "set_msgs_before", "value_msgs_before", "msgs_after",
                   "set_bytes_before", "set_bytes_after", "value_bytes_dense",
@@ -69,12 +69,12 @@ def main():
         if bad:
             raise AssertionError(f"trace disagrees with independent "
                                  f"recomputation at {r}x{c}: {bad}")
-        for lvl, frontier, scanned, folded, wire, d in traces["list"]:
+        for lvl, frontier, scanned, folded, wire, msgs, d in traces["list"]:
             phase_rows.append(
-                (scale, r, c, lvl, frontier, scanned, folded, wire, d))
+                (scale, r, c, lvl, frontier, scanned, folded, wire, msgs, d))
         for codec, rows in traces.items():
             wb, wbv = static[codec]
-            for lvl, frontier, scanned, folded, wire, d in rows:
+            for lvl, frontier, scanned, folded, wire, msgs, d in rows:
                 wire_rows.append(
                     (scale, r, c, codec, lvl, folded, MSGS_BEFORE[codec],
                      MSGS_VALUE_BEFORE[codec], 1, wb * P, wire, wbv * P,

@@ -1,0 +1,82 @@
+"""Exchange-strategy crossover: flat vs butterfly fold routes on a 1 x C
+column grid (DESIGN.md sec. 14), from the in-program telemetry channel.
+
+Drives workers/exchange_worker.py (C simulated devices) once per strategy
+x fold codec and asserts, in-process, the contracts the BENCH gate
+re-checks on the aggregated JSON:
+
+  * bit-identity: level/pred checksums + edges_scanned are EQUAL across
+    strategies for every codec (the butterfly is store-and-forward over
+    the codecs' encoded wire arrays, so outputs cannot differ);
+  * the message crossover: at power-of-two C >= 4 the butterfly's
+    log2(C) staged ppermutes per device per level STRICTLY undercut the
+    flat single all_to_all's C-1 messages;
+  * the set-fold volume identity at C = 4: (fb/C) * (C/2) * log2(C) = fb,
+    so the butterfly wins messages without paying extra set-fold bytes
+    (value folds pay popcount(j ^ d) hops per entry -- reported, not
+    gated, since the sign depends on the frontier shape).
+
+Emits one CSV:
+  exchange  C,scale,strategy,codec,level,frontier,folded,wire_bytes,msgs
+            (one row per strategy x codec x level)
+"""
+from benchmarks.common import bench_scale, emit, run_worker, smoke_mode
+
+EXPECTED_MSGS = {"flat": lambda c: c - 1,
+                 "butterfly": lambda c: (c - 1).bit_length()}
+
+
+def main():
+    c = 4
+    scale = bench_scale(10 if smoke_mode() else 13)
+    out = run_worker("exchange_worker.py", c, scale, 16).strip()
+    levels, sums, totals = [], {}, {}
+    for line in out.splitlines():
+        parts = line.strip().split(",")
+        if parts[0] == "X":
+            levels.append((parts[1], parts[2], *[int(x) for x in parts[3:]]))
+        elif parts[0] == "G":
+            sums[(parts[1], parts[2])] = tuple(int(x) for x in parts[3:])
+        elif parts[0] == "S":
+            totals[(parts[1], parts[2])] = tuple(int(x) for x in parts[3:])
+    if not levels or len(sums) != 6 or len(totals) != 6:
+        raise AssertionError(f"exchange_worker produced an incomplete row "
+                             f"set:\n{out}")
+
+    # bit-identity across strategies, per codec
+    for codec in ("list", "bitmap", "delta"):
+        if sums[("flat", codec)] != sums[("butterfly", codec)]:
+            raise AssertionError(
+                f"flat vs butterfly outputs differ for codec {codec}: "
+                f"{sums[('flat', codec)]} vs {sums[('butterfly', codec)]}")
+
+    # per-level message counts match the strategy formula (x C devices),
+    # and the butterfly strictly undercuts flat at C >= 4
+    for strategy, codec, _lvl, _f, _fold, _wire, msgs in levels:
+        want = EXPECTED_MSGS[strategy](c) * c
+        if msgs != want:
+            raise AssertionError(f"{strategy}/{codec}: per-level msgs "
+                                 f"{msgs} != {want}")
+    for codec in ("list", "bitmap", "delta"):
+        mf, mb = totals[("flat", codec)][1], totals[("butterfly", codec)][1]
+        if not mb < mf:
+            raise AssertionError(f"butterfly msgs {mb} !< flat msgs {mf} "
+                                 f"at C={c} ({codec})")
+        # equal level counts -> set-fold volume identity holds at C=4 for
+        # the SET-fold levels; totals differ only by the value-channel
+        # hop term, which BFS set folds do not have
+        wf, wb = totals[("flat", codec)][2], totals[("butterfly", codec)][2]
+        if wf != wb:
+            raise AssertionError(f"set-fold wire volume differs at C=4 "
+                                 f"({codec}): flat={wf} butterfly={wb}")
+
+    rows = [("C", "scale", "strategy", "codec", "level", "frontier",
+             "folded", "wire_bytes", "msgs")]
+    for strategy, codec, lvl, frontier, folded, wire, msgs in levels:
+        rows.append((c, scale, strategy, codec, lvl, frontier, folded,
+                     wire, msgs))
+    emit(rows, "exchange")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,8 +6,9 @@ the obs-smoke CI job gates on:
   agreement    every LevelTrace channel matches an independent
                recomputation (frontier vs np.bincount of the output levels,
                wire bytes vs the codec's static formula x P, scanned vs the
-               64-bit edges_scanned total, trace.direction vs the engine's
-               own directions output)
+               64-bit edges_scanned total, msgs vs the exchange strategy's
+               per-exchange count x P, trace.direction vs the engine's own
+               directions output)
   bitexact     telemetry on vs off produce bit-identical level/pred arrays
                per codec (checksummed in the worker)
   trace_counts per codec: engine.trace_count after the first batched sweep
@@ -47,7 +48,8 @@ def main():
             agreement[parts[1]] = {
                 "frontier_ok": parts[2] == "True",
                 "wire_ok": parts[3] == "True",
-                "scanned_ok": parts[4] == "True"}
+                "scanned_ok": parts[4] == "True",
+                "msgs_ok": parts[5] == "True"}
         elif parts[0] == "D":
             dir_ok = parts[1] == "True"
         elif parts[0] == "E":

@@ -17,6 +17,10 @@ expand times per expand path) is trackable across PRs.
   expand reference vs fused-Pallas(-interpret) per-level expand times
   direction top-down vs bottom-up vs adaptive sweep + per-level alpha/beta
          decisions and bottom-up phase times (DESIGN.md sec. 11)
+  exchange flat vs butterfly fold routes on a 1x4 column grid: per-level
+         message/byte totals from the LevelTrace msgs channel, the
+         log2(C)-vs-(C-1) message crossover, bit-identity across
+         strategies (DESIGN.md sec. 14)
   kernels Pallas-kernel parity + oracle timings
 
 CLI:
@@ -37,11 +41,11 @@ CLI:
   --scale N   force every honoring suite to graph scale N (REPRO_BENCH_SCALE)
   --smoke     reduced CI suite list (fold codecs on 2x2 simulated devices,
               strong-scaling mini sweep, per-level breakdown + fold wire
-              bytes, algos sweep, expand paths, kernel parity) with fewer
-              roots/iters; the bit-exactness and schema gates still run in
-              full and a violation exits non-zero (the regression gates are
-              on correctness counters and wire-byte accounting, never on
-              wall-clock)
+              bytes, algos sweep, expand paths, exchange crossover, kernel
+              parity) with fewer roots/iters; the bit-exactness and schema
+              gates still run in full and a violation exits non-zero (the
+              regression gates are on correctness counters and wire-byte
+              accounting, never on wall-clock)
 """
 import argparse
 import json
@@ -107,7 +111,8 @@ def write_bench_json() -> None:
         {"scale": _f(r.get("scale")), "grid": f'{r.get("R")}x{r.get("C")}',
          "level": _f(r.get("level")), "frontier": _f(r.get("frontier")),
          "scanned": _f(r.get("scanned")), "folded": _f(r.get("folded")),
-         "wire_bytes": _f(r.get("wire_bytes")), "dir": _f(r.get("dir"))}
+         "wire_bytes": _f(r.get("wire_bytes")), "msgs": _f(r.get("msgs")),
+         "dir": _f(r.get("dir"))}
         for r in read_csv("fig5_6_breakdown")]
 
     # fold wire-byte accounting per codec, summed over the measured levels:
@@ -164,11 +169,41 @@ def write_bench_json() -> None:
          "dir": _f(r.get("dir")), "bottomup_s": _f(r.get("bottomup_s"))}
         for r in read_csv("direction_levels")]
 
+    # the exchange dimension (v8): flat vs butterfly fold routes on a 1xC
+    # column grid -- per-level msgs/bytes from the LevelTrace, aggregated
+    # to per-strategy totals so the message crossover (log2(C) vs C-1) is
+    # trackable across PRs (benchmarks/bfs_exchange.py; DESIGN.md sec. 14)
+    ex_rows = read_csv("exchange")
+    exchange = {}
+    for r in ex_rows:
+        key = (r["strategy"], r["codec"])
+        agg = exchange.setdefault(key, {
+            "strategy": r["strategy"], "codec": r["codec"],
+            "C": int(r["C"]), "scale": _f(r.get("scale")),
+            "levels": 0, "total_msgs": 0, "total_wire_bytes": 0,
+            "folded": 0})
+        agg["levels"] += 1
+        agg["total_msgs"] += int(r["msgs"])
+        agg["total_wire_bytes"] += int(r["wire_bytes"])
+        agg["folded"] += int(r["folded"])
+    exchange = [exchange[k] for k in sorted(exchange)]
+    # bit-identity across strategies is asserted INSIDE bfs_exchange.py on
+    # the raw checksums; the JSON records whether the comparison ran and
+    # whether every (codec, level) row pair agreed on frontier/folded
+    by_cell = {}
+    for r in ex_rows:
+        by_cell.setdefault((r["codec"], r["level"]), {})[r["strategy"]] = \
+            (r.get("frontier"), r.get("folded"))
+    exchange_agree = (all(len(set(cell.values())) == 1
+                          for cell in by_cell.values())
+                      if ex_rows else None)
+
     out = {
-        "schema": "BENCH_bfs/v7",   # v7: phases = in-program LevelTrace
-                                    # counters (frontier/scanned/folded/
-                                    # wire_bytes/dir) instead of host-replay
-                                    # wall times; v6: + direction
+        "schema": "BENCH_bfs/v8",   # v8: + exchange (flat-vs-butterfly
+                                    # message/byte totals + agreement) and
+                                    # the msgs trace channel in phases;
+                                    # v7: phases = in-program LevelTrace
+                                    # counters instead of host-replay times
         "teps": {
             "weak_scaling": teps_rows("fig3_weak_scaling"),
             "strong_scaling": teps_rows("fig4_strong_scaling"),
@@ -192,6 +227,8 @@ def write_bench_json() -> None:
         "direction_agree": (
             len({(v["lvl_sum"], v["pred_sum"]) for v in direction.values()})
             == 1 if direction else None),
+        "exchange": exchange,
+        "exchange_agree": exchange_agree,
     }
     path = emit_json(out, "BENCH_bfs")
     print(f"\nwrote {path}")
@@ -347,17 +384,34 @@ def validate_bench(smoke: bool) -> list:
     if bfs is None:
         errors.append("BENCH_bfs.json missing")
     else:
-        if bfs.get("schema") != "BENCH_bfs/v7":
+        if bfs.get("schema") != "BENCH_bfs/v8":
             errors.append(f"BENCH_bfs schema {bfs.get('schema')!r} != "
-                          f"'BENCH_bfs/v7'")
+                          f"'BENCH_bfs/v8'")
         for key in ("teps", "fold_codecs", "codecs_agree", "phases",
                     "fold_wire", "expand_paths", "expand_paths_agree",
-                    "direction", "direction_levels", "direction_agree"):
+                    "direction", "direction_levels", "direction_agree",
+                    "exchange", "exchange_agree"):
             if key not in bfs:
                 errors.append(f"BENCH_bfs missing key {key!r}")
         if bfs.get("codecs_agree") is False:
             errors.append("fold codecs disagree on levels/preds "
                           "(codecs_agree = false)")
+        if bfs.get("exchange_agree") is False:
+            errors.append("flat vs butterfly per-level counters disagree "
+                          "(exchange_agree = false)")
+        # the butterfly must strictly undercut flat on per-level message
+        # count whenever the exchange suite ran (log2(C) < C-1 at C >= 4);
+        # wire-byte totals are trajectory data, never gated on magnitude
+        ex = bfs.get("exchange") or []
+        ex_msgs = {}
+        for agg in ex:
+            ex_msgs.setdefault(agg.get("codec"), {})[agg.get("strategy")] \
+                = agg.get("total_msgs")
+        for codec, per in ex_msgs.items():
+            mf, mb = per.get("flat"), per.get("butterfly")
+            if mf is not None and mb is not None and not (mb < mf):
+                errors.append(f"exchange[{codec}]: butterfly msgs {mb} !< "
+                              f"flat msgs {mf}")
         if bfs.get("expand_paths_agree") is False:
             errors.append("expand paths disagree on levels "
                           "(expand_paths_agree = false)")
@@ -405,6 +459,11 @@ def validate_bench(smoke: bool) -> list:
                     errors.append(f"smoke: direction[{mode!r}] missing")
             if not bfs.get("direction_levels"):
                 errors.append("smoke: direction_levels section empty")
+            if not bfs.get("exchange"):
+                errors.append("smoke: exchange section empty")
+            if not any(a.get("strategy") == "butterfly"
+                       for a in bfs.get("exchange") or []):
+                errors.append("smoke: exchange has no butterfly entry")
             # the adaptive heuristic must actually flip at the smoke scale:
             # at least one top-down AND one bottom-up level
             ad = (dr.get("adaptive") or {}).get("dirs") or []
@@ -485,7 +544,8 @@ def main(argv=None) -> None:
     from benchmarks import (bfs_weak_scaling, bfs_strong_scaling,
                             bfs_breakdown, bfs_1d_vs_2d, bfs_fold_codecs,
                             bfs_expand_paths, bfs_expansion_variants,
-                            bfs_realworld, algos_sweep, kernel_bench)
+                            bfs_exchange, bfs_realworld, algos_sweep,
+                            kernel_bench)
     # (suite label, entry point, CSV name(s) the suite emits)
     suites = [
         ("algos_sweep", algos_sweep.main, "algos_sweep"),
@@ -501,13 +561,14 @@ def main(argv=None) -> None:
          "table2_fig8_expansion_variants"),
         ("direction_sweep", bfs_expansion_variants.direction_sweep,
          ("direction_sweep", "direction_levels")),
+        ("exchange", bfs_exchange.main, "exchange"),
         ("table3_realworld", bfs_realworld.main, "table3_realworld"),
         ("kernel_bench", kernel_bench.main, "kernel_bench"),
     ]
     if args.smoke:
         keep = {"algos_sweep", "fig4_strong_scaling", "fig5_6_breakdown",
                 "fold_codecs", "expand_paths", "direction_sweep",
-                "kernel_bench"}
+                "exchange", "kernel_bench"}
         suites = [s for s in suites if s[0] in keep]
     failures = 0
     for name, fn, csv_names in suites:

@@ -8,9 +8,9 @@ independent recomputation (np.bincount of the output levels, the codec's
 static wire formula, the 64-bit edges_scanned total).
 
 Output lines (parsed by benchmarks/bfs_breakdown.py / obs_bench.py):
-  T,codec,level,frontier,scanned,folded,wire_bytes,dir   per codec x level
+  T,codec,level,frontier,scanned,folded,wire_bytes,msgs,dir  per codec/level
   W,codec,wire_bytes,wire_bytes_values                   static, per device
-  A,codec,frontier_ok,wire_ok,scanned_ok                 trace agreement
+  A,codec,frontier_ok,wire_ok,scanned_ok,msgs_ok         trace agreement
   D,dir_ok                                               trace.direction vs
                                                          out.directions
   M,edges,<component edges>,n_levels,<levels>
@@ -83,11 +83,16 @@ for codec in CODECS:
     wire_ok = all(int(tr.wire_bytes[k]) == wb * grid.P
                   for k in range(tr.n_levels))
     scanned_ok = tr.total_scanned == out.edges_scanned
+    # every device sends the strategy's per-exchange message count per level
+    mpx = sess.engine.exchange.msgs_per_exchange(grid.C)
+    msgs_ok = all(int(tr.msgs[k]) == mpx * grid.P
+                  for k in range(tr.n_levels))
     for row in tr.levels():
         print(f"T,{codec},{row['level']},{row['frontier']},{row['scanned']},"
-              f"{row['folded']},{row['wire_bytes']},{row['dir']}")
+              f"{row['folded']},{row['wire_bytes']},{row['msgs']},"
+              f"{row['dir']}")
     print(f"W,{codec},{wb},{wbv}")
-    print(f"A,{codec},{frontier_ok},{wire_ok},{scanned_ok}")
+    print(f"A,{codec},{frontier_ok},{wire_ok},{scanned_ok},{msgs_ok}")
 
 # trace.direction must match the engine's own directions output
 dsess = graph.session(cfg("list", telemetry=True, direction=True))

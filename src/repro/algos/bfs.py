@@ -69,8 +69,9 @@ def topdown_step(engine, graph: LocalGraph2D, st: BFSState, *, i, j):
 
     Returns (state', total, scanned, aux); aux is the per-level telemetry
     channel (DESIGN.md sec. 13) -- a SET fold, so the wire stamp is the
-    codec's static `wire_bytes(grid)` and `folded` counts the entries
-    routed to remote owners (the own column never travels).
+    exchange strategy's scaling of the codec's static `wire_bytes(grid)`,
+    `msgs` the strategy's per-exchange message count and `folded` the
+    entries routed to remote owners (the own column never travels).
     """
     topo, grid = engine.topo, engine.grid
     S = grid.S
@@ -113,8 +114,11 @@ def topdown_step(engine, graph: LocalGraph2D, st: BFSState, *, i, j):
 
     st2 = BFSState(level=up.level, pred=up.pred, visited=up.visited,
                    front=nf, front_cnt=nc, lvl=st.lvl + 1)
+    ex_strat = engine.exchange
     aux = {"folded": dst_cnt.sum(dtype=jnp.int32),
-           "wire": jnp.uint32(engine.codec.wire_bytes(grid)),
+           "wire": jnp.uint32(ex_strat.wire_bytes(
+               engine.codec.wire_bytes(grid), grid.C)),
+           "msgs": jnp.int32(ex_strat.msgs_per_exchange(grid.C)),
            "dir": jnp.int32(0)}
     return st2, topo.psum_all(nc), ex.edges_scanned, aux
 

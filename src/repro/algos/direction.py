@@ -234,9 +234,12 @@ def make_bfs_bottomup_step(engine, graph, extra, i, j):
         st2 = BFSState(level=level2, pred=pred2, visited=visited2, front=nf,
                        front_cnt=nc, lvl=st.lvl + 1)
         folded = cnt.sum(dtype=jnp.int32)   # value fold: count-proportional
+        ex_strat = engine.exchange
         aux = {"folded": folded,
-               "wire": jnp.uint32(engine.codec.wire_bytes(grid))
-               + 4 * folded.astype(jnp.uint32),
+               "wire": jnp.uint32(ex_strat.wire_bytes(
+                   engine.codec.wire_bytes(grid), grid.C))
+               + ex_strat.value_extra_bytes(cnt, j, grid.C),
+               "msgs": jnp.int32(ex_strat.msgs_per_exchange(grid.C)),
                "dir": jnp.int32(1)}
         return st2, topo.psum_all(nc), total.astype(jnp.uint32), aux
 

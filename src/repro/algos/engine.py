@@ -79,6 +79,14 @@ class FrontierEngine:
                 honors REPRO_FOLD and otherwise mirrors the expand rules.
                 All paths are bit-identical.
     dedup:      winner-selection method for set-valued folds.
+    exchange:   fold exchange strategy: "flat" (one all_to_all per fold) |
+                "butterfly" (log2(C) pairwise ppermute stages over the XOR
+                hypercube) | "auto" (butterfly when it strictly reduces
+                message count: power-of-two C >= 4 on a single column
+                axis) | an ExchangeStrategy instance (DESIGN.md sec. 14).
+                The resolved strategy is bound into the engine's topology,
+                so every codec and the predecessor resolution route through
+                it; outputs are bit-identical across strategies.
     bottomup:   bottom-up parent-search implementation: "reference" |
                 "pallas" | "pallas-interpret" | "auto" (DESIGN.md sec. 11).
                 "auto" honors REPRO_BOTTOMUP and otherwise mirrors the
@@ -97,12 +105,19 @@ class FrontierEngine:
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter", bottomup: str = "auto",
-                 telemetry: bool = False):
+                 exchange="flat", telemetry: bool = False):
         from repro.dist.exchange import get_fold_codec
+        from repro.dist.strategy import get_exchange
         from repro.kernels.select import (resolve_bottomup_path,
                                           resolve_expand_path,
                                           resolve_fold_path)
 
+        # resolve + validate the exchange strategy and bind it into the
+        # topology: codecs and resolve_preds call topo.col_all_to_all and
+        # pick the route up without knowing strategies exist
+        self.exchange = get_exchange(exchange, topo.grid, topo.col_axes)
+        if topo.exchange is not self.exchange:
+            topo = topo.with_exchange(self.exchange)
         self.topo = topo
         self.grid = topo.grid
         self.program = program
@@ -255,7 +270,12 @@ class FrontierEngine:
         This is the ONE funnel both invocation paths share: `run` /
         `run_batch` here, and the session layer's AOT executables (which
         call the compiled artifact directly and assemble through this).
+        In a process group the device outputs are global arrays whose
+        remote shards this process cannot read; fetch them first (identity
+        for every fully-addressable, i.e. single-process, output).
         """
+        from repro.dist import multihost
+        outs = multihost.fetch_all(outs)
         trace = None
         if self.telemetry:
             from repro.obs import trace as T

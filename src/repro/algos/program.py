@@ -270,10 +270,14 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
     fold_ops = engine.fold_ops
 
     # telemetry channel constants: pull scans are the bottom-up direction,
-    # and a value fold's wire bytes are count-proportional (PR 5's
-    # wire_bytes_values_sent = static header + 4 bytes per folded entry)
+    # and a value fold's wire bytes are count-proportional (on the flat
+    # route, PR 5's wire_bytes_values_sent = static header + 4 bytes per
+    # folded entry; the exchange strategy scales header and hop count)
     step_dir = jnp.int32(1 if scan is not None else 0)
-    wire_base = jnp.uint32(engine.codec.wire_bytes(grid))
+    ex_strat = engine.exchange
+    wire_base = jnp.uint32(ex_strat.wire_bytes(
+        engine.codec.wire_bytes(grid), grid.C))
+    step_msgs = jnp.int32(ex_strat.msgs_per_exchange(grid.C))
 
     def step(st: ValueState, prev_total):
         with jax.named_scope("repro/expand"):
@@ -310,7 +314,8 @@ def make_value_step(engine, graph, i, j, *, relax, edge_vals=None,
                          front_cnt=nc, it=st.it + 1)
         folded = cnt.sum(dtype=jnp.int32)
         aux = {"folded": folded,
-               "wire": wire_base + 4 * folded.astype(jnp.uint32),
+               "wire": wire_base + ex_strat.value_extra_bytes(cnt, j, grid.C),
+               "msgs": step_msgs,
                "dir": step_dir}
         return st2, topo.psum_all(nc), scanned, aux
 

@@ -71,6 +71,17 @@ class BFSConfig:
                  that replaces the per-level argsorts.  Same spellings and
                  rules as `expand`, with REPRO_FOLD as the environment
                  override.  Every path is bit-identical.
+    exchange:    fold exchange strategy (DESIGN.md sec. 14): "flat" (one
+                 all_to_all per fold -- every column sends C-1 direct
+                 messages), "butterfly" (log2(C) pairwise ppermute stages
+                 over the XOR hypercube -- log2(C) messages per column at
+                 (C/2)*log2(C) payload volume), or "auto" (butterfly
+                 whenever it strictly reduces message count: power-of-two
+                 C >= 4 on a single column axis; flat otherwise).  "auto"
+                 is normalised to the resolved name when a session binds
+                 the config to a planned grid, so the AOT caches key on the
+                 concrete strategy.  Outputs are bit-identical across
+                 strategies for every codec, program and expand/fold path.
     telemetry:   per-level trace channel (DESIGN.md sec. 13).  When True,
                  every search also returns a `repro.obs.LevelTrace` (per
                  level: global + per-device frontier counts, scanned edges,
@@ -94,6 +105,7 @@ class BFSConfig:
     expand: str = "auto"
     fold: str = "auto"
     bottomup: str = "auto"
+    exchange: str = "flat"
     telemetry: bool = False
 
     def __post_init__(self):
@@ -147,18 +159,41 @@ class BFSConfig:
         return resolve_bottomup_path(self.bottomup)
 
     @property
+    def exchange_name(self) -> str:
+        """The exchange spelling as a hashable cache-key component ("auto"
+        until `resolve_exchange` normalises it against a planned grid)."""
+        ex = self.exchange
+        return ex if isinstance(ex, str) else getattr(ex, "name", repr(ex))
+
+    def resolve_exchange(self, grid) -> "BFSConfig":
+        """This config with exchange="auto" resolved against the planned
+        grid (butterfly on power-of-two C >= 4 over one column axis, flat
+        otherwise) and an explicit strategy VALIDATED against it -- a
+        butterfly request on a grid it cannot route raises the ValueError
+        here, at session construction, naming the strategy that works."""
+        from repro.dist.strategy import get_exchange
+
+        strat = get_exchange(self.exchange, grid, self.col_axes or ())
+        if isinstance(self.exchange, str) and self.exchange != strat.name:
+            return dataclasses.replace(self, exchange=strat.name)
+        return self
+
+    @property
     def engine_key(self) -> tuple:
         """What makes two configs share one DistBFSEngine (and hence one
         AOT-compile cache line, together with graph shape and batch size).
 
         Uses the RESOLVED expand/fold/bottomup paths and direction MODE, so
         "auto" configs re-key correctly if REPRO_EXPAND / REPRO_FOLD /
-        REPRO_BOTTOMUP changes between engine builds in one process."""
+        REPRO_BOTTOMUP changes between engine builds in one process.
+        `exchange` keys by name; exchange="auto" needs the planned grid to
+        resolve, so `GraphSession` normalises it (via `resolve_exchange`)
+        before any cache is keyed."""
         return (self.codec_name, self.direction_mode, self.edge_chunk,
                 self.dedup, self.max_levels, self.alpha, self.beta,
                 self.row_axes, self.col_axes, self.expand_fn,
                 self.expand_path, self.fold_path, self.bottomup_path,
-                self.telemetry)
+                self.exchange_name, self.telemetry)
 
     def algo_engine_key(self, program_key: tuple, codec_name: str,
                         max_levels: int) -> tuple:
@@ -172,7 +207,7 @@ class BFSConfig:
         return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
                 max_levels, self.row_axes, self.col_axes, self.expand_fn,
                 self.expand_path, self.fold_path, self.bottomup_path,
-                self.telemetry)
+                self.exchange_name, self.telemetry)
 
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""

@@ -34,6 +34,7 @@ from repro.core.partition import (partition_2d, partition_2d_csr,
                                   partition_edge_vals_csr)
 from repro.core.types import BFSOutput, LocalGraph2D
 from repro.core.validate import validate_bfs
+from repro.dist import multihost
 from repro.dist.engine import DistBFSEngine
 from repro.dist.topology import Topology
 
@@ -122,7 +123,7 @@ def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
         topology, fold_codec=config.fold_codec, edge_chunk=config.edge_chunk,
         max_levels=config.max_levels, expand=config.expand,
         expand_fn=config.expand_fn, fold=config.fold, dedup=config.dedup,
-        bottomup=config.bottomup, program=program,
+        bottomup=config.bottomup, exchange=config.exchange, program=program,
         telemetry=config.telemetry)
 
 
@@ -179,19 +180,31 @@ class DistGraph:
         topology = Topology.for_grid(grid, mesh, config.row_axes,
                                      config.col_axes)
         lg = partition_2d(edges_np, grid)
-        csc = LocalGraph2D(jnp.asarray(lg.col_off), jnp.asarray(lg.row_idx),
-                           jnp.asarray(lg.nnz))
+        # device placement: per-device (R, C, ...) arrays land sharded over
+        # the grid axes -- a global jax.Array in a process group (every
+        # process materialises only its addressable shards), a plain local
+        # array otherwise (repro.dist.multihost)
+        place = cls._placer(topology)
+        csc = LocalGraph2D(place(lg.col_off), place(lg.row_idx),
+                           place(lg.nnz))
         w = None
         w_host = None
         if weights is not None:
             w_host = np.asarray(weights)
-            w = jnp.asarray(partition_edge_vals(edges_np, w_host, grid))
+            w = place(partition_edge_vals(edges_np, w_host, grid))
         # the CSR twin is planned LAZILY on the first query that needs it
         # (a direction-enabled session/algo call -> ensure_csr), so planning
         # with direction on costs nothing until bottom-up actually runs
         return cls(topology, csc, weights=w, edges=edges_np, n=n,
                    config=config, weights_host=w_host,
                    aot_cache_size=aot_cache_size)
+
+    @staticmethod
+    def _placer(topology: Topology):
+        """Placement fn for per-device (R, C, ...) arrays on this topology
+        (global sharded array in a process group, plain local otherwise)."""
+        return lambda x: multihost.put_dev(x, topology.mesh,
+                                           topology.dev_spec)
 
     def ensure_csr(self):
         """Plan the CSR twin on demand (the first direction-enabled query);
@@ -202,11 +215,12 @@ class DistGraph:
                 raise ValueError(
                     "direction=True needs the CSR twin, but this DistGraph "
                     "was built without edges; pass csr= or use from_edges")
-            self.csr = {k: jnp.asarray(v)
+            place = self._placer(self.topology)
+            self.csr = {k: place(v)
                         for k, v in partition_2d_csr(self._edges,
                                                      self.grid).items()}
             if self._weights_host is not None:
-                self.csr_weights = jnp.asarray(partition_edge_vals_csr(
+                self.csr_weights = place(partition_edge_vals_csr(
                     self._edges, self._weights_host, self.grid))
             self._edges = None       # both layouts resident -> edges done
             self._weights_host = None
@@ -258,6 +272,12 @@ class GraphSession:
                  engine: DistBFSEngine = None):
         self.graph = graph
         self.config = config if config is not None else graph.config
+        # exchange="auto" resolves against the PLANNED grid (butterfly on
+        # power-of-two C >= 4, flat otherwise), and an explicit strategy is
+        # validated here -- so every engine/AOT cache below keys on the
+        # concrete strategy, and an impossible request fails at session
+        # construction, not mid-trace
+        self.config = self.config.resolve_exchange(graph.grid)
         if self.config.grid is not None:
             want = self.config.resolve_grid(graph.n, graph.mesh)
             if want != graph.grid:
@@ -301,7 +321,8 @@ class GraphSession:
         key = (self.config.engine_key, g.col_off.shape, g.row_idx.shape, B)
         compiled = self.graph._compiled.get(key)
         if compiled is None:
-            roots_aval = jax.ShapeDtypeStruct((B,), jnp.int32)
+            roots_aval = multihost.arg_aval((B,), jnp.int32,
+                                            self.graph.mesh)
             compiled = self.engine._run_batch.lower(
                 g.col_off, g.row_idx, g.nnz, *self._extra,
                 roots_aval).compile()
@@ -325,17 +346,18 @@ class GraphSession:
         """
         scalar = np.ndim(roots) == 0
         check_vertex_ids(roots, self.graph.n, "roots")
-        roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
-        if roots_arr.ndim != 1:
+        roots_np = np.atleast_1d(np.asarray(roots, np.int32))
+        if roots_np.ndim != 1:
             raise ValueError(f"roots must be a scalar or 1D batch, got "
-                             f"shape {roots_arr.shape}")
-        B = roots_arr.shape[0]
+                             f"shape {roots_np.shape}")
+        roots_arr = multihost.put_replicated(roots_np, self.graph.mesh)
+        B = roots_np.shape[0]
         g = self.graph.csc
         outs = self.compiled_for(B)(
             g.col_off, g.row_idx, g.nnz, *self._extra, roots_arr)
         out = self.engine.assemble_batch(outs, B)
         if validate is not False and validate is not None:
-            self._validate(out, np.asarray(roots_arr), validate)
+            self._validate(out, roots_np, validate)
         if scalar:
             out = BFSOutput(level=out.level[0], pred=out.pred[0],
                             n_levels=out.n_levels[0],
@@ -391,6 +413,7 @@ class GraphSession:
                 expand=self.config.expand, expand_fn=self.config.expand_fn,
                 fold=self.config.fold, dedup=self.config.dedup,
                 bottomup=self.config.bottomup,
+                exchange=self.config.exchange,
                 telemetry=self.config.telemetry)
             self.graph._engines[key] = eng
         return eng, key
@@ -438,8 +461,10 @@ class GraphSession:
         g = self.graph.csc
         extra = self._algo_csr_extra()
         compiled = self._algo_compiled(
-            eng, key, jax.ShapeDtypeStruct((), jnp.int32), *extra)
-        outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, jnp.int32(0))
+            eng, key, multihost.arg_aval((), jnp.int32, self.graph.mesh),
+            *extra)
+        arg = multihost.put_replicated(np.int32(0), self.graph.mesh)
+        outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, arg)
         out = eng.assemble(outs, None)
         if out.trace is not None:
             self._last_trace = out.trace
@@ -458,17 +483,19 @@ class GraphSession:
                 "DistGraph.from_edges(edges, config, weights=w)")
         scalar = np.ndim(roots) == 0
         check_vertex_ids(roots, self.graph.n, "roots")
-        roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
-        if roots_arr.ndim != 1:
+        roots_np = np.atleast_1d(np.asarray(roots, np.int32))
+        if roots_np.ndim != 1:
             raise ValueError(f"roots must be a scalar or 1D batch, got "
-                             f"shape {roots_arr.shape}")
-        B = roots_arr.shape[0]
+                             f"shape {roots_np.shape}")
+        roots_arr = multihost.put_replicated(roots_np, self.graph.mesh)
+        B = roots_np.shape[0]
         max_levels = self.graph.grid.n + 1     # Bellman-Ford round bound
         eng, key = self._algo_engine(SSSPProgram(), fold_codec, max_levels)
         g, w = self.graph.csc, self.graph.weights
         extra = (w,) + self._algo_csr_extra(weights=True)
         compiled = self._algo_compiled(
-            eng, key, jax.ShapeDtypeStruct((B,), jnp.int32), *extra,
+            eng, key,
+            multihost.arg_aval((B,), jnp.int32, self.graph.mesh), *extra,
             batched=True)
         out = eng.assemble(
             compiled(g.col_off, g.row_idx, g.nnz, *extra, roots_arr), B)
@@ -494,18 +521,20 @@ class GraphSession:
         `bfs(roots)`, which runs K independent full searches.
         """
         check_vertex_ids(sources, self.graph.n, "sources")
-        sources_arr = jnp.asarray(sources, jnp.int32)
-        if sources_arr.ndim != 1 or sources_arr.shape[0] == 0:
+        sources_np = np.asarray(sources, np.int32)
+        if sources_np.ndim != 1 or sources_np.shape[0] == 0:
             raise ValueError(f"sources must be a non-empty 1D array, got "
-                             f"shape {sources_arr.shape}")
+                             f"shape {sources_np.shape}")
+        sources_arr = multihost.put_replicated(sources_np, self.graph.mesh)
         max_levels = int(k) if k is not None else self.config.max_levels
         eng, key = self._algo_engine(MultiSourceBFSProgram(), fold_codec,
                                      max_levels)
         g = self.graph.csc
         extra = self._algo_csr_extra()
         compiled = self._algo_compiled(
-            eng, key, jax.ShapeDtypeStruct(sources_arr.shape, jnp.int32),
-            *extra)
+            eng, key,
+            multihost.arg_aval(sources_np.shape, jnp.int32,
+                               self.graph.mesh), *extra)
         outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, sources_arr)
         out = eng.assemble(outs, None)
         if out.trace is not None:

@@ -65,6 +65,10 @@ class DistBFSEngine(FrontierEngine):
                   sec. 10) -- codec encode/decode kernels + the prefix-sum
                   compaction, REPRO_FOLD override, bit-identical paths.
     dedup:        winner-selection method ("scatter" | "sort").
+    exchange:     fold exchange strategy ("flat" | "butterfly" | "auto" |
+                  an ExchangeStrategy instance; DESIGN.md sec. 14) -- how
+                  fold messages route within the processor-row,
+                  bit-identical either way.
     bottomup:     bottom-up kernel implementation for direction-optimised
                   programs (same spellings; DESIGN.md sec. 11) -- the fused
                   parent search, REPRO_BOTTOMUP override, bit-identical
@@ -83,8 +87,8 @@ class DistBFSEngine(FrontierEngine):
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter", bottomup: str = "auto",
-                 step_factory=None, n_extra: int = 0, program=None,
-                 telemetry: bool = False):
+                 exchange="flat", step_factory=None, n_extra: int = 0,
+                 program=None, telemetry: bool = False):
         from repro.algos.bfs import BFSLevelsProgram
 
         if program is None:
@@ -96,7 +100,8 @@ class DistBFSEngine(FrontierEngine):
             topo, program,
             fold_codec=fold_codec, edge_chunk=edge_chunk,
             max_levels=max_levels, expand=expand, expand_fn=expand_fn,
-            fold=fold, dedup=dedup, bottomup=bottomup, telemetry=telemetry)
+            fold=fold, dedup=dedup, bottomup=bottomup, exchange=exchange,
+            telemetry=telemetry)
 
     def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
         """One top-down level (paper Alg. 2 lines 12-18)."""

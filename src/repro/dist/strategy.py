@@ -1,0 +1,220 @@
+"""Pluggable exchange strategies for the fold all-to-all (DESIGN.md sec. 14).
+
+Every fold (and the final `resolve_preds`) routes a (C, K) message array
+within the processor-row: row d of the array on column j is the payload
+j -> d.  HOW those C*(C-1) point-to-point payloads traverse the network is
+an independent, swappable concern:
+
+  flat       ONE `jax.lax.all_to_all` -- every column sends C-1 direct
+             messages per exchange.  Minimal volume (each payload travels
+             exactly one hop), O(C) messages per participant: the layout
+             that stops scaling past a single host (ButterFly BFS, Green
+             2103.13577).
+  butterfly  log2(C) pairwise `ppermute` stages over the XOR hypercube.
+             Payload (j -> d) carries the invariant label r = j XOR d and
+             hops once per set bit of r, so each column sends exactly
+             log2(C) messages of C/2 fused rows per exchange -- message
+             count drops from C-1 to log2(C) at the price of volume
+             ((C/2)*log2(C) vs C-1 row payloads): the classic latency /
+             bandwidth trade a multi-host fold wants.
+
+Both strategies deliver the IDENTICAL (C, K) received array, byte for byte:
+the butterfly is store-and-forward (payload rows are re-fused into each
+stage's message but never re-encoded), so every consumer -- codec decode,
+`resolve_preds`, value channels -- is strategy-agnostic and the engine-wide
+bit-identity contract holds by construction.
+
+The strategy binds at the `Topology` level (`Topology.with_exchange`):
+`topology.col_all_to_all` dispatches through it, so the fold codecs and the
+predecessor resolution route automatically.  `BFSConfig(exchange=...)`
+selects; "auto" resolves to butterfly on power-of-two column counts >= 4
+(where it strictly reduces message count), flat otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Grid2D
+
+
+def _log2_exact(c: int) -> int:
+    """log2(C) for power-of-two C (validated before use)."""
+    return int(c).bit_length() - 1
+
+
+def butterfly_stage_rows(C: int, s: int) -> np.ndarray:
+    """The (C//2,) label rows that travel at stage s: every label with bit
+    s set.  Static (host-side) -- the traced exchange gathers/scatters these
+    fixed row index sets, never a data-dependent shape."""
+    return np.asarray([r for r in range(C) if r & (1 << s)], np.int32)
+
+
+def emulate_exchange(x_all: np.ndarray, name: str) -> np.ndarray:
+    """Host-side emulation of one exchange over ALL columns at once.
+
+    x_all: (C, C, K) -- x_all[j, d] is column j's payload for column d.
+    Returns recv (C, C, K) with recv[j, m] = x_all[m, j] for BOTH
+    strategies; the butterfly path replays the staged row swaps literally so
+    tests can assert byte equality of the two routes without a mesh.
+    """
+    x_all = np.asarray(x_all)
+    C = x_all.shape[0]
+    if name == "flat":
+        return np.swapaxes(x_all, 0, 1).copy()
+    # butterfly: H[j, r] = x_all[j, j ^ r]; stage s swaps rows with bit s
+    # set between partners j and j ^ 2^s; final recv[j, m] = H[j, m ^ j]
+    r = np.arange(C)
+    H = np.stack([x_all[j, j ^ r] for j in range(C)])
+    for s in range(_log2_exact(C)):
+        bit = 1 << s
+        rows = butterfly_stage_rows(C, s)
+        sent = H[:, rows].copy()
+        for j in range(C):
+            H[j, rows] = sent[j ^ bit]
+    return np.stack([H[j, j ^ r] for j in range(C)])
+
+
+class ExchangeStrategy:
+    """Strategy for routing the fold's per-column message array.
+
+    `all_to_all(x, topo)` runs INSIDE shard_map and must return exactly
+    what `jax.lax.all_to_all(x, col_axis, 0, 0)` returns -- same values,
+    same order, same bytes (the bit-identity contract every codec and the
+    predecessor resolution rely on).  The accounting methods price one
+    exchange for the telemetry trace and BENCH: `msgs_per_exchange` counts
+    point-to-point messages one column sends, `wire_bytes` scales a codec's
+    flat per-exchange byte figure to this route (set folds), and
+    `value_extra_bytes` the count-proportional value-channel bytes beyond
+    it (value folds; the flat figure is PR 5's `wire_bytes_values_sent`).
+    """
+    name = "?"
+
+    def validate(self, grid: Grid2D, col_axes: tuple) -> None:
+        """Raise ValueError when this strategy cannot run on the grid."""
+
+    def all_to_all(self, x, topo):
+        raise NotImplementedError
+
+    def msgs_per_exchange(self, C: int) -> int:
+        raise NotImplementedError
+
+    def wire_bytes(self, flat_bytes: int, C: int) -> int:
+        """Bytes one column sends per exchange, given the codec's flat
+        figure (C equal per-destination buckets, own bucket included)."""
+        raise NotImplementedError
+
+    def value_extra_bytes(self, cnt, j, C: int):
+        """Traced per-level value-channel bytes beyond `wire_bytes`:
+        cnt (C,) int32 entries per destination bucket, j the calling
+        column.  4 bytes per entry per hop."""
+        raise NotImplementedError
+
+
+class FlatExchange(ExchangeStrategy):
+    """Today's single-collective route: one `jax.lax.all_to_all`."""
+    name = "flat"
+
+    def all_to_all(self, x, topo):
+        return jax.lax.all_to_all(x, topo.col_collective, 0, 0)
+
+    def msgs_per_exchange(self, C: int) -> int:
+        return max(C - 1, 0)            # the own bucket never leaves
+
+    def wire_bytes(self, flat_bytes: int, C: int) -> int:
+        return flat_bytes               # the codec formulas ARE this route
+
+    def value_extra_bytes(self, cnt, j, C: int):
+        return 4 * jnp.sum(cnt, dtype=jnp.int32).astype(jnp.uint32)
+
+
+class ButterflyExchange(ExchangeStrategy):
+    """log2(C)-stage XOR-hypercube route (ButterFly BFS, Green 2103.13577).
+
+    Column j stores payload (j -> d) at label row r = j XOR d; stage
+    s = 0..log2(C)-1 ships the C/2 rows with bit s of r set to partner
+    j XOR 2^s (one `ppermute` of one fused sub-array per stage).  A payload
+    with label r therefore hops popcount(r) times and lands on
+    j XOR r = d; the received array recv[m] = H[m XOR j] is byte-identical
+    to the flat all_to_all's.
+    """
+    name = "butterfly"
+
+    def validate(self, grid: Grid2D, col_axes: tuple) -> None:
+        C = grid.C
+        if C & (C - 1):
+            raise ValueError(
+                f"exchange='butterfly' needs a power-of-two column count, "
+                f"got C={C} (grid {grid.R}x{grid.C}); exchange='flat' works "
+                f"on any grid")
+        if len(col_axes) > 1:
+            raise ValueError(
+                f"exchange='butterfly' routes over ONE column mesh axis, "
+                f"got col_axes={col_axes}; exchange='flat' works on "
+                f"multi-axis columns")
+
+    def all_to_all(self, x, topo):
+        axis = topo.col_collective
+        C = topo.grid.C
+        j = jax.lax.axis_index(axis).astype(jnp.int32)
+        lab = jnp.arange(C, dtype=jnp.int32)
+        H = jnp.take(x, j ^ lab, axis=0)          # H[r] = x[j ^ r]
+        for s in range(_log2_exact(C)):
+            bit = 1 << s
+            rows = butterfly_stage_rows(C, s)     # static index set
+            perm = [(t, t ^ bit) for t in range(C)]
+            sent = jax.lax.ppermute(jnp.take(H, rows, axis=0), axis, perm)
+            H = H.at[rows].set(sent)
+        return jnp.take(H, j ^ lab, axis=0)       # recv[m] = H[m ^ j]
+
+    def msgs_per_exchange(self, C: int) -> int:
+        return _log2_exact(C)
+
+    def wire_bytes(self, flat_bytes: int, C: int) -> int:
+        # each of the log2(C) stages ships C/2 of the C per-destination
+        # buckets: (C/2)*log2(C) bucket payloads vs the flat route's C-1
+        return (flat_bytes // C) * (C // 2) * _log2_exact(C)
+
+    def value_extra_bytes(self, cnt, j, C: int):
+        # bucket d's value words hop popcount(j ^ d) times
+        lab = (j ^ jnp.arange(C, dtype=jnp.int32)).astype(jnp.uint32)
+        hops = jax.lax.population_count(lab).astype(jnp.uint32)
+        return 4 * jnp.sum(cnt.astype(jnp.uint32) * hops)
+
+
+EXCHANGES = {"flat": FlatExchange, "butterfly": ButterflyExchange}
+
+
+def resolve_exchange_name(spec: str, grid: Grid2D, col_axes: tuple) -> str:
+    """"auto" -> the strategy this grid runs best: butterfly when it
+    strictly reduces messages (power-of-two C >= 4, single column axis),
+    flat otherwise.  Explicit names pass through (validated at engine
+    build)."""
+    if spec != "auto":
+        return spec
+    C = grid.C
+    if C >= 4 and not (C & (C - 1)) and len(col_axes) <= 1:
+        return "butterfly"
+    return "flat"
+
+
+def get_exchange(spec, grid: Grid2D, col_axes: tuple = ("c",)
+                 ) -> ExchangeStrategy:
+    """Resolve "flat" | "butterfly" | "auto" | ExchangeStrategy instance,
+    validated against the grid (a strategy that cannot run here raises a
+    ValueError naming the one that does -- same UX as `get_fold_codec`)."""
+    if isinstance(spec, ExchangeStrategy):
+        spec.validate(grid, tuple(col_axes))
+        return spec
+    name = resolve_exchange_name(spec, grid, tuple(col_axes))
+    try:
+        cls = EXCHANGES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown exchange {spec!r}; choose from "
+            f"{sorted(EXCHANGES)} or 'auto'")
+    strat = cls()
+    strat.validate(grid, tuple(col_axes))
+    return strat

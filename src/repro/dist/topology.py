@@ -37,11 +37,18 @@ def mesh_axis_sizes(mesh) -> dict:
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    """Static binding of a processor grid to mesh axes."""
+    """Static binding of a processor grid to mesh axes.
+
+    `exchange` optionally binds an `ExchangeStrategy` (repro.dist.strategy,
+    DESIGN.md sec. 14): `col_all_to_all` then routes through it, so every
+    fold codec and the predecessor resolution pick the strategy up without
+    knowing it exists.  None = the flat single-collective route.
+    """
     grid: Grid2D
     mesh: object
     row_axes: tuple = ("r",)
     col_axes: tuple = ("c",)
+    exchange: object = None
 
     def __post_init__(self):
         object.__setattr__(self, "row_axes", _axes(self.row_axes))
@@ -157,5 +164,13 @@ class Topology:
         return jax.lax.all_gather(x, self.row_axes, tiled=False)
 
     def col_all_to_all(self, x):
-        """all_to_all within the processor-row over leading axis C."""
+        """all_to_all within the processor-row over leading axis C, routed
+        by the bound exchange strategy (flat when none is bound)."""
+        if self.exchange is not None:
+            return self.exchange.all_to_all(x, self)
         return jax.lax.all_to_all(x, self.col_collective, 0, 0)
+
+    def with_exchange(self, strategy) -> "Topology":
+        """This topology with an `ExchangeStrategy` bound (the engine binds
+        its resolved strategy here so all collectives route through it)."""
+        return dataclasses.replace(self, exchange=strategy)

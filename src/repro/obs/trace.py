@@ -16,9 +16,12 @@ Per level, per device, the carry records:
   scanned     edges scanned this level on this device (the expand stamp)
   folded      entries this device folded to owners (the fold stamp)
   wire        fold wire bytes this device sent (the exchange stamp): the
-              codec's static `wire_bytes(grid)` for set folds, the
-              count-proportional `wire_bytes(grid) + 4*folded` for value
-              folds -- exactly the PR 5 `wire_bytes_values_sent` accounting
+              exchange strategy's scaling of the codec's static
+              `wire_bytes(grid)` for set folds, plus the count-proportional
+              value-channel bytes for value folds -- on the flat route this
+              is exactly the PR 5 `wire_bytes_values_sent` accounting
+  msgs        point-to-point fold messages this device sent (the exchange
+              strategy's `msgs_per_exchange`: C-1 flat, log2(C) butterfly)
   dir         direction the level ran (0 top-down / 1 bottom-up)
 
 The stamps are work counters, not wall times: inside one compiled program
@@ -37,7 +40,7 @@ import numpy as np
 # Channel order of the trace arrays the engine appends after (hi, lo);
 # plus one trailing per-device level counter `k`.
 TRACE_CHANNELS = ("frontier", "front_dev", "scanned", "folded", "wire",
-                  "dir")
+                  "msgs", "dir")
 N_TRACE_OUTS = len(TRACE_CHANNELS) + 1
 
 
@@ -56,6 +59,7 @@ def init_trace(max_levels: int) -> dict:
         "scanned": jnp.zeros((L,), jnp.uint32),
         "folded": jnp.zeros((L,), jnp.int32),
         "wire": jnp.zeros((L,), jnp.uint32),
+        "msgs": jnp.zeros((L,), jnp.int32),
         "dir": jnp.full((L,), -1, jnp.int32),
         "k": jnp.int32(0),
     }
@@ -68,6 +72,7 @@ def normalize_aux(aux: "dict | None") -> dict:
     return {
         "folded": jnp.asarray(aux.get("folded", 0), jnp.int32),
         "wire": jnp.asarray(aux.get("wire", 0), jnp.uint32),
+        "msgs": jnp.asarray(aux.get("msgs", 0), jnp.int32),
         "dir": jnp.asarray(aux.get("dir", 0), jnp.int32),
     }
 
@@ -86,6 +91,7 @@ def record_level(tr: dict, *, frontier, front_dev, scanned, aux) -> dict:
             jnp.asarray(scanned, jnp.uint32)),
         "folded": tr["folded"].at[k].set(aux["folded"]),
         "wire": tr["wire"].at[k].set(aux["wire"]),
+        "msgs": tr["msgs"].at[k].set(aux["msgs"]),
         "dir": tr["dir"].at[k].set(aux["dir"]),
         "k": tr["k"] + 1,
     }
@@ -119,11 +125,17 @@ class LevelTrace:
     folded_dev: np.ndarray
     wire_bytes: np.ndarray      # (n_levels,) int64 global fold wire bytes
     wire_dev: np.ndarray
+    msgs: np.ndarray            # (n_levels,) int64 global fold messages sent
+    msgs_dev: np.ndarray
     direction: np.ndarray       # (n_levels,) int32: 0 top-down / 1 bottom-up
 
     @property
     def total_wire_bytes(self) -> int:
         return int(self.wire_bytes.sum())
+
+    @property
+    def total_msgs(self) -> int:
+        return int(self.msgs.sum())
 
     @property
     def total_scanned(self) -> int:
@@ -136,6 +148,7 @@ class LevelTrace:
              "scanned": int(self.scanned[k]),
              "folded": int(self.folded[k]),
              "wire_bytes": int(self.wire_bytes[k]),
+             "msgs": int(self.msgs[k]),
              "dir": int(self.direction[k])}
             for k in range(self.n_levels)]
 
@@ -153,12 +166,14 @@ def _one_trace(chans, k, *, grid, program, codec) -> LevelTrace:
     s_dev = chans["scanned"][:, :n].astype(i64)
     c_dev = chans["folded"][:, :n].astype(i64)
     w_dev = chans["wire"][:, :n].astype(i64)
+    m_dev = chans["msgs"][:, :n].astype(i64)
     return LevelTrace(
         program=program, codec=codec, grid=(grid.R, grid.C), n_levels=n,
         frontier=chans["frontier"][0, :n].astype(i64), frontier_dev=f_dev,
         scanned=s_dev.sum(axis=0), scanned_dev=s_dev,
         folded=c_dev.sum(axis=0), folded_dev=c_dev,
         wire_bytes=w_dev.sum(axis=0), wire_dev=w_dev,
+        msgs=m_dev.sum(axis=0), msgs_dev=m_dev,
         direction=np.asarray(chans["dir"][0, :n], np.int32))
 
 

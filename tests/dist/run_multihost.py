@@ -1,0 +1,120 @@
+"""Two-host scale-out smoke: the session API across a REAL process group.
+
+Simulates NPROC hosts with DEVS local CPU devices each (gloo collectives
+over localhost), plans one DistGraph over the global mesh, runs BFS, CC and
+SSSP through `GraphSession`, and asserts every output is BIT-IDENTICAL to a
+single-process reference of the same graph -- for the requested exchange
+strategy ("flat" or "butterfly"; the tentpole contract is that multi-host
+and strategy are orthogonal to results).
+
+Usage:  run_multihost.py NPROC DEVS [EXCHANGE]
+
+The script is its own orchestrator: invoked with no REPRO_MH_ROLE it first
+computes the single-process reference in a child, then spawns NPROC worker
+children that join a `jax.distributed` process group; worker 0 writes its
+outputs and the parent compares.  Workers place inputs / read outputs only
+through `repro.dist.multihost`, so this exercises the whole placement
+surface (sharded graph arrays, replicated args, process_allgather fetch).
+
+Prints "OK" on success (the CI multihost-smoke job greps for it).
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+NPROC = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+DEVS = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+EXCHANGE = sys.argv[3] if len(sys.argv) > 3 else "flat"
+SCALE, EF, ROOT = 9, 8, 3
+PORT = int(os.environ.get("REPRO_MH_PORT", "12123"))
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+ROLE = os.environ.get("REPRO_MH_ROLE")
+
+
+def make_inputs():
+    import numpy as np
+    rng = np.random.default_rng(7)
+    n = 1 << SCALE
+    m = EF * n
+    edges = np.stack([rng.integers(0, n, m), rng.integers(0, n, m)])
+    edges = np.concatenate([edges, edges[::-1]], axis=1)   # symmetrised
+    w = rng.integers(1, 64, edges.shape[1]).astype(np.uint8)
+    return n, edges, w
+
+
+def run_queries(mesh):
+    """Plan + query through the session API; returns host numpy outputs."""
+    import numpy as np
+    from repro.api import BFSConfig, DistGraph
+
+    n, edges, w = make_inputs()
+    cfg = BFSConfig(grid=(1, NPROC * DEVS), exchange=EXCHANGE)
+    g = DistGraph.from_edges(edges, cfg, weights=w, mesh=mesh)
+    s = g.session()
+    bfs = s.bfs(ROOT)
+    batch = s.bfs(np.array([1, 5, ROOT], np.int32))
+    cc = s.connected_components()
+    sp = s.sssp(ROOT)
+    return {"level": np.asarray(bfs.level), "pred": np.asarray(bfs.pred),
+            "blevel": np.asarray(batch.level),
+            "bpred": np.asarray(batch.pred),
+            "labels": np.asarray(cc.labels), "dist": np.asarray(sp.dist),
+            "scanned": np.asarray(bfs.edges_scanned, np.int64)}
+
+
+if ROLE == "ref":
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={NPROC * DEVS}")
+    import numpy as np
+    np.savez(sys.argv[4], **run_queries(None))
+    print("REF DONE")
+
+elif ROLE == "worker":
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={DEVS}")
+    pid = int(os.environ["REPRO_MH_ID"])
+    import numpy as np
+    from repro.dist import multihost
+
+    multihost.initialize(coordinator_address=f"localhost:{PORT}",
+                         num_processes=NPROC, process_id=pid)
+    import jax
+    assert jax.process_count() == NPROC, jax.process_count()
+    assert jax.device_count() == NPROC * DEVS, jax.device_count()
+    mesh = multihost.global_mesh((1, NPROC * DEVS), ("r", "c"))
+    outs = run_queries(mesh)
+    if pid == 0:
+        np.savez(sys.argv[4], **outs)
+    print(f"WORKER {pid} DONE")
+
+else:
+    # orchestrator: reference child, then the process group
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    with tempfile.TemporaryDirectory() as td:
+        ref_npz = os.path.join(td, "ref.npz")
+        out_npz = os.path.join(td, "out.npz")
+        base = [sys.executable, os.path.abspath(__file__),
+                str(NPROC), str(DEVS), EXCHANGE]
+        r = subprocess.run(base + [ref_npz],
+                           env={**env, "REPRO_MH_ROLE": "ref"})
+        assert r.returncode == 0, "reference child failed"
+        procs = [subprocess.Popen(
+                     base + [out_npz],
+                     env={**env, "REPRO_MH_ROLE": "worker",
+                          "REPRO_MH_ID": str(pid)})
+                 for pid in range(NPROC)]
+        codes = [p.wait(timeout=900) for p in procs]
+        assert codes == [0] * NPROC, f"worker exit codes {codes}"
+
+        import numpy as np
+        ref = np.load(ref_npz)
+        out = np.load(out_npz)
+        for k in ref.files:
+            assert (ref[k] == out[k]).all(), \
+                f"{k}: multi-host != single-process (exchange={EXCHANGE})"
+        print(f"multihost {NPROC}x{DEVS} exchange={EXCHANGE}: "
+              f"{len(ref.files)} outputs bit-identical")
+        print("OK")

@@ -402,6 +402,61 @@ def test_one_all_to_all_per_fold(_collectives_graph, codec):
         assert jx.count("all_to_all") == 1, (codec, program.name)
 
 
+@pytest.fixture(scope="module")
+def _butterfly_graph():
+    """A 1x4 grid on a DUPLICATE-device mesh: the same single CPU device in
+    every slot traces shard_map collectives fine (the program is only ever
+    `make_jaxpr`-traced here, never executed), which lets the C=4 butterfly
+    lower without --xla_force_host_platform_device_count."""
+    from repro.dist.compat import make_mesh as mk
+
+    dev = jax.devices()[0]
+    fake = mk((1, 4), ("r", "c"), devices=[dev] * 4)
+    edges = np.asarray(rmat_edges(jax.random.key(5), 8, 8))
+    w = np.random.default_rng(0).integers(1, 256, size=edges.shape[1]) \
+        .astype(np.uint8)
+    return DistGraph.from_edges(
+        edges, BFSConfig(grid=(1, 4), edge_chunk=256, expand="reference",
+                         fold="reference"), n=256, weights=w, mesh=fake)
+
+
+@pytest.mark.parametrize("codec", ["list", "bitmap", "delta"])
+@pytest.mark.parametrize("exchange", ["flat", "butterfly"])
+def test_exchange_collective_counts(_butterfly_graph, codec, exchange):
+    """The exchange-strategy gate on the traced jaxpr at C=4: the flat
+    route keeps exactly one all_to_all per fold (two for BFS: the level
+    loop + resolve_preds) and zero ppermutes; the butterfly route replaces
+    EVERY all_to_all with log2(C)=2 ppermute stages -- for every codec and
+    every program."""
+    from repro.algos import (ConnectedComponentsProgram,
+                             MultiSourceBFSProgram, SSSPProgram)
+
+    g = _butterfly_graph
+    cs = g.csc
+    sess = g.session(BFSConfig(grid=(1, 4), edge_chunk=256, fold_codec=codec,
+                               expand="reference", fold="reference",
+                               exchange=exchange))
+    stages = 2                                   # log2(C) at C = 4
+    jx = str(jax.make_jaxpr(sess.engine._run.__wrapped__)(
+        cs.col_off, cs.row_idx, cs.nnz, jnp.int32(0)))
+    want_a2a, want_pp = (2, 0) if exchange == "flat" else (0, 2 * stages)
+    assert jx.count("all_to_all") == want_a2a, (exchange, codec)
+    assert jx.count("ppermute") == want_pp, (exchange, codec)
+    for program, extra in ((ConnectedComponentsProgram(), ()),
+                           (SSSPProgram(), (g.weights,)),
+                           (MultiSourceBFSProgram(), ())):
+        eng, _ = sess._algo_engine(program, codec, 8)
+        arg = jnp.zeros((3,), jnp.int32) \
+            if program.name == "multi_bfs" else jnp.int32(0)
+        jx = str(jax.make_jaxpr(eng._run.__wrapped__)(
+            cs.col_off, cs.row_idx, cs.nnz, *extra, arg))
+        want_a2a, want_pp = (1, 0) if exchange == "flat" else (0, stages)
+        assert jx.count("all_to_all") == want_a2a, (exchange, codec,
+                                                    program.name)
+        assert jx.count("ppermute") == want_pp, (exchange, codec,
+                                                 program.name)
+
+
 # ----------------------------------------------------------------------------
 # Fold-path selection rules, cache keys, engine parity, delta block-size
 # error surfacing (DESIGN.md sec. 10)
