@@ -1,0 +1,43 @@
+"""Fault-drill suite: the standard device-loss matrix on 2x2 simulated
+devices (benchmarks/workers/fault_worker.py) -> CSV + bench_out/
+BENCH_fault.json.
+
+Emits:
+  fault_drills.csv  one row per drill (verdict, bit-identity, grids,
+                    recovery latency)
+  BENCH_fault.json  schema BENCH_fault/v1 -- the artifact
+                    `benchmarks/run.py --fault` gates on: every drill ok,
+                    zero lost queries, bit-identical recovered outputs,
+                    at least one real shrink, and the no-retrace proof.
+                    Recovery latency is RECORDED, never wall-clock-gated.
+"""
+import json
+
+from benchmarks.common import bench_scale, emit, emit_json, run_worker
+
+DRILL_HEADER = ("name", "runner", "ok", "bit_identical", "pred_valid",
+                "lost_queries", "grid_before", "grid_after",
+                "resumed_from_level", "time_to_first_resumed_level_s",
+                "retries", "resumes", "error")
+
+
+def main() -> None:
+    scale = bench_scale(10)
+    out = run_worker("fault_worker.py", scale, 8, 2, 2, timeout=3600)
+    drills, no_retrace = [], None
+    for line in out.splitlines():
+        tag, _, rest = line.partition(",")
+        if tag == "DRILL":
+            drills.append(json.loads(rest))
+        elif tag == "NORETRACE":
+            no_retrace = json.loads(rest)
+    emit([DRILL_HEADER] + [[d.get(k) for k in DRILL_HEADER]
+                           for d in drills], "fault_drills")
+    path = emit_json({
+        "schema": "BENCH_fault/v1",
+        "scale": scale,
+        "grid": "2x2",
+        "drills": drills,
+        "no_retrace": no_retrace,
+    }, "BENCH_fault")
+    print(f"wrote {path}")

@@ -38,6 +38,14 @@ CLI:
               bit-identity, no-retrace trace counts, serve spans + events,
               and traced-sweep overhead <= 5% (a same-host ratio, the only
               timing-derived gate; never a wall-clock floor)
+  --fault     run ONLY the fault-drill suite (benchmarks/fault_drill.py:
+              the device-loss drill matrix of DESIGN.md sec. 15 on 2x2
+              simulated devices) and gate its bench_out/BENCH_fault.json:
+              every drill completes, zero lost queries, recovered outputs
+              bit-identical (Graph500-valid preds after a shrink), at
+              least one drill actually shrank the grid, recovery latency
+              recorded as a number, and the no-retrace proof that
+              fault_tolerance=False builds nothing -- never wall-clock
   --scale N   force every honoring suite to graph scale N (REPRO_BENCH_SCALE)
   --smoke     reduced CI suite list (fold codecs on 2x2 simulated devices,
               strong-scaling mini sweep, per-level breakdown + fold wire
@@ -359,6 +367,72 @@ def validate_obs() -> list:
     return errors
 
 
+def validate_fault() -> list:
+    """Gates over bench_out/BENCH_fault.json (the --fault mode artifact).
+
+    Correctness gates only: every drill in the matrix completes ok with
+    zero lost queries, recovered outputs bit-identical where that is the
+    contract (and Graph500-valid preds where it is not -- BFS after a
+    shrink), at least one drill actually moved to a smaller grid, elastic
+    drills RECORD their recovery latency (a number, never gated), and the
+    no-retrace section proves `fault_tolerance=False` builds zero
+    segmented programs and stays bit-identical / cache-resident.
+    """
+    errors = []
+    p = os.path.join(common.OUT_DIR, "BENCH_fault.json")
+    if not os.path.exists(p):
+        return ["BENCH_fault.json missing"]
+    try:
+        with open(p) as f:
+            fault = json.load(f)
+    except json.JSONDecodeError as e:
+        return [f"BENCH_fault.json: invalid JSON ({e})"]
+    if fault.get("schema") != "BENCH_fault/v1":
+        errors.append(f"BENCH_fault schema {fault.get('schema')!r} != "
+                      f"'BENCH_fault/v1'")
+    drills = fault.get("drills") or []
+    if len(drills) < 20:
+        errors.append(f"BENCH_fault: {len(drills)} drills < 20 (the "
+                      "standard matrix)")
+    runners = {d.get("runner") for d in drills}
+    for need in ("session", "elastic", "serve"):
+        if need not in runners:
+            errors.append(f"BENCH_fault: no {need!r}-runner drill ran")
+    shrunk = 0
+    for d in drills:
+        name = d.get("name", "?")
+        if d.get("ok") is not True:
+            errors.append(f"BENCH_fault[{name}]: ok != true "
+                          f"(error={d.get('error')})")
+        if d.get("lost_queries"):
+            errors.append(f"BENCH_fault[{name}]: lost "
+                          f"{d['lost_queries']} queries")
+        if d.get("bit_identical") is False:
+            errors.append(f"BENCH_fault[{name}]: recovered output NOT "
+                          "bit-identical")
+        if d.get("pred_valid") is False:
+            errors.append(f"BENCH_fault[{name}]: recovered BFS preds "
+                          "fail Graph500 validation")
+        if d.get("grid_after") != d.get("grid_before"):
+            shrunk += 1
+        if d.get("runner") == "elastic" and not isinstance(
+                d.get("time_to_first_resumed_level_s"), (int, float)):
+            errors.append(f"BENCH_fault[{name}]: recovery latency not "
+                          "recorded")
+    if not shrunk:
+        errors.append("BENCH_fault: no drill actually shrank the grid")
+    nr = fault.get("no_retrace") or {}
+    if nr.get("ft_off_segmented_programs") != 0:
+        errors.append(f"BENCH_fault: fault_tolerance=False built "
+                      f"{nr.get('ft_off_segmented_programs')} segmented "
+                      "programs (expected 0)")
+    if nr.get("after_first_sweep") != nr.get("after_second_sweep"):
+        errors.append(f"BENCH_fault: repeat sweep retraced ({nr})")
+    if nr.get("ft_on_off_bitexact") is not True:
+        errors.append("BENCH_fault: FT on/off outputs NOT bit-identical")
+    return errors
+
+
 def validate_bench(smoke: bool) -> list:
     """Schema + correctness-counter gates over the emitted JSON artifacts.
 
@@ -499,11 +573,33 @@ def main(argv=None) -> None:
     ap.add_argument("--obs", action="store_true",
                     help="run only the telemetry contract suite and gate "
                          "BENCH_obs.json")
+    ap.add_argument("--fault", action="store_true",
+                    help="run only the fault-drill matrix and gate "
+                         "BENCH_fault.json")
     args = ap.parse_args(argv)
     if args.scale is not None:
         os.environ["REPRO_BENCH_SCALE"] = str(args.scale)
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    if args.fault:
+        from benchmarks import fault_drill
+        print("\n=== fault_drill ===")
+        t0 = time.time()
+        try:
+            fault_drill.main()
+            print(f"--- fault_drill done in {time.time() - t0:.0f}s")
+        except Exception:
+            print(f"--- fault_drill FAILED:"
+                  f"\n{traceback.format_exc()[-1500:]}")
+            sys.exit(1)
+        errors = validate_fault()
+        for e in errors:
+            print(f"VALIDATION: {e}")
+        if errors:
+            sys.exit(1)
+        print("fault validation OK")
+        return
 
     if args.obs:
         from benchmarks import obs_bench

@@ -17,7 +17,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.algos.program import FrontierProgram
+from repro.algos.program import FrontierProgram, rows_to_global
 from repro.core import frontier as F
 from repro.core.types import Grid2D, LocalGraph2D, BFSState, BFSOutput
 from repro.dist import exchange as X
@@ -174,6 +174,80 @@ class BFSLevelsProgram(FrontierProgram):
     def out_specs(self, engine):
         out_g = engine.topo.out_block_spec
         return (out_g, out_g, engine.topo.dev_spec)
+
+    def level_count(self, st):
+        return st.lvl
+
+    def export_state(self, engine, st, n: int) -> dict:
+        """(R, C, ...) BFSState -> global canonical snapshot.
+
+        `level` and `pred` export from the owned blocks; deferred
+        predecessor markers -(c+2) resolve at export time by reading the
+        sender column's pred row (the same fetch `resolve_preds` performs
+        with an all_to_all at finalize), so the snapshot is marker-free and
+        grid-independent.  The frontier is DERIVED state -- exactly the
+        vertices with level == lvl-1 -- and the visited bitmap is derivable
+        as level >= 0, so neither is stored.
+        """
+        grid = engine.grid
+        R, C, S = grid.R, grid.C, grid.S
+        gl = np.full((grid.n,), -1, np.int32)
+        gp = np.full((grid.n,), -1, np.int32)
+        for i in range(R):
+            for j in range(C):
+                g0 = (j * R + i) * S
+                sl = slice(j * S, (j + 1) * S)
+                gl[g0:g0 + S] = st.level[i, j, sl]
+                pr = np.asarray(st.pred[i, j, sl]).copy()
+                dm = pr < -1
+                if dm.any():
+                    snd = -pr[dm] - 2                 # the sender column
+                    t = np.flatnonzero(dm)
+                    pr[dm] = st.pred[i, snd, j * S + t]
+                gp[g0:g0 + S] = pr
+        lvl = int(st.lvl[0, 0])
+        return {"level": gl[:n], "pred": gp[:n],
+                "lvl": np.asarray(lvl, np.int64),
+                "levels_done": np.asarray(lvl - 1, np.int64)}
+
+    def import_state(self, engine, snap: dict) -> BFSState:
+        """Global snapshot -> (R, C, ...) BFSState on engine's grid.
+
+        Every local row rebuilds `level` and `visited = level >= 0` from the
+        global truth: for still-unvisited vertices no device suppresses, and
+        for claimed vertices extra suppression only drops proposals the
+        owner's `eligible &= ~visited` would discard anyway -- so a resumed
+        trajectory (same grid) is bit-identical, predecessors included.
+        `pred` is authoritative at the owned block only (resolve_preds is
+        idempotent on resolved entries); the frontier re-derives from
+        level == lvl-1, ascending -- the canonical-sort order the organic
+        frontier carries.
+        """
+        grid = engine.grid
+        R, C, S, nrl = grid.R, grid.C, grid.S, grid.n_rows_local
+        n_raw = int(snap["level"].shape[0])
+        gl = np.full((grid.n,), -1, np.int32)
+        gl[:n_raw] = snap["level"]
+        gp = np.full((grid.n,), -1, np.int32)
+        gp[:n_raw] = snap["pred"]
+        lvl = int(snap["lvl"])
+        level = np.empty((R, C, nrl), np.int32)
+        visited = np.empty((R, C, nrl), bool)
+        pred = np.full((R, C, nrl), -1, np.int32)
+        front = np.full((R, C, S), -1, np.int32)
+        cnt = np.zeros((R, C), np.int32)
+        for i in range(R):
+            li = gl[rows_to_global(grid, i)]
+            for j in range(C):
+                level[i, j] = li
+                visited[i, j] = li >= 0
+                g0 = (j * R + i) * S
+                pred[i, j, j * S:(j + 1) * S] = gp[g0:g0 + S]
+                t = np.flatnonzero(gl[g0:g0 + S] == lvl - 1).astype(np.int32)
+                front[i, j, :t.size] = i * S + t
+                cnt[i, j] = t.size
+        return BFSState(level=level, pred=pred, visited=visited, front=front,
+                        front_cnt=cnt, lvl=np.full((R, C), lvl, np.int32))
 
     def assemble(self, engine, outs, B) -> BFSOutput:
         """Gathered device outputs -> global BFSOutput.

@@ -79,6 +79,17 @@ class ConnectedComponentsProgram(FrontierProgram):
                                               engine.grid.S)
         return labels, st.it
 
+    def level_count(self, st):
+        return st.it
+
+    def export_state(self, engine, st, n: int) -> dict:
+        return PR.export_value_state(engine.grid, st, n)
+
+    def import_state(self, engine, snap: dict) -> ValueState:
+        # padding vertices of the new grid are isolated self-labelled
+        # components -- exactly what an uninterrupted run holds after level 1
+        return PR.import_value_state(engine.grid, snap, pad="gid")
+
     def out_specs(self, engine):
         return (engine.topo.out_block_spec, engine.topo.dev_spec)
 

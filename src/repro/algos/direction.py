@@ -334,6 +334,36 @@ class DirectionProgram(FrontierProgram):
     def out_specs(self, engine):
         return tuple(self.inner.out_specs(engine)) + (engine.topo.dev_spec,)
 
+    def level_count(self, st):
+        return self.inner.level_count(st.inner)
+
+    def export_state(self, engine, st, n: int) -> dict:
+        """Inner snapshot nested under "inner" + the direction bookkeeping
+        (replicated across devices, so device (0, 0) is authoritative)."""
+        import numpy as np
+
+        snap = {"inner": self.inner.export_state(engine, st.inner, n),
+                "dir": np.asarray(int(st.dir[0, 0]), np.int32),
+                "dirs": np.asarray(st.dirs[0, 0], np.int32),
+                "k": np.asarray(int(st.k[0, 0]), np.int32)}
+        snap["levels_done"] = snap["inner"]["levels_done"]
+        return snap
+
+    def import_state(self, engine, snap: dict) -> DirState:
+        import numpy as np
+
+        grid = engine.grid
+        R, C, L = grid.R, grid.C, engine.max_levels
+        dirs = np.full((L,), -1, np.int32)
+        src = np.asarray(snap["dirs"], np.int32)
+        m = min(L, src.shape[0])
+        dirs[:m] = src[:m]
+        return DirState(
+            inner=self.inner.import_state(engine, snap["inner"]),
+            dir=np.full((R, C), int(snap["dir"]), np.int32),
+            dirs=np.broadcast_to(dirs, (R, C, L)).copy(),
+            k=np.full((R, C), int(snap["k"]), np.int32))
+
     def assemble(self, engine, outs, B):
         # engine appends (hi, lo) after finalize's outputs, so the direction
         # trace sits third from the end

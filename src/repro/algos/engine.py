@@ -99,13 +99,25 @@ class FrontierEngine:
                 part of every engine/AOT cache key, so the off path
                 compiles to exactly the untraced program.  Outputs are
                 bit-identical either way.
+    fault_tolerance:  when True, ALSO build the segmented level loop
+                (DESIGN.md sec. 15): three extra jitted programs
+                (`ft_start` / `ft_segment` / `ft_finish`) that run at most
+                `ckpt_every` levels per call and hand the loop carry back
+                to the host between segments, so a traversal can be
+                checkpointed, interrupted and resumed mid-flight.  Off by
+                default; the flags key every engine/AOT cache, the regular
+                single-while_loop programs are built IDENTICALLY either
+                way, and segmented outputs are bit-identical to them.
+    ckpt_every: levels per resumable segment (the K of "checkpoint every
+                K levels"); only consulted when fault_tolerance=True.
     """
 
     def __init__(self, topo, program, *, fold_codec=None,
                  edge_chunk: int = 8192, max_levels: int = 64,
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter", bottomup: str = "auto",
-                 exchange="flat", telemetry: bool = False):
+                 exchange="flat", telemetry: bool = False,
+                 fault_tolerance: bool = False, ckpt_every: int = 1):
         from repro.dist.exchange import get_fold_codec
         from repro.dist.strategy import get_exchange
         from repro.kernels.select import (resolve_bottomup_path,
@@ -170,6 +182,12 @@ class FrontierEngine:
             self.value_bottomup_fn = make_value_bottomup_fn(
                 path=self.bottomup_path)
         self.telemetry = bool(telemetry)
+        self.fault_tolerance = bool(fault_tolerance)
+        self.ckpt_every = max(1, int(ckpt_every))
+        # segmented programs, built lazily and ONLY when fault_tolerance=True
+        # -- an off-path engine never constructs (or traces) them, which is
+        # the no-retrace guarantee tests assert
+        self._ft_progs = {}
         # last assembled LevelTrace (scalar) or tuple of traces (batched);
         # None until a telemetry-enabled search completes
         self.last_trace = None
@@ -303,3 +321,288 @@ class FrontierEngine:
         outs = self._run_batch(graph.col_off, graph.row_idx, graph.nnz,
                                *extra, args)
         return self.assemble(outs, int(args.shape[0]))
+
+    # -- segmented level loop (DESIGN.md sec. 15) ----------------------------
+    #
+    # The same init / step / finalize as `_build`, split at checkpoint lines:
+    # `ft_start` runs init, `ft_segment` runs AT MOST `ckpt_every` levels of
+    # the while_loop, `ft_finish` runs finalize.  Between calls the loop
+    # carry lives on the host side as a dict of (R, C[, B], ...) device
+    # arrays -- the checkpoint schema IS the FrontierProgram carry -- so the
+    # driver in repro.runtime.recovery can snapshot it, detect injected
+    # device loss, and resume (same grid or shrunken via export/import).
+    # Segment boundaries add no arithmetic: level k's inputs are exactly the
+    # carry level k-1 produced, so segmented outputs are bit-identical to
+    # the single-while_loop program for every K.
+
+    def _ft(self, batched: bool):
+        if not self.fault_tolerance:
+            raise ValueError(
+                "segmented traversal needs BFSConfig(fault_tolerance=True)")
+        fns = self._ft_progs.get(bool(batched))
+        if fns is None:
+            fns = tuple(jax.jit(self._build_ft(kind, batched))
+                        for kind in ("init", "segment", "finalize"))
+            self._ft_progs[bool(batched)] = fns
+        return fns
+
+    def _build_ft(self, kind: str, batched: bool):
+        topo, prog = self.topo, self.program
+        telemetry = self.telemetry
+        K = jnp.int32(self.ckpt_every)
+        from repro.obs import trace as T
+        dev = topo.dev_spec
+
+        def init_fn(col_off, row_idx, nnz, *rest):
+            extra, arg = rest[:-1], rest[-1]
+            graph = LocalGraph2D(col_off=col_off[0, 0], row_idx=row_idx[0, 0],
+                                 nnz=nnz[0, 0])
+            extra = tuple(e[0, 0] for e in extra)
+            i, j = topo.device_coords()
+
+            def one(a):
+                st = prog.init(self, graph, extra, a, i, j)
+                total = prog.init_total(self, st)
+                carry = {"st": st, "total": total,
+                         "hi": jnp.uint32(0), "lo": jnp.uint32(0),
+                         "active": prog.keep_going(self, st, total)}
+                if telemetry:
+                    carry["trace"] = T.init_trace(self.max_levels)
+                return carry
+
+            carry = jax.lax.map(one, arg) if batched else one(arg)
+            return jax.tree_util.tree_map(lambda o: o[None, None], carry)
+
+        def seg_fn(col_off, row_idx, nnz, *rest):
+            extra, carry = rest[:-1], rest[-1]
+            graph = LocalGraph2D(col_off=col_off[0, 0], row_idx=row_idx[0, 0],
+                                 nnz=nnz[0, 0])
+            extra = tuple(e[0, 0] for e in extra)
+            i, j = topo.device_coords()
+
+            def one(c):
+                step = prog.make_step(self, graph, extra, i, j)
+
+                def cond(t):
+                    return prog.keep_going(self, t[0], t[1]) & (t[4] < K)
+
+                def body(t):
+                    st, total, hi, lo, k = t[:5]
+                    res = step(st, total)
+                    aux = res[3] if len(res) > 3 else None
+                    st2, total2, scanned = res[0], res[1], res[2]
+                    hi, lo = wide_add(hi, lo, scanned)
+                    if not telemetry:
+                        return st2, total2, hi, lo, k + 1
+                    tr = T.record_level(
+                        t[5], frontier=total,
+                        front_dev=prog.front_count(st), scanned=scanned,
+                        aux=T.normalize_aux(aux))
+                    return st2, total2, hi, lo, k + 1, tr
+
+                t = (c["st"], c["total"], c["hi"], c["lo"], jnp.int32(0))
+                if telemetry:
+                    t += (c["trace"],)
+                t = jax.lax.while_loop(cond, body, t)
+                out = {"st": t[0], "total": t[1], "hi": t[2], "lo": t[3],
+                       "active": prog.keep_going(self, t[0], t[1])}
+                if telemetry:
+                    out["trace"] = t[5]
+                return out
+
+            c = jax.tree_util.tree_map(lambda x: x[0, 0], carry)
+            carry = jax.lax.map(one, c) if batched else one(c)
+            return jax.tree_util.tree_map(lambda o: o[None, None], carry)
+
+        def fin_fn(carry):
+            i, j = topo.device_coords()
+
+            def one(c):
+                outs = tuple(prog.finalize(self, c["st"], i, j)) \
+                    + (c["hi"], c["lo"])
+                if telemetry:
+                    outs += T.trace_outputs(c["trace"])
+                return outs
+
+            c = jax.tree_util.tree_map(lambda x: x[0, 0], carry)
+            outs = jax.lax.map(one, c) if batched else one(c)
+            return tuple(o[None, None] for o in outs)
+
+        if kind == "init":
+            mapped = topo.shard_map(
+                init_fn,
+                in_specs=(dev,) * (3 + prog.n_extra) + (P(),),
+                out_specs=dev)
+        elif kind == "segment":
+            mapped = topo.shard_map(
+                seg_fn,
+                in_specs=(dev,) * (3 + prog.n_extra) + (dev,),
+                out_specs=dev)
+        else:
+            fin_specs = tuple(prog.out_specs(self)) + (dev, dev)
+            if telemetry:
+                fin_specs += (dev,) * T.N_TRACE_OUTS
+            mapped = topo.shard_map(fin_fn, in_specs=(dev,),
+                                    out_specs=fin_specs)
+
+        def counted(*args):
+            # runs at TRACE time only (jit cache hits skip it), so tests can
+            # assert repeated segmented sweeps compile each piece once
+            self.trace_count += 1
+            return mapped(*args)
+
+        return counted
+
+    def ft_start(self, graph: LocalGraph2D, arg, *extra, batched=False):
+        """Init carry for one search (scalar arg) or a leading-axis batch."""
+        return self._ft(batched)[0](graph.col_off, graph.row_idx, graph.nnz,
+                                    *extra, arg)
+
+    def ft_segment(self, graph: LocalGraph2D, carry, *extra, batched=False):
+        """Advance the carry by at most `ckpt_every` levels (pure function:
+        the input carry is untouched, so a failed segment retries from it)."""
+        return self._ft(batched)[1](graph.col_off, graph.row_idx, graph.nnz,
+                                    *extra, carry)
+
+    def ft_finish(self, carry, B=None):
+        """Finalize a converged carry through the shared assemble funnel."""
+        return self.assemble(self._ft(B is not None)[2](carry), B)
+
+    def ft_active(self, carry) -> bool:
+        """Host check: does any search in the carry still have work?"""
+        from repro.dist import multihost
+        return bool(np.asarray(multihost.fetch(carry["active"])).any())
+
+    def ft_levels_done(self, carry) -> int:
+        """Host readout: levels completed so far (max over a batch)."""
+        from repro.dist import multihost
+        cnt = self.program.level_count(carry["st"])
+        return int(np.asarray(multihost.fetch(cnt))[0, 0].max()) - 1
+
+    # -- carry export / import (the checkpoint schema; DESIGN.md sec. 15) ----
+
+    def export_carry(self, carry, *, n=None, B=None) -> dict:
+        """Segmented-loop carry -> grid-independent host snapshot.
+
+        `arrays` is a nested dict of numpy arrays (what CheckpointManager
+        persists); `meta` is the JSON-able identity the checkpointer keys
+        on.  The per-vertex state is exported in GLOBAL vertex-id order and
+        sliced to the raw `n`, so the snapshot can re-shard onto any grid
+        (`import_carry` re-pads); totals/activity are replicated scalars and
+        the (hi, lo) edge accounting exports as one exact integer.
+        """
+        from repro.dist import multihost
+        host = jax.tree_util.tree_map(
+            lambda x: np.asarray(multihost.fetch(x)), carry)
+        n = int(self.grid.n if n is None else n)
+        prog = self.program
+        if B is None:
+            st_snap = prog.export_state(self, host["st"], n)
+        else:
+            st_snap = {
+                f"b{b}": prog.export_state(
+                    self,
+                    jax.tree_util.tree_map(lambda x: x[:, :, b], host["st"]),
+                    n)
+                for b in range(B)}
+        hi = host["hi"].astype(np.int64)
+        lo = host["lo"].astype(np.int64)
+        scanned = (hi.sum(axis=(0, 1)) << 32) + lo.sum(axis=(0, 1))
+        arrays = {"st": st_snap,
+                  "total": np.asarray(host["total"][0, 0], np.int64),
+                  "active": np.asarray(host["active"][0, 0], bool),
+                  "scanned": np.asarray(scanned, np.int64)}
+        if self.telemetry:
+            arrays["trace"] = {k: np.asarray(v)
+                               for k, v in host["trace"].items()}
+        if B is None:
+            levels_done = int(st_snap["levels_done"])
+        else:
+            levels_done = max(int(st_snap[f"b{b}"]["levels_done"])
+                              for b in range(B))
+        meta = {"program": prog.name, "codec": self.codec.name,
+                "grid": [self.grid.R, self.grid.C], "B": B, "n": n,
+                "max_levels": int(self.max_levels),
+                "levels_done": levels_done}
+        return {"arrays": arrays, "meta": meta}
+
+    def import_carry(self, snapshot: dict, *, B=None):
+        """Host snapshot -> device carry on THIS engine's grid (the resume
+        half of `export_carry`; the grids need not match -- elastic resume
+        re-shards the global state onto the survivor mesh)."""
+        arrays = snapshot["arrays"]
+        prog = self.program
+        if B is None:
+            st = prog.import_state(self, arrays["st"])
+        else:
+            sts = [prog.import_state(self, arrays["st"][f"b{b}"])
+                   for b in range(B)]
+            st = jax.tree_util.tree_map(
+                lambda *xs: np.stack(xs, axis=2), *sts)
+        shp = (self.grid.R, self.grid.C) + (() if B is None else (B,))
+        total = np.broadcast_to(
+            np.asarray(arrays["total"], np.int32), shp).copy()
+        active = np.broadcast_to(
+            np.asarray(arrays["active"], bool), shp).copy()
+        scanned = np.asarray(arrays["scanned"], np.int64)
+        hi = np.zeros(shp, np.uint32)
+        lo = np.zeros(shp, np.uint32)
+        hi[0, 0] = (scanned >> np.int64(32)).astype(np.uint32)
+        lo[0, 0] = (scanned & np.int64(0xFFFFFFFF)).astype(np.uint32)
+        carry = {"st": st, "total": total, "hi": hi, "lo": lo,
+                 "active": active}
+        if self.telemetry:
+            carry["trace"] = self._import_trace(
+                arrays.get("trace"), B, snapshot["meta"]["levels_done"])
+        return self._place_carry(carry)
+
+    def _import_trace(self, traw, B, levels_done: int) -> dict:
+        """Raw (R0, C0[, B], L) trace channels -> this grid's trace carry.
+
+        Same grid: bit-exact reimport.  Shrunken grid: per-device work
+        channels collapse onto device (0, 0) (sums -- global per-level
+        figures survive exactly, per-device attribution does not) and the
+        psum-replicated channels broadcast from device (0, 0).
+        """
+        from repro.obs import trace as T
+        R, C = self.grid.R, self.grid.C
+        shp = (R, C) + (() if B is None else (B,))
+        L = int(self.max_levels)
+        if traw is None:
+            # resuming a snapshot taken without telemetry: blank history,
+            # k advanced so post-resume levels land in the right slots
+            tr = {c: np.zeros(shp + (L,),
+                              np.uint32 if c in ("scanned", "wire")
+                              else np.int32)
+                  for c in T.TRACE_CHANNELS}
+            tr["dir"] = np.full(shp + (L,), -1, np.int32)
+            tr["k"] = np.full(shp, levels_done, np.int32)
+            return tr
+        src_grid = traw["k"].shape[:2]
+        if src_grid == (R, C):
+            return {k: np.asarray(v) for k, v in traw.items()}
+        tr = {}
+        for c in ("front_dev", "scanned", "folded", "wire", "msgs"):
+            a = np.asarray(traw[c])
+            out = np.zeros(shp + (L,), a.dtype)
+            out[0, 0] = a.sum(axis=(0, 1), dtype=np.int64).astype(a.dtype)
+            tr[c] = out
+        for c in ("frontier", "dir"):
+            a = np.asarray(traw[c])
+            tr[c] = np.broadcast_to(a[0, 0], shp + (L,)).copy()
+        tr["k"] = np.broadcast_to(
+            np.asarray(traw["k"])[0, 0], shp).copy().astype(np.int32)
+        return tr
+
+    def _place_carry(self, carry):
+        """Host (R, C[, B], ...) leaves -> device arrays on this topology's
+        mesh (the `reshard_state` placement of elastic resume; in a process
+        group, global-array construction via multihost.put_dev)."""
+        from repro.dist import multihost
+        mesh, dev = self.topo.mesh, self.topo.dev_spec
+        if multihost.is_multiprocess():
+            return jax.tree_util.tree_map(
+                lambda x: multihost.put_dev(x, mesh, dev), carry)
+        from repro.ckpt.elastic import reshard_state
+        spec_tree = jax.tree_util.tree_map(lambda x: dev, carry)
+        return reshard_state(carry, spec_tree, mesh)

@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -176,6 +178,72 @@ class MultiSourceBFSProgram(FrontierProgram):
     def out_specs(self, engine):
         out_g = engine.topo.out_block_spec
         return (out_g, out_g, engine.topo.dev_spec)
+
+    def level_count(self, st):
+        return st.lvl
+
+    def export_state(self, engine, st, n: int) -> dict:
+        """(R, C, ...) MultiBFSState -> global canonical snapshot.
+
+        `level`/`src` export RAW from the owned blocks (src keeps I32_MAX for
+        unclaimed vertices; finalize's -1 remap is output-only).  The
+        frontier derives from level == lvl-1 with the claiming source id as
+        payload, and per-device `visited` is rebuilt as level >= 0 -- a
+        superset of any one device's organic bitmap, which only suppresses
+        proposals for already-claimed vertices (invisible to the owner's
+        `~vis_owned_prev` merge), so a same-grid resume is bit-identical.
+        """
+        grid = engine.grid
+        R, C, S = grid.R, grid.C, grid.S
+        gl = np.full((grid.n,), -1, np.int32)
+        gs = np.full((grid.n,), I32_MAX, np.int32)
+        for i in range(R):
+            for j in range(C):
+                g0 = (j * R + i) * S
+                sl = slice(j * S, (j + 1) * S)
+                gl[g0:g0 + S] = st.level[i, j, sl]
+                gs[g0:g0 + S] = st.src[i, j, sl]
+        lvl = int(st.lvl[0, 0])
+        return {"level": gl[:n], "src": gs[:n],
+                "lvl": np.asarray(lvl, np.int64),
+                "levels_done": np.asarray(lvl - 1, np.int64)}
+
+    def import_state(self, engine, snap: dict) -> MultiBFSState:
+        """Global snapshot -> (R, C, ...) MultiBFSState on engine's grid.
+
+        `level`/`src` are authoritative at the owned block only (steps never
+        read the non-owned rows after init, so those import as -1/I32_MAX);
+        padding vertices of the new grid are unreached.
+        """
+        grid = engine.grid
+        R, C, S, nrl = grid.R, grid.C, grid.S, grid.n_rows_local
+        n_raw = int(snap["level"].shape[0])
+        gl = np.full((grid.n,), -1, np.int32)
+        gl[:n_raw] = snap["level"]
+        gs = np.full((grid.n,), I32_MAX, np.int32)
+        gs[:n_raw] = snap["src"]
+        lvl = int(snap["lvl"])
+        visited = np.empty((R, C, nrl), bool)
+        level = np.full((R, C, nrl), -1, np.int32)
+        src = np.full((R, C, nrl), I32_MAX, np.int32)
+        front = np.full((R, C, S), -1, np.int32)
+        payload = np.full((R, C, S), I32_MAX, np.int32)
+        cnt = np.zeros((R, C), np.int32)
+        for i in range(R):
+            li = gl[PR.rows_to_global(grid, i)]
+            for j in range(C):
+                visited[i, j] = li >= 0
+                g0 = (j * R + i) * S
+                sl = slice(j * S, (j + 1) * S)
+                level[i, j, sl] = gl[g0:g0 + S]
+                src[i, j, sl] = gs[g0:g0 + S]
+                t = np.flatnonzero(gl[g0:g0 + S] == lvl - 1).astype(np.int32)
+                front[i, j, :t.size] = i * S + t
+                payload[i, j, :t.size] = gs[g0 + t]
+                cnt[i, j] = t.size
+        return MultiBFSState(visited=visited, level=level, src=src,
+                             front=front, payload=payload, front_cnt=cnt,
+                             lvl=np.full((R, C), lvl, np.int32))
 
     def assemble(self, engine, outs, B) -> MultiBFSOutput:
         from repro.algos.engine import wide_total

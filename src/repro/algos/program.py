@@ -27,6 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -126,6 +128,30 @@ class FrontierProgram:
         """Host-side: gathered device outputs -> output object (B=None for a
         scalar search, else the leading batch size)."""
         raise NotImplementedError
+
+    # -- mid-traversal checkpointing (DESIGN.md sec. 15) ---------------------
+
+    def level_count(self, st):
+        """The state's 1-based level/iteration counter (device array; the
+        segmented driver's progress readout).  Works on host-fetched
+        (R, C[, B]) state pytrees too -- it is plain attribute access."""
+        raise NotImplementedError
+
+    def export_state(self, engine, st, n: int) -> dict:
+        """Host-fetched scalar-search state (leaves (R, C, ...) numpy) ->
+        flat dict of numpy arrays in GLOBAL vertex-id order, sliced to the
+        raw `n` -- the grid-independent half of the checkpoint schema.
+        Must include a 0-d `levels_done` entry."""
+        raise NotImplementedError(
+            f"{self.name} does not support mid-traversal checkpointing")
+
+    def import_state(self, engine, snap: dict):
+        """Inverse of `export_state` onto ENGINE's grid (which need not be
+        the grid that exported `snap`): a state pytree with (R, C, ...)
+        numpy leaves, re-padded to the new grid and with per-device caches
+        rebuilt from the authoritative global state."""
+        raise NotImplementedError(
+            f"{self.name} does not support mid-traversal checkpointing")
 
 
 # ----------------------------------------------------------------------------
@@ -346,3 +372,91 @@ def owned_to_front(changed, vals, i, S: int, fill_val=I32_MAX, ops=None):
     front = jnp.where(ok, i * S + jnp.where(ok, ts, 0), -1)
     payload = jnp.where(ok, vs, fill_val)
     return front, payload, changed.sum(dtype=jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# Checkpoint-schema helpers (DESIGN.md sec. 15)
+#
+# Export walks the (R, C, ...) host leaves into GLOBAL vertex-id order;
+# import rebuilds a new grid's per-device layout from the global arrays.
+# Both live on the partition identities of DESIGN.md sec. 2: device (i, j)'s
+# owned block b = j*R + i covers global ids [(j*R + i)*S, (j*R + i + 1)*S),
+# its local rows run over blocks m*R + i for m in 0..C-1, and owned local
+# row j*S + t converts to local col i*S + t (ROW2COL).
+# ----------------------------------------------------------------------------
+
+def rows_to_global(grid: Grid2D, i: int) -> np.ndarray:
+    """Global vertex ids of device-row i's local rows, in local-row order
+    (identical for every device in grid row i -- the j-independence that
+    lets import fill ALL local rows from one gather)."""
+    R, C, S = grid.R, grid.C, grid.S
+    return ((np.arange(C)[:, None] * R + i) * S
+            + np.arange(S)[None, :]).reshape(-1)
+
+
+def export_value_state(grid: Grid2D, st: ValueState, n: int) -> dict:
+    """Host (R, C, ...) ValueState -> global snapshot.
+
+    `val` exports the RAW owned blocks (I32_MAX = top; programs whose
+    finalize remaps sentinels do so only at output time), `in_front` is the
+    explicit frontier mask (value frontiers are not derivable from `val`
+    alone), and the frontier payloads are NOT stored -- they equal the owned
+    value at the frontier rows, which import re-reads.
+    """
+    R, C, S = grid.R, grid.C, grid.S
+    val = np.full((grid.n,), I32_MAX, np.int32)
+    in_front = np.zeros((grid.n,), bool)
+    for i in range(R):
+        for j in range(C):
+            g0 = (j * R + i) * S
+            val[g0:g0 + S] = st.val[i, j, j * S:(j + 1) * S]
+            cnt = int(st.front_cnt[i, j])
+            t = np.asarray(st.front[i, j, :cnt], np.int64) - i * S
+            in_front[g0 + t] = True
+    it = int(st.it[0, 0])
+    return {"val": val[:n], "in_front": in_front[:n],
+            "it": np.asarray(it, np.int64),
+            "levels_done": np.asarray(it - 1, np.int64)}
+
+
+def import_value_state(grid: Grid2D, snap: dict, pad: str = "max"
+                       ) -> ValueState:
+    """Global snapshot -> (R, C, ...) ValueState on `grid`.
+
+    Every local row takes the authoritative global value: the owned block
+    exactly, and remote rows get a send-suppression cache that is a SUPERSET
+    of any organically-grown one -- suppressed proposals would have carried
+    cand >= the owner's current value, invisible to the min-merge and the
+    strict `changed` mask, so resumed trajectories stay bit-identical.
+
+    pad: value for the new grid's padding vertices (>= the raw n): "max"
+    (I32_MAX -- never-visited sentinel, SSSP/multi-BFS) or "gid" (own global
+    id -- CC's converged self-label, what an uninterrupted run holds there
+    after level 1).
+    """
+    R, C, S, nrl = grid.R, grid.C, grid.S, grid.n_rows_local
+    n_raw = int(snap["val"].shape[0])
+    gv = np.empty((grid.n,), np.int32)
+    gv[:n_raw] = snap["val"]
+    if pad == "gid":
+        gv[n_raw:] = np.arange(n_raw, grid.n, dtype=np.int32)
+    else:
+        gv[n_raw:] = I32_MAX
+    inf = np.zeros((grid.n,), bool)
+    inf[:n_raw] = snap["in_front"]
+    val = np.empty((R, C, nrl), np.int32)
+    front = np.full((R, C, S), -1, np.int32)
+    payload = np.full((R, C, S), I32_MAX, np.int32)
+    cnt = np.zeros((R, C), np.int32)
+    for i in range(R):
+        vi = gv[rows_to_global(grid, i)]
+        for j in range(C):
+            val[i, j] = vi
+            g0 = (j * R + i) * S
+            t = np.flatnonzero(inf[g0:g0 + S]).astype(np.int32)
+            front[i, j, :t.size] = i * S + t
+            payload[i, j, :t.size] = gv[g0 + t]
+            cnt[i, j] = t.size
+    it = np.full((R, C), int(snap["it"]), np.int32)
+    return ValueState(val=val, front=front, payload=payload, front_cnt=cnt,
+                      it=it)

@@ -95,6 +95,17 @@ class SSSPProgram(FrontierProgram):
                                          engine.grid.S)
         return jnp.where(d == I32_MAX, -1, d), st.it
 
+    def level_count(self, st):
+        return st.it
+
+    def export_state(self, engine, st, n: int) -> dict:
+        # RAW distances (I32_MAX = unreached); finalize's -1 remap happens
+        # only at output time, never in the carry
+        return PR.export_value_state(engine.grid, st, n)
+
+    def import_state(self, engine, snap: dict) -> ValueState:
+        return PR.import_value_state(engine.grid, snap, pad="max")
+
     def out_specs(self, engine):
         return (engine.topo.out_block_spec, engine.topo.dev_spec)
 

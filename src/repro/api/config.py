@@ -90,6 +90,16 @@ class BFSConfig:
                  participates in every engine/AOT cache key, so the off
                  path compiles to exactly the untraced program.  Outputs
                  are bit-identical either way.
+    fault_tolerance:  mid-traversal recovery (DESIGN.md sec. 15).  When
+                 True, sessions run the level loop in checkpoint-bounded
+                 segments (`ckpt_every` levels per jitted segment) so a
+                 traversal can snapshot its carry between segments, survive
+                 injected device loss, and resume -- same grid or shrunken.
+                 Static and cache-keyed like `telemetry`: the off path
+                 builds exactly the single-while_loop program, and segmented
+                 outputs are bit-identical to it.
+    ckpt_every:  levels per resumable segment when fault_tolerance=True
+                 (the K of "checkpoint every K levels").
     """
     grid: Any = None
     fold_codec: Any = "list"
@@ -107,6 +117,8 @@ class BFSConfig:
     bottomup: str = "auto"
     exchange: str = "flat"
     telemetry: bool = False
+    fault_tolerance: bool = False
+    ckpt_every: int = 1
 
     def __post_init__(self):
         for f in ("row_axes", "col_axes"):
@@ -193,7 +205,8 @@ class BFSConfig:
                 self.dedup, self.max_levels, self.alpha, self.beta,
                 self.row_axes, self.col_axes, self.expand_fn,
                 self.expand_path, self.fold_path, self.bottomup_path,
-                self.exchange_name, self.telemetry)
+                self.exchange_name, self.telemetry,
+                self.fault_tolerance, self.ckpt_every)
 
     def algo_engine_key(self, program_key: tuple, codec_name: str,
                         max_levels: int) -> tuple:
@@ -207,7 +220,8 @@ class BFSConfig:
         return ("algo", program_key, codec_name, self.edge_chunk, self.dedup,
                 max_levels, self.row_axes, self.col_axes, self.expand_fn,
                 self.expand_path, self.fold_path, self.bottomup_path,
-                self.exchange_name, self.telemetry)
+                self.exchange_name, self.telemetry,
+                self.fault_tolerance, self.ckpt_every)
 
     def resolve_grid(self, n: int, mesh=None) -> Grid2D:
         """Concretise the `grid` spelling against n vertices (padding up)."""

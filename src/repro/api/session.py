@@ -124,7 +124,8 @@ def build_engine(topology: Topology, config: BFSConfig) -> DistBFSEngine:
         max_levels=config.max_levels, expand=config.expand,
         expand_fn=config.expand_fn, fold=config.fold, dedup=config.dedup,
         bottomup=config.bottomup, exchange=config.exchange, program=program,
-        telemetry=config.telemetry)
+        telemetry=config.telemetry, fault_tolerance=config.fault_tolerance,
+        ckpt_every=config.ckpt_every)
 
 
 class DistGraph:
@@ -329,7 +330,23 @@ class GraphSession:
             self.graph._compiled[key] = compiled
         return compiled
 
-    def bfs(self, roots, validate=False) -> BFSOutput:
+    def _run_recoverable(self, eng, arg, *extra, B=None, recovery=None):
+        """Fault-tolerant query path: the segmented engine loop under the
+        recovery driver (DESIGN.md sec. 15) instead of one whole-search
+        executable.  Bit-identical outputs; `recovery` is the RecoveryPlan
+        carrying checkpointer / injector / retry policy."""
+        from repro.runtime.recovery import run_segmented
+        return run_segmented(eng, self.graph.csc, arg, *extra, B=B,
+                             n=self.graph.n, plan=recovery)
+
+    def _check_recovery(self, recovery) -> bool:
+        if recovery is not None and not self.config.fault_tolerance:
+            raise ValueError(
+                "recovery= needs a fault-tolerant session; open it with "
+                "BFSConfig(fault_tolerance=True)")
+        return self.config.fault_tolerance
+
+    def bfs(self, roots, validate=False, recovery=None) -> BFSOutput:
         """Search from a scalar root or a (B,) batch of roots.
 
         Scalar: global (n,) level/pred (vertex-block order = plain global
@@ -343,6 +360,10 @@ class GraphSession:
         edges the DistGraph retains while the CSR twin is unplanned; pass
         the array explicitly once they have been released.  Raises
         AssertionError on any rule violation.
+
+        recovery: optional `repro.runtime.RecoveryPlan` (checkpointer /
+        loss injector / retry policy) for a fault_tolerance=True session;
+        the query then runs the segmented level loop and can resume.
         """
         scalar = np.ndim(roots) == 0
         check_vertex_ids(roots, self.graph.n, "roots")
@@ -353,9 +374,14 @@ class GraphSession:
         roots_arr = multihost.put_replicated(roots_np, self.graph.mesh)
         B = roots_np.shape[0]
         g = self.graph.csc
-        outs = self.compiled_for(B)(
-            g.col_off, g.row_idx, g.nnz, *self._extra, roots_arr)
-        out = self.engine.assemble_batch(outs, B)
+        if self._check_recovery(recovery):
+            out = self._run_recoverable(self.engine, roots_arr,
+                                        *self._extra, B=B,
+                                        recovery=recovery)
+        else:
+            outs = self.compiled_for(B)(
+                g.col_off, g.row_idx, g.nnz, *self._extra, roots_arr)
+            out = self.engine.assemble_batch(outs, B)
         if validate is not False and validate is not None:
             self._validate(out, roots_np, validate)
         if scalar:
@@ -414,7 +440,9 @@ class GraphSession:
                 fold=self.config.fold, dedup=self.config.dedup,
                 bottomup=self.config.bottomup,
                 exchange=self.config.exchange,
-                telemetry=self.config.telemetry)
+                telemetry=self.config.telemetry,
+                fault_tolerance=self.config.fault_tolerance,
+                ckpt_every=self.config.ckpt_every)
             self.graph._engines[key] = eng
         return eng, key
 
@@ -447,35 +475,41 @@ class GraphSession:
             self.graph._compiled[ckey] = compiled
         return compiled
 
-    def connected_components(self, fold_codec=None) -> CCOutput:
+    def connected_components(self, fold_codec=None,
+                             recovery=None) -> CCOutput:
         """Labels of every vertex's connected component (min member id).
 
         Assumes the planned edge list is symmetrised (as the Graph500-style
         generator produces); on a directed list the label is the smallest
         vertex id with a directed path to each vertex.  fold_codec: None =
         the program's hint ("bitmap"); any codec gives identical labels.
+        recovery: see `bfs`.
         """
         max_levels = self.graph.grid.n + 1     # diameter bound
         eng, key = self._algo_engine(ConnectedComponentsProgram(),
                                      fold_codec, max_levels)
         g = self.graph.csc
         extra = self._algo_csr_extra()
-        compiled = self._algo_compiled(
-            eng, key, multihost.arg_aval((), jnp.int32, self.graph.mesh),
-            *extra)
         arg = multihost.put_replicated(np.int32(0), self.graph.mesh)
-        outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, arg)
-        out = eng.assemble(outs, None)
+        if self._check_recovery(recovery):
+            out = self._run_recoverable(eng, arg, *extra, recovery=recovery)
+        else:
+            compiled = self._algo_compiled(
+                eng, key,
+                multihost.arg_aval((), jnp.int32, self.graph.mesh), *extra)
+            outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, arg)
+            out = eng.assemble(outs, None)
         if out.trace is not None:
             self._last_trace = out.trace
         return out
 
-    def sssp(self, roots, fold_codec=None) -> SSSPOutput:
+    def sssp(self, roots, fold_codec=None, recovery=None) -> SSSPOutput:
         """Shortest distances over the planned per-edge uint8 weights.
 
         Scalar root -> (n,) int32 distances (-1 unreachable); a (B,) batch
         runs as ONE compiled program (lax.map over roots, like `bfs`) ->
         (B, n).  Requires `DistGraph.from_edges(..., weights=)`.
+        recovery: see `bfs`.
         """
         if self.graph.weights is None:
             raise ValueError(
@@ -493,12 +527,16 @@ class GraphSession:
         eng, key = self._algo_engine(SSSPProgram(), fold_codec, max_levels)
         g, w = self.graph.csc, self.graph.weights
         extra = (w,) + self._algo_csr_extra(weights=True)
-        compiled = self._algo_compiled(
-            eng, key,
-            multihost.arg_aval((B,), jnp.int32, self.graph.mesh), *extra,
-            batched=True)
-        out = eng.assemble(
-            compiled(g.col_off, g.row_idx, g.nnz, *extra, roots_arr), B)
+        if self._check_recovery(recovery):
+            out = self._run_recoverable(eng, roots_arr, *extra, B=B,
+                                        recovery=recovery)
+        else:
+            compiled = self._algo_compiled(
+                eng, key,
+                multihost.arg_aval((B,), jnp.int32, self.graph.mesh),
+                *extra, batched=True)
+            out = eng.assemble(
+                compiled(g.col_off, g.row_idx, g.nnz, *extra, roots_arr), B)
         if scalar:
             out = SSSPOutput(dist=out.dist[0], n_iters=out.n_iters[0],
                              edges_scanned=out.edges_scanned[0],
@@ -511,7 +549,7 @@ class GraphSession:
         return out
 
     def multi_bfs(self, sources, k: int | None = None,
-                  fold_codec=None) -> MultiBFSOutput:
+                  fold_codec=None, recovery=None) -> MultiBFSOutput:
         """Simultaneous BFS from a (K,) source set (ONE shared frontier).
 
         Returns per-vertex hops to the nearest source and the claiming
@@ -519,6 +557,7 @@ class GraphSession:
         sweep to k hops: `level >= 0` is then the union k-hop neighborhood
         of the sources (the models/gnn sampling primitive).  Contrast
         `bfs(roots)`, which runs K independent full searches.
+        recovery: see `bfs`.
         """
         check_vertex_ids(sources, self.graph.n, "sources")
         sources_np = np.asarray(sources, np.int32)
@@ -531,12 +570,17 @@ class GraphSession:
                                      max_levels)
         g = self.graph.csc
         extra = self._algo_csr_extra()
-        compiled = self._algo_compiled(
-            eng, key,
-            multihost.arg_aval(sources_np.shape, jnp.int32,
-                               self.graph.mesh), *extra)
-        outs = compiled(g.col_off, g.row_idx, g.nnz, *extra, sources_arr)
-        out = eng.assemble(outs, None)
+        if self._check_recovery(recovery):
+            out = self._run_recoverable(eng, sources_arr, *extra,
+                                        recovery=recovery)
+        else:
+            compiled = self._algo_compiled(
+                eng, key,
+                multihost.arg_aval(sources_np.shape, jnp.int32,
+                                   self.graph.mesh), *extra)
+            outs = compiled(g.col_off, g.row_idx, g.nnz, *extra,
+                            sources_arr)
+            out = eng.assemble(outs, None)
         if out.trace is not None:
             self._last_trace = out.trace
         return out

@@ -1,2 +1,2 @@
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.ckpt.elastic import reshard_state
+from repro.ckpt.elastic import reshard_state, shrink_grid

@@ -8,7 +8,10 @@ Layout:  <dir>/step_<n>/shard_<host>.npz + manifest.json
     leaves a half checkpoint visible;
   * `restore` returns (pytree, meta) for ANY mesh: re-sharding is the
     loader's job (repro/ckpt/elastic.py), because the arrays are saved in
-    GLOBAL layout.
+    GLOBAL layout;
+  * async-writer failures are RECORDED, not swallowed: the next `save()` /
+    `wait()` / `join()` re-raises the writer thread's exception, so a
+    checkpoint that silently failed to land cannot masquerade as durable.
 """
 from __future__ import annotations
 
@@ -21,20 +24,47 @@ import jax
 import numpy as np
 
 
+def _tree_paths(tree, prefix=""):
+    """`/`-joined key paths for a pure nested-dict tree, in the SAME order
+    `jax.tree.flatten` emits the leaves (sorted dict keys); None when the
+    tree has non-dict interior nodes (path-keyed restore unavailable)."""
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree.keys()):
+            sub = _tree_paths(tree[k], f"{prefix}{k}/")
+            if sub is None:
+                return None
+            out.extend(sub)
+        return out
+    if isinstance(tree, (list, tuple)):
+        return None
+    return [prefix[:-1]]
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_write = async_write
         self._thread = None
+        self._error = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
     def save(self, step: int, tree, extra_meta: dict | None = None):
+        self._raise_pending()
         leaves, treedef = jax.tree.flatten(tree)
         host_leaves = [np.asarray(l) for l in leaves]
+        paths = _tree_paths(tree)
         if self._thread is not None:
             self._thread.join()
+            self._thread = None
+            self._raise_pending()
 
         def write():
             tmp = os.path.join(self.dir, f"step_{step}.tmp")
@@ -48,6 +78,7 @@ class CheckpointManager:
                 "n_leaves": len(host_leaves),
                 "shapes": [list(a.shape) for a in host_leaves],
                 "dtypes": [str(a.dtype) for a in host_leaves],
+                "paths": paths,
                 "meta": extra_meta or {},
             }
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -57,8 +88,14 @@ class CheckpointManager:
             os.rename(tmp, final)
             self._gc()
 
+        def guarded():
+            try:
+                write()
+            except BaseException as e:     # noqa: BLE001 -- re-raised later
+                self._error = e
+
         if self.async_write:
-            self._thread = threading.Thread(target=write)
+            self._thread = threading.Thread(target=guarded)
             self._thread.start()
         else:
             write()
@@ -67,6 +104,10 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
+
+    # `join` is the spelling recovery drivers use at end-of-query
+    join = wait
 
     def _gc(self):
         steps = sorted(self.steps())
@@ -99,3 +140,29 @@ class CheckpointManager:
         leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
         _, treedef = jax.tree.flatten(treedef_example)
         return jax.tree.unflatten(treedef, leaves), manifest
+
+    def restore_tree(self, step: int | None = None):
+        """Restore WITHOUT a structure example: rebuilds the nested dict
+        from the manifest's leaf paths (recorded for pure-dict trees, which
+        is what traversal snapshots are).  Returns (tree, manifest) or
+        (None, None)."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            return None, None
+        self.wait()
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        paths = manifest.get("paths")
+        if paths is None:
+            raise ValueError(
+                f"checkpoint step_{step} was not saved from a nested dict; "
+                "use restore(treedef_example)")
+        data = np.load(os.path.join(path, "shard_0.npz"))
+        tree = {}
+        for i, p in enumerate(paths):
+            node, parts = tree, p.split("/")
+            for k in parts[:-1]:
+                node = node.setdefault(k, {})
+            node[parts[-1]] = data[f"leaf_{i}"]
+        return tree, manifest

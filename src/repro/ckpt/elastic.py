@@ -8,6 +8,8 @@ outputs).  For training, optimizer state re-shards like params.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -40,14 +42,23 @@ def reshard_state(tree, spec_tree, mesh):
 
 def shrink_grid(R: int, C: int, failed: int):
     """Pick the largest valid 2D grid after losing `failed` devices
-    (prefers keeping the aspect ratio; the BFS re-partitions from the edge
-    list)."""
+    (prefers keeping the ORIGINAL grid's aspect ratio; the BFS re-partitions
+    from the edge list).
+
+    Maximality first: among all (r, c) with r*c <= R*C - failed, the largest
+    device count wins.  Ties break by aspect-ratio distance to the original
+    grid, |log(r/c) - log(R/C)| -- so shrinking a wide 2x4 prefers 2x3 over
+    the squarer 3x2, and a square 4x4 losing one device picks 3x5/5x3 (the
+    two are equidistant; the lower row count wins deterministically).
+    """
     total = R * C - failed
-    best = (1, 1)
+    if total < 1:
+        raise ValueError(f"no devices left: {R}x{C} minus {failed}")
+    aspect = math.log(R / C)
+    best = None
     for r in range(1, total + 1):
         c = total // r
-        if r * c <= total and r * c > best[0] * best[1]:
-            best = (r, c)
-        elif r * c == best[0] * best[1] and abs(r - c) < abs(best[0] - best[1]):
-            best = (r, c)
-    return best
+        score = (r * c, -abs(math.log(r / c) - aspect))
+        if best is None or score > best[0]:
+            best = (score, (r, c))
+    return best[1]

@@ -88,7 +88,8 @@ class DistBFSEngine(FrontierEngine):
                  expand: str = "auto", expand_fn=None, fold: str = "auto",
                  dedup: str = "scatter", bottomup: str = "auto",
                  exchange="flat", step_factory=None, n_extra: int = 0,
-                 program=None, telemetry: bool = False):
+                 program=None, telemetry: bool = False,
+                 fault_tolerance: bool = False, ckpt_every: int = 1):
         from repro.algos.bfs import BFSLevelsProgram
 
         if program is None:
@@ -101,7 +102,8 @@ class DistBFSEngine(FrontierEngine):
             fold_codec=fold_codec, edge_chunk=edge_chunk,
             max_levels=max_levels, expand=expand, expand_fn=expand_fn,
             fold=fold, dedup=dedup, bottomup=bottomup, exchange=exchange,
-            telemetry=telemetry)
+            telemetry=telemetry, fault_tolerance=fault_tolerance,
+            ckpt_every=ckpt_every)
 
     def topdown_step(self, graph: LocalGraph2D, st, *, i, j):
         """One top-down level (paper Alg. 2 lines 12-18)."""

@@ -1,2 +1,6 @@
 from repro.runtime.fault import RetryPolicy, StepRunner, StragglerWatchdog, \
     FaultInjector
+from repro.runtime.recovery import (DeviceLoss, DeviceLossInjector,
+                                    ElasticCoordinator, RecoveryPlan,
+                                    TraversalCheckpointer, UnrecoverableLoss,
+                                    run_segmented)

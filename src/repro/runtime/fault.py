@@ -13,6 +13,7 @@ recovery logic is unit-testable:
 """
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass
 
@@ -33,9 +34,30 @@ class FaultInjector:
 
 @dataclass
 class RetryPolicy:
+    """Exponential backoff with deterministic, seedable jitter.
+
+    `jitter_s` spreads the attempt delays uniformly over [0, jitter_s) so
+    concurrent serve retries hitting the same execution lock do not
+    stampede in lockstep; the offset is a pure function of
+    (seed, step, attempt), so two runs with one seed sleep identically and
+    distinct seeds (one per worker) de-correlate.
+    """
     max_retries: int = 3
     backoff_s: float = 0.01
     backoff_mult: float = 2.0
+    jitter_s: float = 0.0
+    seed: int = 0
+
+    def delay_for(self, step: int, attempt: int) -> float:
+        """Backoff before retrying `step` after failed attempt `attempt`
+        (0-based): backoff_s * mult^attempt plus the deterministic jitter."""
+        d = self.backoff_s * self.backoff_mult ** attempt
+        if self.jitter_s:
+            # integer mix (no PYTHONHASHSEED dependence), so this is
+            # reproducible across processes
+            mix = (self.seed * 1_000_003 + step) * 1_000_003 + attempt
+            d += self.jitter_s * random.Random(mix).random()
+        return d
 
 
 class StragglerWatchdog:
@@ -88,6 +110,7 @@ class StepRunner:
         self.retries = 0
         self.retries_by: dict = {}      # label -> retries attributed
         self.straggler_by: dict = {}    # label -> straggler flags attributed
+        self.delays: list = []          # backoff actually slept, per retry
 
     def reset_stats(self) -> None:
         """Zero the retry/restore/straggler accounting (watchdog latency
@@ -96,6 +119,7 @@ class StepRunner:
         self.retries = 0
         self.retries_by = {}
         self.straggler_by = {}
+        self.delays = []
         self.watchdog.lat = []
         self.watchdog.flagged = []
 
@@ -117,7 +141,6 @@ class StepRunner:
         infos = []
         for batch in batches:
             t0 = time.perf_counter()
-            delay = self.policy.backoff_s
             for attempt in range(self.policy.max_retries + 1):
                 try:
                     if self.injector is not None:
@@ -135,8 +158,9 @@ class StepRunner:
                                 break
                         raise
                     self._count_retry(labels)
+                    delay = self.policy.delay_for(step, attempt)
+                    self.delays.append(delay)
                     time.sleep(delay)
-                    delay *= self.policy.backoff_mult
             else:
                 pass
             seconds = time.perf_counter() - t0

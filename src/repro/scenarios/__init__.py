@@ -1,0 +1,2 @@
+from repro.scenarios.base import DrillResult, Scenario, run_drill
+from repro.scenarios.fault_drills import run_matrix, standard_matrix

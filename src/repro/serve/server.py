@@ -58,6 +58,11 @@ class ServeConfig:
     event_log_path: optional JSONL path the server's `repro.obs.EventLog`
                 appends batch / reject / retry / straggler / failure events
                 to (None = in-memory ring only).
+    recovery_dir: optional directory for mid-traversal checkpoints of
+                fault-tolerant batches (requests whose BFSConfig has
+                fault_tolerance=True); a batch interrupted by device loss
+                then DRAINS through recovery -- resumed from its last
+                completed level -- instead of failing its requests.
     """
     max_batch: int = 8
     window_s: float = 0.01
@@ -65,6 +70,7 @@ class ServeConfig:
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     straggler_factor: float = 3.0
     event_log_path: "str | None" = None
+    recovery_dir: "str | None" = None
 
 
 class _Outstanding:
@@ -113,6 +119,14 @@ class _GraphWorker:
         self._straggler_c = self.metrics.counter(
             "fault_straggler_total", "Straggler-flagged batch executions",
             labelnames=("graph", "tenant"))
+        self._recovery_resume_c = self.metrics.counter(
+            "recovery_resumes_total",
+            "Batches re-driven through mid-traversal recovery",
+            labelnames=("graph",))
+        self._recovery_drain_c = self.metrics.counter(
+            "recovery_drained_total",
+            "Requests drained through recovery instead of failing",
+            labelnames=("graph",))
         self.runner = StepRunner(
             self._step, policy=cfg.retry,
             watchdog=StragglerWatchdog(factor=cfg.straggler_factor),
@@ -176,15 +190,44 @@ class _GraphWorker:
     def _step(self, state, batch):
         """StepRunner step fn: execute ONE coalesced batch.  Raises on any
         fault (injected or real); StepRunner owns retry/backoff."""
+        from repro.runtime.recovery import DeviceLossInjector
         key, entries = batch
         # per-request fault hook: a FaultInjector keyed by this request's
-        # attempt counter (see repro.serve.protocol.QueryRequest.injector)
+        # attempt counter (see repro.serve.protocol.QueryRequest.injector).
+        # A DeviceLossInjector rides PAST this hook into the segmented
+        # level loop instead -- it fires mid-traversal, not at admission.
         for e in entries:
-            if e.req.injector is not None:
+            if e.req.injector is not None and \
+                    not isinstance(e.req.injector, DeviceLossInjector):
                 attempt = e.req.attempts
                 e.req.attempts += 1
                 e.req.injector.check(attempt)
         return state, self._execute(key, entries)
+
+    def _recovery_plan(self, key, entries):
+        """RecoveryPlan for one fault-tolerant batch: the first request's
+        DeviceLossInjector (drills ride on requests like FaultInjectors do)
+        plus, when the server has a recovery_dir, a TraversalCheckpointer
+        keyed by the batch identity -- so a re-dispatch of the SAME batch
+        resumes mid-flight from its last completed level."""
+        import hashlib
+        import os
+        from repro.runtime.recovery import (DeviceLossInjector, RecoveryPlan,
+                                            TraversalCheckpointer)
+        injector = None
+        for e in entries:
+            if isinstance(e.req.injector, DeviceLossInjector):
+                injector = e.req.injector
+                break
+        checkpointer = None
+        if self.cfg.recovery_dir is not None:
+            args = ",".join(str(e.req.arg) for e in entries)
+            query_key = f"{self.name}:{key.program}:{args}"
+            sub = hashlib.sha1(query_key.encode()).hexdigest()[:16]
+            checkpointer = TraversalCheckpointer(
+                os.path.join(self.cfg.recovery_dir, sub), query_key)
+        return RecoveryPlan(checkpointer=checkpointer, injector=injector,
+                            policy=self.cfg.retry)
 
     def _execute(self, key, entries):
         """Run the batch through the session layer; returns per-slot
@@ -197,12 +240,15 @@ class _GraphWorker:
         """
         sess = self.session_for(key.config)
         program = key.program
+        recovery = self._recovery_plan(key, entries) \
+            if key.config.fault_tolerance else None
         if program == "bfs":
             roots = [int(e.req.arg) for e in entries]
             B = pad_class(len(roots), key.cap)
             padded = roots + [roots[0]] * (B - len(roots))
             with jax.profiler.TraceAnnotation("serve/bfs"):
-                out = sess.bfs(np.asarray(padded, np.int32))
+                out = sess.bfs(np.asarray(padded, np.int32),
+                               recovery=recovery)
                 jax.block_until_ready(out.level)
             values = [
                 BFSOutput(level=out.level[s], pred=out.pred[s],
@@ -220,7 +266,8 @@ class _GraphWorker:
             B = pad_class(len(roots), key.cap)
             padded = roots + [roots[0]] * (B - len(roots))
             with jax.profiler.TraceAnnotation("serve/sssp"):
-                out = sess.sssp(np.asarray(padded, np.int32))
+                out = sess.sssp(np.asarray(padded, np.int32),
+                                recovery=recovery)
                 jax.block_until_ready(out.dist)
             values = [
                 SSSPOutput(dist=out.dist[s], n_iters=out.n_iters[s],
@@ -235,7 +282,7 @@ class _GraphWorker:
             # argument-free: ONE execution, every caller gets the result;
             # the whole search's edges are accounted to the first caller
             with jax.profiler.TraceAnnotation("serve/cc"):
-                out = sess.connected_components()
+                out = sess.connected_components(recovery=recovery)
                 jax.block_until_ready(out.labels)
             values = [out] * len(entries)
             edges = [out.edges_scanned] + [0] * (len(entries) - 1)
@@ -244,7 +291,8 @@ class _GraphWorker:
             assert len(entries) == 1, "multi_bfs requests never coalesce"
             req = entries[0].req
             with jax.profiler.TraceAnnotation("serve/multi_bfs"):
-                out = sess.multi_bfs(np.asarray(req.arg, np.int32), k=req.k)
+                out = sess.multi_bfs(np.asarray(req.arg, np.int32), k=req.k,
+                                     recovery=recovery)
                 jax.block_until_ready(out.level)
             return [out], [out.edges_scanned], 1
         raise ValueError(f"unknown program {program!r}")
@@ -260,6 +308,7 @@ class _GraphWorker:
             self._serve_batch_locked(key, entries, t_dispatch)
 
     def _serve_batch_locked(self, key, entries, t_dispatch):
+        from repro.runtime.recovery import DeviceLoss, UnrecoverableLoss
         tenants = tuple(sorted({e.req.tenant for e in entries}))
         t_start = time.perf_counter()
         try:
@@ -267,11 +316,31 @@ class _GraphWorker:
                                        start_step=self._step_no,
                                        labels=tenants)
             values, edges, padded = infos[0]
+        except (DeviceLoss, UnrecoverableLoss) as exc:
+            # device loss escaped the segmented loop's own retries: drain
+            # the in-flight requests through recovery -- ONE re-dispatch
+            # resumes the traversal from its last checkpointed level (the
+            # injected loss schedule has spent its budget by now), so no
+            # query is lost to the failure
+            self._step_no += 1
+            self._recovery_resume_c.labels(graph=self.name).inc()
+            if self.events is not None:
+                self.events.emit("recovery_resume", graph=self.name,
+                                 program=key.program, tenants=list(tenants),
+                                 error=f"{type(exc).__name__}: {exc}")
+            try:
+                _, (values, edges, padded) = self._step(None, (key, entries))
+            except Exception:
+                self._isolate(key, entries, t_dispatch)
+                return
+            for _ in entries:
+                self._recovery_drain_c.labels(graph=self.name).inc()
         except Exception:
             self._step_no += 1
             self._isolate(key, entries, t_dispatch)
             return
-        self._step_no += 1
+        else:
+            self._step_no += 1
         t_exec_end = time.perf_counter()
         exec_s = t_exec_end - t_start
         self.acct.record_batch(BatchRecord(
@@ -560,7 +629,13 @@ class GraphServer:
             n: {"retries": w.runner.retries, "restores": w.runner.restores,
                 "straggler_flagged": len(w.runner.watchdog.flagged),
                 "retries_by_tenant": dict(w.runner.retries_by),
-                "straggler_by_tenant": dict(w.runner.straggler_by)}
+                "straggler_by_tenant": dict(w.runner.straggler_by),
+                # the jittered backoff actually slept (bounded tail)
+                "delays": list(w.runner.delays)[-256:],
+                "recovery_resumes": w._recovery_resume_c.labels(
+                    graph=n).value,
+                "recovery_drained": w._recovery_drain_c.labels(
+                    graph=n).value}
             for n, w in self._workers.items()}
         snap["trace_counts"] = {
             n: {str(key): eng.trace_count

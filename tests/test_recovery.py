@@ -1,0 +1,210 @@
+"""Mid-traversal fault tolerance (DESIGN.md sec. 15), single-device half.
+
+  * segmented-loop bit-identity: a fault-tolerant session (checkpoint-
+    bounded segments of K levels) returns outputs bit-identical to the
+    single-while_loop program for K in {1, 2, 5}, for BFS / CC / SSSP
+    across fold codecs (preds / labels / dists / counters included);
+  * transient device loss absorbed by the segment retry (jittered delays
+    recorded), persistent loss escalated to UnrecoverableLoss carrying a
+    snapshot that resumes bit-identically in a fresh session;
+  * TraversalCheckpointer persistence + query-key mismatch guard;
+  * DeviceLossInjector crossing semantics;
+  * the no-retrace contract: `fault_tolerance=False` builds NO segmented
+    programs and its trace counts are untouched by the feature.
+
+Multi-device shrink-and-resume runs in tests/dist/run_elastic_bfs.py and
+the drill matrix (benchmarks/fault_drill.py).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import BFSConfig, DistGraph
+from repro.graphgen import rmat_edges
+from repro.runtime.fault import RetryPolicy
+from repro.runtime.recovery import (DeviceLoss, DeviceLossInjector,
+                                    RecoveryPlan, TraversalCheckpointer,
+                                    UnrecoverableLoss)
+
+SCALE, EF = 7, 8
+N = 1 << SCALE
+
+
+@pytest.fixture(scope="module")
+def gdata():
+    edges = np.asarray(rmat_edges(jax.random.key(3), SCALE, EF))
+    w = ((np.abs(edges[0] * 31 + edges[1]) % 254) + 1).astype(np.uint8)
+    deg = np.bincount(edges[0], minlength=N)
+    roots = np.random.default_rng(0).choice(np.flatnonzero(deg > 0), 4,
+                                            replace=False).astype(np.int32)
+    return edges, w, roots
+
+
+def _session(edges, w, codec="list", ft=False, K=1):
+    cfg = BFSConfig(grid=(1, 1), fold_codec=codec, edge_chunk=512,
+                    fault_tolerance=ft, ckpt_every=K)
+    return DistGraph.from_edges(edges, cfg, n=N, weights=w).session()
+
+
+def _query(sess, program, roots, **kw):
+    if program == "bfs":
+        return sess.bfs(roots[:2], **kw)
+    if program == "sssp":
+        return sess.sssp(roots[:2], **kw)
+    return sess.connected_components(**kw)
+
+
+def _assert_same(program, out, base):
+    if program == "bfs":
+        assert (np.asarray(out.level) == np.asarray(base.level)).all()
+        assert (np.asarray(out.pred) == np.asarray(base.pred)).all()
+        assert (np.asarray(out.n_levels) == np.asarray(base.n_levels)).all()
+        assert tuple(out.edges_scanned) == tuple(base.edges_scanned)
+    elif program == "sssp":
+        assert (np.asarray(out.dist) == np.asarray(base.dist)).all()
+        assert tuple(out.edges_scanned) == tuple(base.edges_scanned)
+    else:
+        assert (np.asarray(out.labels) == np.asarray(base.labels)).all()
+        assert int(out.n_iters) == int(base.n_iters)
+        assert out.edges_scanned == base.edges_scanned
+
+
+@pytest.mark.parametrize("program,codec", [
+    ("bfs", "list"), ("bfs", "bitmap"),
+    ("cc", "list"), ("cc", "bitmap"),
+    ("sssp", "list"), ("sssp", "bitmap"),
+])
+def test_segmented_bit_identity(gdata, program, codec):
+    """FT session output == unsegmented output for every checkpoint
+    cadence: segment boundaries add no arithmetic."""
+    edges, w, roots = gdata
+    base = _query(_session(edges, w, codec=codec), program, roots)
+    for K in (1, 2, 5):
+        out = _query(_session(edges, w, codec=codec, ft=True, K=K),
+                     program, roots)
+        _assert_same(program, out, base)
+
+
+def test_multi_bfs_segmented(gdata):
+    edges, w, roots = gdata
+    base = _session(edges, w).multi_bfs(roots)
+    out = _session(edges, w, ft=True, K=2).multi_bfs(roots)
+    assert (np.asarray(out.level) == np.asarray(base.level)).all()
+    assert (np.asarray(out.src) == np.asarray(base.src)).all()
+    assert out.edges_scanned == base.edges_scanned
+
+
+def test_transient_loss_absorbed_by_retry(gdata):
+    """One injected loss crossing level 2: the segment retries, the query
+    completes bit-identically, and the jittered backoff is recorded."""
+    edges, w, roots = gdata
+    base = _query(_session(edges, w), "bfs", roots)
+    plan = RecoveryPlan(
+        injector=DeviceLossInjector(2, transient=True),
+        policy=RetryPolicy(max_retries=2, backoff_s=1e-4, jitter_s=1e-4,
+                           seed=7))
+    out = _query(_session(edges, w, ft=True), "bfs", roots, recovery=plan)
+    _assert_same("bfs", out, base)
+    assert plan.stats["retries"] == 1
+    assert len(plan.stats["delays"]) == 1
+    assert 1e-4 <= plan.stats["delays"][0] < 2e-4  # backoff + jitter in [0,1)
+    assert plan.stats["resumes"] == 0
+
+
+def test_persistent_loss_snapshot_resumes_bit_identical(gdata):
+    """Retries exhaust -> UnrecoverableLoss carries the pre-failure carry;
+    importing it into a FRESH session resumes to bit-identical output
+    (preds included -- same grid)."""
+    edges, w, roots = gdata
+    base = _query(_session(edges, w), "bfs", roots)
+    policy = RetryPolicy(max_retries=1, backoff_s=1e-5)
+    plan = RecoveryPlan(injector=DeviceLossInjector(2, fires=2),
+                        policy=policy)
+    with pytest.raises(UnrecoverableLoss) as ei:
+        _query(_session(edges, w, ft=True), "bfs", roots, recovery=plan)
+    assert ei.value.level == 1   # K=1 segments: failed crossing into lvl 2
+    assert plan.stats["retries"] == 1
+
+    plan2 = RecoveryPlan(resume=ei.value.snapshot, policy=policy)
+    out = _query(_session(edges, w, ft=True), "bfs", roots, recovery=plan2)
+    _assert_same("bfs", out, base)
+    assert plan2.stats["resumes"] == 1
+    assert plan2.stats["resumed_from_level"] == ei.value.level
+    assert plan2.stats["time_to_first_resumed_level_s"] > 0
+
+
+def test_checkpointer_resume_and_key_guard(gdata, tmp_path):
+    """Disk checkpoints written every segment; a fresh plan over the same
+    directory resumes past an exhausted injector; a DIFFERENT query key
+    over the same directory refuses to load."""
+    edges, w, roots = gdata
+    base = _query(_session(edges, w), "sssp", roots)
+    policy = RetryPolicy(max_retries=0, backoff_s=0.0)
+    plan = RecoveryPlan(
+        checkpointer=TraversalCheckpointer(str(tmp_path), "q1"),
+        injector=DeviceLossInjector(2, fires=1), policy=policy)
+    with pytest.raises(UnrecoverableLoss):
+        _query(_session(edges, w, ft=True), "sssp", roots, recovery=plan)
+
+    plan2 = RecoveryPlan(
+        checkpointer=TraversalCheckpointer(str(tmp_path), "q1"),
+        policy=policy)
+    out = _query(_session(edges, w, ft=True), "sssp", roots, recovery=plan2)
+    _assert_same("sssp", out, base)
+    assert plan2.stats["resumes"] == 1
+
+    with pytest.raises(ValueError, match="query_key"):
+        TraversalCheckpointer(str(tmp_path), "OTHER").load()
+
+
+def test_injector_crossing_semantics():
+    inj = DeviceLossInjector(3, transient=True)
+    inj.check(0, 1)                      # below: quiet
+    inj.check(3, 4)                      # already past: quiet
+    with pytest.raises(DeviceLoss):
+        inj.check(2, 3)                  # crossing fires
+    inj.check(2, 3)                      # transient: budget spent
+    assert inj.count == 1
+
+    unbounded = DeviceLossInjector(1, devices=2)
+    for _ in range(4):                   # fires=None: every crossing
+        with pytest.raises(DeviceLoss) as ei:
+            unbounded.check(0, 5)
+        assert ei.value.devices == 2
+    assert unbounded.count == 4
+
+    with pytest.raises(ValueError, match="phase"):
+        DeviceLossInjector(1, phase="warp")
+
+
+def test_recovery_kwarg_requires_ft_session(gdata):
+    edges, w, roots = gdata
+    sess = _session(edges, w)
+    with pytest.raises(ValueError, match="fault-tolerant"):
+        sess.bfs(int(roots[0]), recovery=RecoveryPlan())
+
+
+def test_ft_off_builds_nothing_and_never_retraces(gdata):
+    """fault_tolerance=False is exactly the existing engine: no segmented
+    programs exist, and repeat sweeps stay on the AOT cache."""
+    edges, w, roots = gdata
+    sess = _session(edges, w)
+    assert sess.engine._ft_progs == {}
+    out1 = sess.bfs(roots[:2])
+    traces = sess.engine.trace_count
+    out2 = sess.bfs(roots[:2])
+    assert sess.engine.trace_count == traces, "repeat sweep retraced"
+    assert sess.engine._ft_progs == {}, "FT programs built without opt-in"
+    _assert_same("bfs", out2, out1)
+
+
+def test_ft_engine_trace_discipline(gdata):
+    """The segmented engine traces its three programs once; repeat queries
+    (and a later resume) hit the cache."""
+    edges, w, roots = gdata
+    sess = _session(edges, w, ft=True, K=2)
+    out1 = sess.bfs(roots[:2])
+    traces = sess.engine.trace_count
+    out2 = sess.bfs(roots[:2])
+    assert sess.engine.trace_count == traces, "repeat FT sweep retraced"
+    _assert_same("bfs", out2, out1)

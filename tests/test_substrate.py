@@ -4,6 +4,9 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import (adamw_init, adamw_update, AdamWConfig,
                          topk_compress_init, topk_compress, int8_compress,
@@ -127,6 +130,86 @@ def test_shrink_grid():
     assert shrink_grid(4, 4, 1) in [(3, 5), (5, 3)]
     r, c = shrink_grid(16, 16, 3)
     assert r * c <= 253
+
+
+def test_shrink_grid_prefers_original_aspect():
+    # wide 2x4 losing 2 devices: 2x3 and 3x2 both use all 6 survivors; the
+    # aspect tie-break keeps the wide shape
+    assert shrink_grid(2, 4, 2) == (2, 3)
+    assert shrink_grid(4, 2, 2) == (3, 2)
+    # square 2x2 losing 1: 1x3 vs 3x1 equidistant -> lower row count
+    assert shrink_grid(2, 2, 1) == (1, 3)
+    with pytest.raises(ValueError):
+        shrink_grid(1, 2, 2)
+
+
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 64))
+@settings(max_examples=200, deadline=None)
+def test_shrink_grid_maximal_and_valid(R, C, failed):
+    survivors = R * C - failed
+    if survivors < 1:
+        with pytest.raises(ValueError):
+            shrink_grid(R, C, failed)
+        return
+    r, c = shrink_grid(R, C, failed)
+    assert r >= 1 and c >= 1 and r * c <= survivors
+    # maximality: no factor pair fits more devices
+    best = max(rr * (survivors // rr) for rr in range(1, survivors + 1))
+    assert r * c == best
+
+
+def test_retry_policy_jitter_deterministic():
+    p = RetryPolicy(backoff_s=0.01, backoff_mult=2.0, jitter_s=0.005, seed=3)
+    d = [p.delay_for(step=4, attempt=a) for a in range(3)]
+    # pure function of (seed, step, attempt): replays identically
+    assert d == [p.delay_for(step=4, attempt=a) for a in range(3)]
+    for a, di in enumerate(d):
+        base = 0.01 * 2.0 ** a
+        assert base <= di < base + 0.005
+    # a different seed de-correlates (workers must not stampede in lockstep)
+    q = RetryPolicy(backoff_s=0.01, backoff_mult=2.0, jitter_s=0.005, seed=4)
+    assert [q.delay_for(4, a) for a in range(3)] != d
+    # jitter off: exact exponential backoff
+    assert RetryPolicy(backoff_s=0.01, jitter_s=0.0).delay_for(0, 2) \
+        == pytest.approx(0.04)
+
+
+def test_step_runner_records_delays():
+    def step(state, batch):
+        return state + 1, {}
+
+    inj = FaultInjector({1: RuntimeError, 2: RuntimeError})
+    policy = RetryPolicy(max_retries=2, backoff_s=1e-4, jitter_s=1e-4,
+                         seed=11)
+    runner = StepRunner(step, policy=policy, injector=inj)
+    runner.run(0, range(4))
+    assert runner.delays == [policy.delay_for(1, 0), policy.delay_for(2, 0)]
+    runner.reset_stats()
+    assert runner.delays == []
+
+
+def test_checkpoint_async_error_reraised(tmp_path):
+    """A failed background write surfaces on the next wait()/save() instead
+    of silently dropping the checkpoint."""
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    # pre-create the staging path as a FILE: the writer thread's makedirs
+    # blows up in the background
+    open(os.path.join(str(tmp_path), "step_5.tmp"), "w").close()
+    cm.save(5, {"a": jnp.zeros(4)})
+    with pytest.raises(FileExistsError):
+        cm.wait()
+    # the error is consumed; the manager keeps working afterwards
+    cm.save(6, {"a": jnp.zeros(4)})
+    cm.wait()
+    assert cm.steps() == [6]
+
+
+def test_checkpoint_async_error_reraised_on_next_save(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    open(os.path.join(str(tmp_path), "step_1.tmp"), "w").close()
+    cm.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(FileExistsError):
+        cm.save(2, {"a": jnp.zeros(2)})
 
 
 def test_step_runner_retry_and_straggler():
